@@ -1,0 +1,334 @@
+"""Analytic per-(arch x shape x mesh) cost model — the roofline's primary
+source.
+
+WHY ANALYTIC: XLA's HloCostAnalysis visits each while-loop body ONCE, so any
+scanned program (layer scan, microbatch scan, blockwise-attention scan)
+under-reports FLOPs/bytes by the trip counts (verified empirically: a
+scan(8x matmul) reports 1/8 the unrolled flops). We therefore derive the
+roofline terms analytically from the configs — the same napkin math the
+perf methodology requires — and use the compiled HLO for what it IS
+reliable for: collective placement/shape (per-op, outside loops x trip
+multipliers we know statically) and memory_analysis. tests/test_costmodel.py
+validates the analytic flops against XLA cost_analysis on scan-free
+configurations.
+
+Conventions: "fwd unit" = one forward pass's matmul work = 2 * N_active *
+tokens FLOPs (+ attention quadratic term). Baseline training policy
+(dry-run): exact-DCCO microbatching (stats fwd + grad fwd) + layer-scan
+remat + per-view checkpoint => 6 fwd units per step vs the un-rematted
+ideal of 3 — the MODEL_FLOPS/HLO ratio surfaces exactly this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.launch.inputs import INPUT_SHAPES, InputShape, arch_variant_for_shape
+from repro.launch.mesh import HardwareSpec as HW
+
+BF16 = 2
+F32 = 4
+
+
+# ---------------------------------------------------------------- params ---
+
+def param_counts(cfg: ModelConfig, de_proj=(1024, 1024, 1024)) -> Dict[str, float]:
+    """Analytic parameter counts: total, active (MoE top-k), per-block."""
+    d = cfg.d_model
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    per_block: Dict[str, float] = {}
+
+    def attn_params():
+        if cfg.use_mla:
+            r, dr, dn, dv = (cfg.kv_lora_rank, cfg.qk_rope_head_dim,
+                             cfg.qk_nope_head_dim, cfg.v_head_dim)
+            return (d * h * (dn + dr) + d * (r + dr) + r * h * dn
+                    + r * h * dv + h * dv * d)
+        return d * h * dh + 2 * d * kvh * dh + h * dh * d
+
+    def ffn_params(dff):
+        return 3 * d * dff
+
+    moe_total = moe_active = 0.0
+    if cfg.moe is not None and cfg.moe.num_experts > 0:
+        e, k_, dffe, sh = (cfg.moe.num_experts, cfg.moe.top_k, cfg.moe.d_ff,
+                           cfg.moe.num_shared_experts)
+        moe_total = e * 3 * d * dffe + sh * 3 * d * dffe + d * e
+        moe_active = k_ * 3 * d * dffe + sh * 3 * d * dffe + d * e
+
+    def block_params(kind, active=False):
+        if kind == "attn":
+            if cfg.moe is not None and cfg.moe.num_experts > 0:
+                return attn_params() + (moe_active if active else moe_total)
+            return attn_params() + ffn_params(cfg.d_ff or 4 * d)
+        if kind == "mamba2":
+            di = cfg.ssm.expand * d
+            heads = di // cfg.ssm.head_dim
+            n = cfg.ssm.state
+            conv_dim = di + 2 * n
+            return (d * (2 * di + 2 * n + heads)
+                    + cfg.ssm.conv_width * conv_dim + di * d + di)
+        if kind == "mlstm":
+            di = int(d * cfg.xlstm.proj_factor_mlstm)
+            di -= di % (cfg.num_heads * 2)
+            return d * 2 * di + 3 * di * di + 2 * di * h + di * d
+        if kind == "slstm":
+            dff = int(d * cfg.xlstm.proj_factor_slstm)
+            dh_s = d // h
+            return 4 * d * d + 4 * h * dh_s * dh_s + d * 2 * dff + dff * d
+        raise ValueError(kind)
+
+    n_super = cfg.num_superblocks
+    stack_total = n_super * sum(block_params(k) for k in cfg.block_pattern)
+    stack_active = n_super * sum(block_params(k, active=True)
+                                 for k in cfg.block_pattern)
+    prologue = cfg.num_prologue * (attn_params() + ffn_params(
+        cfg.moe.dense_d_ff if cfg.moe else cfg.d_ff))
+    embed = cfg.vocab_size * d
+    vis = (cfg.vis_dim * d + d * d) if cfg.modality == "vision_text" else 0
+    proj = 0
+    dims = (d,) + tuple(de_proj)
+    for i in range(len(dims) - 1):
+        proj += dims[i] * dims[i + 1] + dims[i + 1]
+    return {
+        "total": stack_total + prologue + embed + vis,
+        "active": stack_active + prologue + embed + vis,
+        "proj_head": proj,
+        "embed": embed,
+    }
+
+
+# ----------------------------------------------------------- mixer flops ---
+
+def _attn_quad_flops(cfg, batch, sq, skv):
+    """QK^T + PV flops for one layer (full blocks — the blockwise scan does
+    not skip fully-masked causal blocks; that's a §Perf item)."""
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    if cfg.use_mla:
+        dh = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    window = cfg.sliding_window
+    eff_skv = min(skv, window) if window > 0 and sq == 1 else skv
+    return 4.0 * batch * h * sq * eff_skv * dh
+
+
+def _recurrent_extra_flops(cfg, kind, batch, s):
+    """Intra-chunk quadratic terms for SSD / mLSTM (per layer)."""
+    if kind == "mamba2" and cfg.ssm is None:
+        return 0.0
+    if kind in ("mlstm", "slstm") and cfg.xlstm is None:
+        return 0.0
+    if kind == "mamba2":
+        di = cfg.ssm.expand * cfg.d_model
+        heads = di // cfg.ssm.head_dim
+        l = min(cfg.ssm.chunk, s)
+        n = cfg.ssm.state
+        # cb (l x l x n) + y_intra + state terms, per chunk
+        return 2.0 * batch * s * l * (n + heads * cfg.ssm.head_dim) * 2
+    if kind == "mlstm":
+        di = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+        di -= di % (cfg.num_heads * 2)
+        dh = di // cfg.num_heads
+        l = min(cfg.xlstm.chunk, s)
+        return 4.0 * batch * cfg.num_heads * s * l * dh
+    return 0.0
+
+
+def _attn_layers(cfg):
+    n_attn = cfg.num_superblocks * sum(1 for k in cfg.block_pattern if k == "attn")
+    return n_attn + cfg.num_prologue
+
+
+def _recurrent_layers(cfg, kind):
+    return cfg.num_superblocks * sum(1 for k in cfg.block_pattern if k == kind)
+
+
+# ------------------------------------------------------------ step costs ---
+
+@dataclasses.dataclass
+class Cost:
+    flops_dev: float
+    hbm_bytes_dev: float
+    coll_bytes_dev: float        # ring-model wire bytes on the slowest link
+    notes: Dict[str, float]
+
+    def roofline(self):
+        t_c = self.flops_dev / HW.PEAK_FLOPS_BF16
+        t_m = self.hbm_bytes_dev / HW.HBM_BW
+        t_x = self.coll_bytes_dev / HW.ICI_BW
+        dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+                  key=lambda kv: kv[1])[0]
+        return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+                "dominant": dom,
+                "step_s_lower_bound": max(t_c, t_m, t_x)}
+
+
+def _mesh_sizes(multi_pod: bool):
+    return (2 if multi_pod else 1, 16, 16)   # (pod, data, model)
+
+
+def _params_dev_bytes(cfg, counts, model_par=16):
+    """Approx per-device param bytes: sharded fraction / model_par +
+    replicated remainder. We treat attention+FFN+experts+embed as sharded
+    (divisibility caveats ignored at this granularity), SSM/xLSTM mixers
+    replicated per the baseline policy."""
+    total = counts["total"] + counts["proj_head"]
+    rec = sum(_recurrent_layers(cfg, k) for k in ("mamba2", "mlstm", "slstm"))
+    rec_frac = 0.0
+    if rec:
+        per = counts["total"] - counts["embed"]
+        rec_frac = min(0.9, rec / max(cfg.num_layers, 1))
+    sharded = (total * (1 - rec_frac)) / model_par
+    replicated = total * rec_frac
+    return (sharded + replicated) * BF16
+
+
+def train_cost(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
+               de_proj=(1024, 1024, 1024), num_microbatches: int = 16,
+               fwd_units: float = 6.0) -> Cost:
+    """Baseline DCCO train step (two views, exact microbatching, remat,
+    per-view checkpoint -> fwd_units = 6; see module docstring)."""
+    pod, dp, mp = _mesh_sizes(multi_pod)
+    chips = pod * dp * mp
+    counts = param_counts(cfg, de_proj)
+    b_local = shape.global_batch / (pod * dp)      # sequences per device
+    views = 2
+    s = shape.seq_len
+
+    # matmul flops per fwd unit (weights are model-sharded -> per-device
+    # matmul flops = 2 * N_active/mp * tokens_local)
+    tokens_local = b_local * s * views
+    mm = 2.0 * (counts["active"] - counts["embed"]) / mp * tokens_local
+    d_out = de_proj[-1]
+    proj = 2.0 * counts["proj_head"] * tokens_local / s  # proj on pooled (per seq)
+    stats = 2.0 * b_local * views * d_out * d_out  # cross-moment matmul
+    attn = _attn_layers(cfg) * _attn_quad_flops(cfg, b_local * views, s, s) / mp
+    rec = sum(_recurrent_layers(cfg, k) *
+              _recurrent_extra_flops(cfg, k, b_local * views, s)
+              for k in ("mamba2", "mlstm", "slstm"))  # replicated mixers
+    flops = fwd_units * (mm + attn + rec) + 2 * (proj + stats)
+
+    # HBM: weights re-read every microbatch x pass + activation traffic
+    pbytes = _params_dev_bytes(cfg, counts, mp)
+    weight_traffic = fwd_units * num_microbatches * pbytes
+    act_traffic = fwd_units * tokens_local * cfg.d_model * cfg.num_layers \
+        * 8 * BF16  # ~8 tensor touches per layer
+    opt_traffic = 3 * (counts["total"] + counts["proj_head"]) * F32 / (chips / mp)
+    hbm = weight_traffic + act_traffic + opt_traffic
+
+    # collectives (wire bytes, ring model):
+    n_total = counts["total"] + counts["proj_head"]
+    zero_rs = 2.0 * n_total * F32 / chips * 2      # grad reduce-scatter (f32)
+    zero_ag = n_total * BF16 / chips * 2           # param all-gather
+    # per-layer TP all-reduces (attn-out + ffn-out) per pass, ring factor 2
+    tp_ar = (2 * cfg.num_layers * fwd_units * b_local * views * s
+             * cfg.d_model * BF16) * 2
+    stats_ar = 2 * num_microbatches * (d_out * d_out + 4 * d_out) * F32 * 2
+    a2a = 0.0
+    if cfg.moe is not None and cfg.moe.num_experts > 0:
+        a2a = (2 * fwd_units * (cfg.num_layers - cfg.num_prologue)
+               * b_local * views * s * cfg.moe.top_k * cfg.d_model * BF16 / mp)
+    coll = zero_rs + zero_ag + tp_ar + stats_ar + a2a
+    return Cost(flops, hbm, coll, {
+        "mm_flops": fwd_units * mm, "attn_flops": fwd_units * attn,
+        "weight_traffic": weight_traffic, "act_traffic": act_traffic,
+        "zero_bytes": zero_rs + zero_ag, "tp_ar_bytes": tp_ar,
+        "stats_ar_bytes": stats_ar, "a2a_bytes": a2a,
+        "model_flops_6nd": 6.0 * counts["active"] * shape.global_batch * s
+        * views / chips,
+    })
+
+
+def prefill_cost(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool) -> Cost:
+    pod, dp, mp = _mesh_sizes(multi_pod)
+    chips = pod * dp * mp
+    counts = param_counts(cfg)
+    b_local = shape.global_batch / (pod * dp)
+    s = shape.seq_len
+    mm = 2.0 * (counts["active"] - counts["embed"]) / mp * b_local * s
+    lm_head = 2.0 * b_local * cfg.d_model * cfg.vocab_size / mp
+    attn = _attn_layers(cfg) * _attn_quad_flops(cfg, b_local, s, s) / mp
+    rec = sum(_recurrent_layers(cfg, k) * _recurrent_extra_flops(cfg, k, b_local, s)
+              for k in ("mamba2", "mlstm", "slstm"))
+    flops = mm + attn + rec + lm_head
+    pbytes = _params_dev_bytes(cfg, counts, mp)
+    act = b_local * s * cfg.d_model * cfg.num_layers * 8 * BF16
+    cache_w = _cache_bytes(cfg, shape, dp * pod, mp)
+    hbm = pbytes + act + cache_w
+    tp_ar = 2 * cfg.num_layers * b_local * s * cfg.d_model * BF16 * 2
+    a2a = 0.0
+    if cfg.moe is not None and cfg.moe.num_experts > 0:
+        a2a = (2 * (cfg.num_layers - cfg.num_prologue) * b_local * s
+               * cfg.moe.top_k * cfg.d_model * BF16 / mp)
+    return Cost(flops, hbm, tp_ar + a2a, {
+        "cache_write_bytes": cache_w,
+        "model_flops_6nd": 2.0 * counts["active"] * shape.global_batch * s / chips})
+
+
+def _cache_bytes(cfg, shape, dp, mp):
+    """Per-device decode-state bytes."""
+    s = shape.seq_len
+    b = shape.global_batch
+    w = min(s, cfg.sliding_window) if cfg.sliding_window > 0 else s
+    per_tok = 0.0
+    n_attn = _attn_layers(cfg)
+    if cfg.use_mla:
+        per_tok = n_attn * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * BF16
+    elif n_attn:
+        per_tok = n_attn * 2 * cfg.num_kv_heads * cfg.resolved_head_dim * BF16
+    kv = b * w * per_tok
+    state = 0.0
+    if cfg.ssm is not None:
+        di = cfg.ssm.expand * cfg.d_model
+        heads = di // cfg.ssm.head_dim
+        n_m = _recurrent_layers(cfg, "mamba2")
+        state += n_m * b * (heads * cfg.ssm.state * cfg.ssm.head_dim * F32
+                            + (cfg.ssm.conv_width - 1) * (di + 2 * cfg.ssm.state) * BF16)
+    if cfg.xlstm is not None:
+        di = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+        di -= di % (cfg.num_heads * 2)
+        dh = di // cfg.num_heads
+        state += _recurrent_layers(cfg, "mlstm") * b * cfg.num_heads \
+            * (dh * dh + dh + 1) * F32
+        state += _recurrent_layers(cfg, "slstm") * b * 4 * cfg.d_model * F32
+    shard = dp * mp if b == 1 or b >= dp else dp  # seq and/or batch sharding
+    return (kv + state) / shard
+
+
+def decode_cost(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool) -> Cost:
+    pod, dp, mp = _mesh_sizes(multi_pod)
+    chips = pod * dp * mp
+    counts = param_counts(cfg)
+    b = shape.global_batch
+    b_local = max(b / (pod * dp), b / chips if b == 1 else 1)
+    if b == 1:
+        b_local = 1.0  # replicated single sequence
+    mm = 2.0 * (counts["active"] - counts["embed"]) / mp * b_local
+    lm_head = 2.0 * b_local * cfg.d_model * cfg.vocab_size / mp
+    s_ctx = shape.seq_len
+    attn = _attn_layers(cfg) * _attn_quad_flops(cfg, b_local, 1, s_ctx) / \
+        (mp if b > 1 else dp * mp)
+    flops = mm + attn + lm_head
+    pbytes = _params_dev_bytes(cfg, counts, mp)
+    cache = _cache_bytes(cfg, shape, dp * pod, mp)
+    hbm = pbytes + 2 * cache + b_local * cfg.d_model * cfg.num_layers * 8 * BF16
+    tp_ar = 2 * cfg.num_layers * b_local * cfg.d_model * BF16 * 2
+    a2a = 0.0
+    if cfg.moe is not None and cfg.moe.num_experts > 0:
+        a2a = (2 * (cfg.num_layers - cfg.num_prologue) * b_local
+               * cfg.moe.top_k * cfg.d_model * BF16 / mp)
+    return Cost(flops, hbm, tp_ar + a2a, {
+        "cache_bytes": cache, "params_bytes": pbytes,
+        "model_flops_6nd": 2.0 * counts["active"] * b / chips})
+
+
+def shape_cost(cfg: ModelConfig, shape_name: str, *, multi_pod: bool,
+               de_proj=(1024, 1024, 1024)) -> Cost:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = arch_variant_for_shape(cfg, shape)
+    if shape.kind == "train":
+        return train_cost(cfg, shape, multi_pod=multi_pod, de_proj=de_proj)
+    if shape.kind == "prefill":
+        return prefill_cost(cfg, shape, multi_pod=multi_pod)
+    return decode_cost(cfg, shape, multi_pod=multi_pod)

@@ -1,0 +1,114 @@
+"""Roofline analysis (deliverable g): combines the analytic cost model with
+the compiled dry-run's HLO-derived records.
+
+For each (arch x shape) on the single-pod mesh it reports:
+  * the three terms (compute / memory / collective) in seconds, analytic
+  * the dominant bottleneck
+  * MODEL_FLOPS (6ND train / 2ND inference, active params) and the
+    usefulness ratio MODEL_FLOPS / analytic FLOPs (remat+microbatch waste)
+  * HLO cross-checks: raw cost_analysis numbers (loop bodies counted once —
+    see costmodel.py docstring) and the HLO collective inventory
+  * one-line "what moves the dominant term" advice
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks import costmodel
+from repro.configs.base import ARCH_IDS, get_config, get_dual_encoder_config
+from repro.launch.inputs import INPUT_SHAPES
+
+HERE = os.path.dirname(__file__)
+DRYRUN_JSON = os.path.join(HERE, "dryrun_results.json")
+
+ADVICE = {
+    ("train", "memory"): "cut weight re-reads: fewer microbatches / larger "
+                         "per-device batch, or drop the per-view checkpoint",
+    ("train", "compute"): "reduce fwd units: selective remat (save attn out), "
+                          "skip fully-masked causal blocks in blockwise attn",
+    ("train", "collective"): "overlap grad reduce-scatter with bwd; fuse "
+                             "per-layer TP all-reduces; shrink stats payload",
+    ("prefill", "collective"): "batch TP all-reduces across layers / overlap "
+                               "with compute; sequence-parallel norms",
+    ("prefill", "memory"): "fuse cache writes with attention epilogue",
+    ("prefill", "compute"): "skip fully-masked causal kv blocks (2x)",
+    ("decode", "memory"): "cache quantization (int8) or MLA-style latent "
+                          "cache; batch more requests per chip",
+    ("decode", "collective"): "fuse the 2 per-layer TP all-reduces; "
+                              "collective-permute ring for seq-sharded cache",
+    ("decode", "compute"): "weight-absorbed MLA / speculative decoding",
+}
+
+
+def build_table(dryrun_path: str = DRYRUN_JSON, tag: str = "baseline",
+                multi_pod: bool = False):
+    hlo = {}
+    if os.path.exists(dryrun_path):
+        with open(dryrun_path) as f:
+            hlo = json.load(f)
+    rows = []
+    for arch in ARCH_IDS:
+        if arch == "resnet14-cifar":
+            continue
+        de = get_dual_encoder_config(arch)
+        for shape_name, shape in INPUT_SHAPES.items():
+            cfg = get_config(arch)
+            cost = costmodel.shape_cost(cfg, shape_name, multi_pod=multi_pod,
+                                        de_proj=tuple(de.proj_dims))
+            ro = cost.roofline()
+            model_flops = cost.notes.get("model_flops_6nd", 0.0)
+            key = f"{tag}/{arch}/{shape_name}/{'multi' if multi_pod else 'single'}"
+            rec = hlo.get(key, {})
+            rows.append({
+                "arch": arch, "shape": shape_name,
+                "compute_s": ro["compute_s"], "memory_s": ro["memory_s"],
+                "collective_s": ro["collective_s"], "dominant": ro["dominant"],
+                "step_lower_bound_s": ro["step_s_lower_bound"],
+                "model_flops_dev": model_flops,
+                "useful_ratio": (model_flops / cost.flops_dev
+                                 if cost.flops_dev else 0.0),
+                "advice": ADVICE.get((shape.kind, ro["dominant"]), ""),
+                "hlo_flops_dev_loopbody": rec.get("flops_per_device"),
+                "hlo_bytes_dev_loopbody": rec.get("bytes_per_device"),
+                "hlo_coll_wire_bytes": rec.get("collectives", {}).get("wire_bytes"),
+                "hlo_coll_by_op": rec.get("collectives", {}).get("bytes_by_op"),
+                "hlo_mem": rec.get("memory"),
+                "compile_s": rec.get("compile_s"),
+                "notes": cost.notes,
+            })
+    return rows
+
+
+def render_markdown(rows):
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "6ND/flops | bound step_s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['step_lower_bound_s']:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=os.path.join(HERE, "roofline_table.json"))
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rows = build_table(multi_pod=args.multi_pod)
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(render_markdown(rows))
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print("\ndominant-term histogram:", doms)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,391 @@
+"""Benchmark harness — one function per paper table/figure + system
+microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1_cifar    — paper Table 1 protocol, miniaturized: decentralized
+                    CIFAR-like splits (clients x samples/client, IID vs
+                    non-IID) x {DCCO, CCO+FedAvg, contrastive+FedAvg,
+                    centralized CCO, supervised}; derived = linear-probe acc.
+  table2_derm     — paper Table 2 protocol: variable 1-6 samples/client
+                    (DERM-like), sweep clients/round; derived = probe acc.
+  figure3_collapse— paper App. C: BYOL-with-GN collapse probe;
+                    derived = encoding std (byol vs cco).
+  dcco_round      — federated round latency vs clients/round.
+  fused_step      — pod-style fused DCCO step latency (1-device).
+  stats_kernel    — fused cco_stats kernel (interpret) vs jnp ref.
+  roofline        — emits the analytic roofline rows (see roofline.py).
+
+All model-scale numbers are CPU-host timings of reduced configs — relative
+comparisons only; absolute TPU numbers come from the §Roofline analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import roofline as roofline_mod
+from repro.configs.base import DualEncoderConfig, get_config
+from repro.core import cco, eval as eval_lib, fed_sim, losses
+from repro.data import pipeline, synthetic
+from repro.models import dual_encoder, resnet as resnet_mod
+from repro.optim import optimizers as opt_lib
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, n=3):
+    out = fn()  # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+# shared miniature CIFAR-like setup (paper Sec 4.1-4.3, reduced)
+# ---------------------------------------------------------------------------
+
+def _setup(seed=0):
+    cfg = get_config("resnet14-cifar", smoke=True)
+    de = DualEncoderConfig(proj_dims=(64, 64), lambda_cco=5.0)
+    key = jax.random.PRNGKey(seed)
+    params = dual_encoder.init_dual_encoder(key, cfg, de)
+
+    def apply(p, batch):
+        zf, _ = dual_encoder.encode(cfg, de, p, {"images": batch["v1"]})
+        zg, _ = dual_encoder.encode(cfg, de, p, {"images": batch["v2"]})
+        return zf, zg
+
+    def embed(p, images):
+        return resnet_mod.resnet_forward(cfg, p["tower"], images)
+
+    return cfg, de, params, apply, embed
+
+
+def _probe(embed, params, imgs, labels, n_train=400):
+    z = embed(params, jnp.asarray(imgs))
+    return float(eval_lib.ridge_linear_probe(
+        z[:n_train], jnp.asarray(labels[:n_train]),
+        z[n_train:], jnp.asarray(labels[n_train:]), int(labels.max()) + 1))
+
+
+def _make_round_fn(method, apply, opt):
+    """jit once per (method, shapes) — eager vmapped rounds are ~20x slower."""
+    if method == "dcco":
+        def fn(p, st, batch, sizes):
+            return fed_sim.dcco_round(apply, p, st, opt, batch, sizes,
+                                      lam=5.0, client_lr=1.0)
+    elif method == "cco_fedavg":
+        def fn(p, st, batch, sizes):
+            return fed_sim.fedavg_round(apply, p, st, opt, batch, sizes,
+                                        loss_kind="cco", lam=5.0, client_lr=0.5)
+    elif method == "contrastive_fedavg":
+        def fn(p, st, batch, sizes):
+            return fed_sim.fedavg_round(apply, p, st, opt, batch, sizes,
+                                        loss_kind="contrastive", client_lr=0.5)
+    elif method == "centralized":
+        def fn(p, st, batch, sizes):
+            union = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
+            mask = (jnp.arange(batch["v1"].shape[1])[None]
+                    < sizes[:, None]).reshape(-1).astype(jnp.float32)
+            return fed_sim.centralized_step(apply, p, st, opt, union,
+                                            mask=mask, lam=5.0)
+    else:
+        raise ValueError(method)
+    return jax.jit(fn)
+
+
+def _pretrain(method, params, apply, ds, rounds, clients_per_round, opt_lr=2e-3):
+    opt = opt_lib.adam(opt_lr)
+    state = opt.init(params)
+    p = params
+    m = None
+    round_fn = _make_round_fn(method, apply, opt)
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        batch, sizes = ds.round_batch(jax.random.PRNGKey(1000 + r),
+                                      clients_per_round)
+        p, state, m = round_fn(p, state, batch, sizes)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    return p, us, float(m.loss)
+
+
+def table1_cifar(rounds=25):
+    """Paper Table 1, miniaturized: split x method -> probe accuracy."""
+    imgs, labels = synthetic.synthetic_labeled_images(600, 5, image_size=16,
+                                                      noise=0.5, seed=1)
+    cfg, de, params0, apply, embed = _setup()
+    acc_rand = _probe(embed, params0, imgs, labels)
+    emit("table1/random_init_probe", 0.0, f"acc={acc_rand:.3f}")
+    splits = [("noniid_s1", 0.0, 1, 32), ("noniid_s4", 0.0, 4, 8),
+              ("iid_s4", 1e9, 4, 8)]
+    for split_name, alpha, spc, cpr in splits:
+        ds = pipeline.FederatedDataset.build(
+            {"images": imgs}, labels, num_clients=256 // max(spc, 1),
+            samples_per_client=spc, alpha=alpha, seed=0)
+        for method in ("dcco", "cco_fedavg", "contrastive_fedavg", "centralized"):
+            if method == "cco_fedavg" and spc < 2:
+                emit(f"table1/{split_name}/{method}", 0.0,
+                     "acc=FAILED(n<2, per paper)")
+                continue
+            p, us, loss = _pretrain(method, params0, apply, ds, rounds, cpr)
+            acc = _probe(embed, p, imgs, labels)
+            emit(f"table1/{split_name}/{method}", us,
+                 f"acc={acc:.3f};loss={loss:.3f}")
+    sup = _supervised_scratch(cfg, imgs, labels)
+    emit("table1/supervised_scratch", 0.0, f"acc={sup:.3f}")
+
+
+def _supervised_scratch(cfg, imgs, labels, steps=60):
+    key = jax.random.PRNGKey(3)
+    n_cls = int(labels.max()) + 1
+    p = {"tower": resnet_mod.resnet_init(key, cfg, jnp.float32),
+         "head": {"w": jnp.zeros((cfg.d_model, n_cls)), "b": jnp.zeros((n_cls,))}}
+    opt = opt_lib.adam(5e-3)
+    st = opt.init(p)
+    # limited labeled data (paper: 1-10% of the dataset; we use ~7%)
+    x_tr = jnp.asarray(imgs[:40])
+    y_tr = jnp.asarray(labels[:40])
+
+    @jax.jit
+    def step(p, st):
+        def loss_fn(pp):
+            z = resnet_mod.resnet_forward(cfg, pp["tower"], x_tr)
+            logits = z @ pp["head"]["w"] + pp["head"]["b"]
+            return losses.softmax_cross_entropy(logits, y_tr)
+        g = jax.grad(loss_fn)(p)
+        upd, st2 = opt.update(g, st, p)
+        return opt_lib.apply_updates(p, upd), st2
+
+    for _ in range(steps):
+        p, st = step(p, st)
+    z = resnet_mod.resnet_forward(cfg, p["tower"], jnp.asarray(imgs[400:]))
+    logits = z @ p["head"]["w"] + p["head"]["b"]
+    return float((jnp.argmax(logits, -1) == jnp.asarray(labels[400:])).mean())
+
+
+def table2_derm(rounds=25):
+    """Paper Table 2 protocol: clients hold 1-6 images; sweep clients/round."""
+    imgs, labels = synthetic.synthetic_labeled_images(600, 5, image_size=16,
+                                                      noise=0.5, seed=2)
+    cfg, de, params0, apply, embed = _setup(seed=1)
+    rng = np.random.RandomState(0)
+    n_pad = 6
+    num_clients = 80
+    idx = rng.permutation(600)[: num_clients * n_pad].reshape(num_clients, n_pad)
+    ds = pipeline.FederatedDataset({"images": imgs}, labels, idx)
+
+    for cpr in (8, 16, 32):
+        for method in ("dcco", "contrastive_fedavg"):
+            opt = opt_lib.adam(2e-3)
+            state = opt.init(params0)
+            p = params0
+            srng = np.random.RandomState(7)
+            round_fn = _make_round_fn(method, apply, opt)
+            t0 = time.perf_counter()
+            for r in range(rounds):
+                batch, _ = ds.round_batch(jax.random.PRNGKey(r), cpr)
+                sizes = jnp.asarray(srng.randint(1, n_pad + 1, cpr), jnp.int32)
+                p, state, m = round_fn(p, state, batch, sizes)
+            us = (time.perf_counter() - t0) / rounds * 1e6
+            acc = _probe(embed, p, imgs, labels)
+            emit(f"table2/cpr{cpr}/{method}", us, f"acc={acc:.3f}")
+    emit("table2/cco_fedavg", 0.0, "acc=FAILED(unstable n<=6, per paper)")
+
+
+def figure3_collapse():
+    """App. C / footnote 1 as a landscape probe: the constant (collapsed)
+    encoder is the predictive loss's global minimum — 'loss drops to its
+    lowest possible value' — while the CCO loss there is large and a
+    whitened encoder beats it by >10x (collapse is not a CCO solution)."""
+    key = jax.random.PRNGKey(0)
+    n, d = 64, 8
+    z_const = jnp.ones((n, d)) * 0.7 + 1e-4 * jax.random.normal(key, (n, d))
+    byol_c = float(losses.byol_predictive_loss(z_const, z_const))
+    cco_c = float(cco.cco_loss(z_const, z_const, 5.0))
+    zf = jax.random.normal(jax.random.PRNGKey(1), (4096, d))
+    zc = zf - zf.mean(0)
+    u, s_, vt = jnp.linalg.svd(zc, full_matrices=False)
+    zw = u * jnp.sqrt(4096)
+    cco_w = float(cco.cco_loss(zw, zw, 5.0))
+    emit("figure3/predictive_loss_at_collapse", 0.0,
+         f"loss={byol_c:.2e}(global_min)")
+    emit("figure3/cco_loss_at_collapse", 0.0, f"loss={cco_c:.3f}")
+    emit("figure3/cco_loss_whitened", 0.0,
+         f"loss={cco_w:.4f};collapse_penalty={cco_c / max(cco_w, 1e-6):.0f}x")
+
+
+def dcco_round_bench():
+    cfg, de, params, apply, _ = _setup()
+    imgs, labels = synthetic.synthetic_labeled_images(400, 5, image_size=16)
+    opt = opt_lib.adam(1e-3)
+    state = opt.init(params)
+    for cpr in (8, 32):
+        ds = pipeline.FederatedDataset.build(
+            {"images": imgs}, labels, num_clients=100, samples_per_client=2,
+            alpha=0.0, seed=0)
+        batch, sizes = ds.round_batch(jax.random.PRNGKey(0), cpr)
+        rounder = jax.jit(lambda p, s, b, sz: fed_sim.dcco_round(
+            apply, p, s, opt, b, sz, lam=5.0))
+        us = _timeit(lambda: rounder(params, state, batch, sizes))
+        emit(f"dcco_round/clients{cpr}", us, f"samples={cpr * 2}")
+
+
+def fused_step_bench():
+    from repro.configs.base import TrainConfig
+    from repro.launch import steps as steps_lib
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    de = DualEncoderConfig(proj_dims=(64, 64), lambda_cco=5.0)
+    opt = opt_lib.adam(1e-3)
+    key = jax.random.PRNGKey(0)
+    params = dual_encoder.init_dual_encoder(key, cfg, de)
+    toks = jax.random.randint(key, (8, 64), 0, cfg.vocab_size)
+    batch = {"view1": {"tokens": toks}, "view2": {"tokens": jnp.roll(toks, 1, -1)}}
+    for nm in (1, 4):
+        tcfg = TrainConfig(seq_len=64, global_batch=8, dcco_impl="fused")
+        step = jax.jit(steps_lib.make_dcco_train_step(
+            cfg, de, tcfg, opt, num_microbatches=nm))
+        st = opt.init(params)
+        us = _timeit(lambda: step(params, st, batch))
+        emit(f"fused_step/micro{nm}", us,
+             "exact_microbatch" if nm > 1 else "plain")
+
+
+def stats_kernel_bench():
+    from repro.kernels.cco_stats import cco_stats_pallas
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(0)
+    for (n, d) in ((512, 256), (2048, 512)):
+        zf = jax.random.normal(key, (n, d))
+        zg = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+        us_k = _timeit(lambda: cco_stats_pallas(zf, zg, interpret=True), n=1)
+        us_r = _timeit(lambda: ref.cco_stats_ref(zf, zg))
+        naive = 5 * 2 * n * d * 4            # five separate passes
+        fused = 2 * n * d * 4 + d * d * 4    # one pass + output
+        emit(f"stats_kernel/{n}x{d}", us_k,
+             f"ref_us={us_r:.0f};hbm_naive_vs_fused={naive / fused:.2f}x")
+
+
+def stale_stats_study(rounds=20):
+    """Paper Sec. 6 open question: with >1 local steps per round the
+    aggregated statistics go stale and gradients are partial. We fix the
+    per-round client lr budget C (so first-order effects cancel between
+    L steps of lr C/L and 1 step of lr C) and measure the deviation of the
+    resulting round update — the pure staleness error. Finding: the
+    deviation is O(C) relative (second-order absolute), i.e. multiple local
+    steps are safe at small client lrs and increasingly biased at large
+    ones; derived column reports dev/|update| per (C, L)."""
+    from repro import utils
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (8, 4)) * 0.4}
+
+    def apply(p, b):
+        return jnp.tanh(b["v1"] @ p["w"]), jnp.tanh(b["v2"] @ p["w"])
+
+    k1, k2 = jax.random.split(key)
+    data = {"v1": jax.random.normal(k1, (8, 2, 8)),
+            "v2": jax.random.normal(k2, (8, 2, 8))}
+    sizes = jnp.full((8,), 2, jnp.int32)
+    opt = opt_lib.sgd(1.0)
+    for C in (0.1, 0.01):
+        ref, _, _ = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                       data, sizes, lam=5.0, client_lr=C,
+                                       local_steps=1)
+        upd = utils.tree_norm(utils.tree_sub(ref, params)) + 1e-12
+        for L in (2, 4):
+            pl, _, _ = fed_sim.dcco_round(apply, params, opt.init(params),
+                                          opt, data, sizes, lam=5.0,
+                                          client_lr=C / L, local_steps=L)
+            dev = utils.tree_norm(utils.tree_sub(pl, ref))
+            emit(f"stale_stats/C{C}/L{L}", 0.0,
+                 f"rel_dev={float(dev / upd):.5f}")
+
+
+def dvicreg_bench(rounds=20):
+    """Paper Sec. 6 future work: the statistics strategy with VICReg."""
+    from repro.core import vicreg
+    from repro import utils
+    cfg, de, params0, apply, embed = _setup(seed=4)
+    imgs, labels = synthetic.synthetic_labeled_images(400, 5, image_size=16,
+                                                      noise=0.5, seed=4)
+    ds = pipeline.FederatedDataset.build(
+        {"images": imgs}, labels, num_clients=100, samples_per_client=2,
+        alpha=0.0, seed=0)
+    opt = opt_lib.adam(2e-3)
+
+    @jax.jit
+    def dvicreg_round(p, st, batch, sizes):
+        masks = (jnp.arange(batch["v1"].shape[1])[None]
+                 < sizes[:, None]).astype(jnp.float32)
+
+        def c_stats(b1, b2, m):
+            zf, zg = apply(p, {"v1": b1, "v2": b2})
+            return vicreg.vicreg_stats_masked(zf, zg, m)
+
+        st_k = jax.vmap(c_stats)(batch["v1"], batch["v2"], masks)
+        agg = cco.weighted_average_stats(st_k, sizes.astype(jnp.float32))
+
+        def client_update(b1, b2, m):
+            def loss_fn(pp):
+                zf, zg = apply(pp, {"v1": b1, "v2": b2})
+                stc = cco.dcco_combine(vicreg.vicreg_stats_masked(zf, zg, m), agg)
+                return vicreg.vicreg_loss_from_stats(stc)
+            loss, g = jax.value_and_grad(loss_fn)(p)
+            return jax.tree.map(lambda x: -x, g), loss
+
+        deltas, losses_k = jax.vmap(client_update)(batch["v1"], batch["v2"], masks)
+        w = sizes.astype(jnp.float32) / sizes.sum()
+        avg = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+        upd, st2 = opt.update(utils.tree_scale(avg, -1.0), st, p)
+        return opt_lib.apply_updates(p, upd), st2, jnp.sum(w * losses_k)
+
+    state = opt.init(params0)
+    p = params0
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        batch, sizes = ds.round_batch(jax.random.PRNGKey(700 + r), 16)
+        p, state, loss = dvicreg_round(p, state, batch, sizes)
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    acc0 = _probe(embed, params0, imgs, labels, n_train=300)
+    acc = _probe(embed, p, imgs, labels, n_train=300)
+    emit("dvicreg/federated", us,
+         f"probe={acc:.3f}(init={acc0:.3f});loss={float(loss):.2f}")
+
+
+def roofline_bench():
+    rows = roofline_mod.build_table()
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             r["step_lower_bound_s"] * 1e6,
+             f"dom={r['dominant']};useful={r['useful_ratio']:.2f}")
+    emit("roofline/summary", 0.0,
+         ";".join(f"{k}={v}" for k, v in sorted(doms.items())))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1_cifar()
+    table2_derm()
+    figure3_collapse()
+    dcco_round_bench()
+    fused_step_bench()
+    stats_kernel_bench()
+    stale_stats_study()
+    dvicreg_bench()
+    roofline_bench()
+    print(f"# {len(ROWS)} benchmark rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Quickstart: 60 seconds of federated DCCO on synthetic non-IID clients.
+
+Shows the whole public API surface: config -> dual encoder -> federated
+dataset -> DCCO rounds -> linear-probe evaluation, plus the Appendix-A
+equivalence check against a centralized step.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+from repro.configs.base import DualEncoderConfig, get_config
+from repro.core import eval as eval_lib, fed_sim
+from repro.data import pipeline, synthetic
+from repro.models import dual_encoder, resnet
+from repro.optim import optimizers as opt_lib
+
+# 1. model: the paper's WS+GN ResNet dual encoder (reduced)
+cfg = get_config("resnet14-cifar", smoke=True)
+de = DualEncoderConfig(proj_dims=(64, 64), lambda_cco=5.0)
+key = jax.random.PRNGKey(0)
+params = dual_encoder.init_dual_encoder(key, cfg, de)
+
+
+def apply(p, batch):
+    zf, _ = dual_encoder.encode(cfg, de, p, {"images": batch["v1"]})
+    zg, _ = dual_encoder.encode(cfg, de, p, {"images": batch["v2"]})
+    return zf, zg
+
+
+# 2. data: synthetic labeled images, Dirichlet(alpha=0) => single-class
+#    clients with 2 samples each (the paper's hard setting)
+imgs, labels = synthetic.synthetic_labeled_images(600, 5, image_size=16,
+                                                  noise=0.5, seed=1)
+ds = pipeline.FederatedDataset.build({"images": imgs}, labels,
+                                     num_clients=128, samples_per_client=2,
+                                     alpha=0.0, seed=0)
+
+
+def probe(p):
+    z = resnet.resnet_forward(cfg, p["tower"], jnp.asarray(imgs))
+    return float(eval_lib.ridge_linear_probe(
+        z[:400], jnp.asarray(labels[:400]), z[400:], jnp.asarray(labels[400:]), 5))
+
+
+print(f"random-init probe accuracy: {probe(params):.3f}")
+
+# 3. sanity: one DCCO round == one centralized step (Appendix A).
+#    (relative metric: the weight-standardized stem has ~1e4-magnitude
+#    gradients, so absolute diffs reflect f32 conditioning, not protocol error)
+batch, sizes = ds.round_batch(jax.random.PRNGKey(42), 16)
+opt = opt_lib.sgd(0.05)
+p_fed, _, _ = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                 batch, sizes, lam=5.0, client_lr=1.0)
+union = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
+p_cent, _, _ = fed_sim.centralized_step(apply, params, opt.init(params), opt,
+                                        union, lam=5.0)
+diff = utils.tree_max_abs_diff(p_fed, p_cent)
+upd = utils.tree_max_abs_diff(p_fed, params)
+print(f"equivalence check: |fed - centralized| / |update| = {diff / upd:.2e}")
+
+# 4. train 30 federated rounds
+opt = opt_lib.adam(2e-3)
+state = opt.init(params)
+for r in range(30):
+    batch, sizes = ds.round_batch(jax.random.PRNGKey(100 + r), 16)
+    params, state, m = fed_sim.dcco_round(apply, params, state, opt,
+                                          batch, sizes, lam=5.0)
+    if (r + 1) % 10 == 0:
+        print(f"round {r + 1:3d}  loss={float(m.loss):8.3f}  "
+              f"enc_std={float(m.encoding_std):.3f}")
+
+print(f"post-pretraining probe accuracy: {probe(params):.3f}")

@@ -1,0 +1,67 @@
+"""Serving example: the two inference paths of the framework.
+
+1. Dual-encoder retrieval: encode a corpus with the (pre)trained tower,
+   serve batched nearest-neighbour queries (what a deployed dual encoding
+   model does — paper Sec 1's use case).
+2. Generative decode: batched prefill + autoregressive serve_step with a KV
+   cache (the decode shapes of the dry-run, at smoke scale).
+
+Run: PYTHONPATH=src python examples/serve_retrieval.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DualEncoderConfig, get_config
+from repro.data import synthetic
+from repro.launch import steps as steps_lib
+from repro.models import dual_encoder, transformer
+
+ARCH = "qwen3-1.7b"
+cfg = get_config(ARCH, smoke=True)
+de = DualEncoderConfig(proj_dims=(64, 64))
+key = jax.random.PRNGKey(0)
+params = dual_encoder.init_dual_encoder(key, cfg, de)
+
+# ---------------------------------------------------------------- retrieval
+corpus, labels = synthetic.synthetic_labeled_tokens(256, 4, 32,
+                                                    vocab=cfg.vocab_size)
+queries, qlabels = synthetic.synthetic_labeled_tokens(16, 4, 32,
+                                                      vocab=cfg.vocab_size,
+                                                      seed=9)
+
+
+@jax.jit
+def encode(p, toks):
+    z, _ = dual_encoder.encode(cfg, de, p, {"tokens": toks})
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
+
+
+t0 = time.time()
+corpus_z = encode(params, jnp.asarray(corpus))
+print(f"indexed {len(corpus)} docs in {time.time() - t0:.2f}s")
+
+q_z = encode(params, jnp.asarray(queries))
+sim = q_z @ corpus_z.T
+top = jnp.argmax(sim, axis=-1)
+match = (jnp.asarray(labels)[top] == jnp.asarray(qlabels)).mean()
+print(f"batched retrieval: top-1 label match {float(match):.2f} "
+      f"(random would be ~0.25; improves with DCCO pretraining)")
+
+# ------------------------------------------------------------------- decode
+serve = jax.jit(steps_lib.make_serve_step(cfg), donate_argnums=1)
+prefill = jax.jit(steps_lib.make_prefill_step(cfg, max_len=48))
+batch = {"tokens": jnp.asarray(queries[:4, :16])}
+logits, cache = prefill(params["tower"], batch)
+tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+outs = [tok]
+t0 = time.time()
+for _ in range(7):
+    logits, cache = serve(params["tower"], cache, {"tokens": tok})
+    tok = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+    outs.append(tok)
+jax.block_until_ready(tok)
+gen = jnp.concatenate(outs, axis=1)
+print(f"decoded 8 tokens x 4 seqs in {time.time() - t0:.2f}s: "
+      f"{gen[0].tolist()}")

@@ -1,0 +1,3 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, SSMConfig, XLSTMConfig, DualEncoderConfig,
+    TrainConfig, ARCH_IDS, get_config, get_dual_encoder_config)

@@ -1,0 +1,197 @@
+"""Model / training configuration dataclasses and the architecture registry.
+
+Every assigned architecture gets a module ``repro/configs/<id>.py`` exporting
+``CONFIG`` (full production config, exact spec from the assignment) and
+``SMOKE_CONFIG`` (reduced same-family variant: <=2 superblocks, d_model<=512,
+<=4 experts) used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0            # routed experts
+    num_shared_experts: int = 0     # always-on experts (DeepSeek style)
+    top_k: int = 0
+    d_ff: int = 0                   # per-expert hidden dim
+    capacity_factor: float = 1.25
+    balance_weight: float = 0.01    # aux load-balance loss weight
+    first_k_dense: int = 0          # first K layers use a dense FFN instead
+    dense_d_ff: int = 0             # hidden dim of those dense layers
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state: int = 64                 # N: SSM state size
+    expand: int = 2                 # d_inner = expand * d_model
+    conv_width: int = 4
+    head_dim: int = 64              # Mamba2 head dim (d_inner / heads)
+    chunk: int = 128                # chunked-scan block length
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    # mLSTM / sLSTM cell sizes; heads come from ModelConfig.num_heads.
+    chunk: int = 128                # mLSTM chunkwise-recurrent block length
+    proj_factor_mlstm: float = 2.0  # pre-up-projection factor for mLSTM blocks
+    proj_factor_slstm: float = 1.333  # post-up-projection (ffn) factor for sLSTM
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"           # dense | moe | hybrid | ssm | vlm | audio
+    source: str = ""                # citation for the config values
+    # transformer trunk
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: int = 0               # 0 -> d_model // num_heads
+    # block pattern, cycled over layers (scan over superblocks).
+    # entries: "attn" (attention + FFN/MoE), "mamba2", "mlstm", "slstm"
+    block_pattern: Tuple[str, ...] = ("attn",)
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0         # 0 = full attention
+    # MLA (DeepSeek-V2 multi-head latent attention)
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # modality ("text" | "vision_text" | "audio_tokens")
+    modality: str = "text"
+    vis_patches: int = 0            # VLM: number of patch embeddings prepended
+    vis_dim: int = 0                # VLM: stub ViT output dim
+    # resnet (paper's own encoder; family == "resnet")
+    resnet_stages: Tuple[int, ...] = ()
+    resnet_channels: Tuple[int, ...] = ()
+    resnet_groups: int = 32
+    resnet_in_channels: int = 3
+    image_size: int = 32
+    # norm / numerics
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = True
+    # attention impl: "blockwise" (flash-style scan, memory-safe) or "naive"
+    attn_impl: str = "blockwise"
+    attn_block: int = 1024          # kv block for blockwise attention
+    # remat policy on the layer scan: "none" | "full"
+    remat: str = "none"
+    # pin activation batch-dim sharding at block boundaries (FSDP mode needs
+    # this so SPMD gathers weights, not activations); None = let XLA infer
+    act_shard_axes: Optional[Tuple[str, ...]] = None
+    # FSDP: model-axis size for in-scan per-layer weight constraints (keeps
+    # the gather inside the loop body — one layer resident, not the stack)
+    fsdp_model_size: int = 0
+    # KV cache storage dtype: "model" (= cfg.dtype) | "int8" (per-vector
+    # max-abs quantization; halves decode cache capacity+bandwidth)
+    kv_cache_dtype: str = "model"
+    # PaLM-style parallel block: attn and FFN both read norm(x) and their
+    # outputs sum into the residual — halves the per-layer TP all-reduces
+    # (one joint AR instead of two). A beyond-paper *variant*: numerics
+    # differ from the sequential block, so it is opt-in per experiment.
+    parallel_block: bool = False
+    # scan vs python-unrolled layer loop, and chunked middle ground: the
+    # stack splits into `layer_chunks` python-level chunks, each scanned.
+    # XLA's loop-invariant code motion hoists FSDP weight all-gathers out of
+    # a while loop — chunking bounds the hoisted gather to stack/chunks
+    # bytes (measured; see EXPERIMENTS §Perf).
+    scan_layers: bool = True
+    layer_chunks: int = 1
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def num_prologue(self) -> int:
+        return self.moe.first_k_dense if self.moe is not None else 0
+
+    @property
+    def num_superblocks(self) -> int:
+        scanned = self.num_layers - self.num_prologue
+        assert scanned % len(self.block_pattern) == 0, (
+            f"{self.name}: scanned layers {scanned} not divisible by "
+            f"pattern len {len(self.block_pattern)}")
+        return scanned // len(self.block_pattern)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class DualEncoderConfig:
+    """Paper Sec. 4.2: 3-layer projection head on top of pooled encodings."""
+    proj_dims: Tuple[int, ...] = (1024, 1024, 1024)
+    lambda_cco: float = 20.0        # paper's tradeoff parameter
+    shared_towers: bool = True      # Fig 1(a) vs 1(b)/(c)
+    pool: str = "mean"              # mean-pool token encodings
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    samples_per_client: int = 1     # clients/round = global_batch // samples_per_client
+    local_steps: int = 1            # paper: 1 (the equivalence regime)
+    client_lr: float = 1.0          # paper: GD with lr 1.0 on clients
+    server_optimizer: str = "adam"  # adam | lars | sgd
+    server_lr: float = 5e-3
+    total_rounds: int = 100
+    warmup_rounds: int = 0
+    weight_decay: float = 0.0
+    seed: int = 0
+    # DCCO path: "fused" (centralized-equivalent, optimized) |
+    #            "per_client" (faithful per-client stop-grad combine) |
+    #            "shard_map" (protocol-faithful device-level collective)
+    dcco_impl: str = "fused"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "internvl2-2b",
+    "granite-3-8b",
+    "qwen3-8b",
+    "qwen3-1.7b",
+    "deepseek-v2-lite-16b",
+    "zamba2-2.7b",
+    "musicgen-large",
+    "tinyllama-1.1b",
+    "xlstm-350m",
+    "deepseek-moe-16b",
+    "resnet14-cifar",   # the paper's own encoder config
+)
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    mod = importlib.import_module(_module_name(arch_id))
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def get_dual_encoder_config(arch_id: str) -> DualEncoderConfig:
+    mod = importlib.import_module(_module_name(arch_id))
+    return getattr(mod, "DUAL_ENCODER", DualEncoderConfig())

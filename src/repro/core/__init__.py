@@ -1,0 +1,12 @@
+# The paper's primary contribution: DCCO — distributed cross-correlation
+# optimization for federated dual-encoder training (see DESIGN.md).
+from repro.core.cco import (  # noqa: F401
+    encoding_stats, encoding_stats_masked, weighted_average_stats,
+    correlation_matrix, cco_loss, cco_loss_from_stats, dcco_combine,
+    per_client_stats, STAT_KEYS)
+from repro.core.dcco import (  # noqa: F401
+    dcco_loss, dcco_loss_fused, dcco_loss_per_client,
+    make_shard_map_dcco_loss)
+from repro.core.losses import (  # noqa: F401
+    ntxent_loss, softmax_cross_entropy, byol_predictive_loss, encoding_variance)
+from repro.core import fed_sim  # noqa: F401

@@ -1,0 +1,114 @@
+"""Cross Correlation Optimization (CCO) loss and encoding statistics.
+
+Paper Eq. 1-3. The five statistics
+    <F_i>, <F_i^2>, <G_j>, <G_j^2>, <F_i G_j>
+are linear in samples, so large-batch statistics are exactly weighted
+averages of per-client statistics (Eq. 3) — the insight DCCO is built on.
+
+All statistics math is f32 regardless of model dtype: correlation
+coefficients divide near-cancelling quantities and are ill-conditioned
+in bf16.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+Stats = Dict[str, jnp.ndarray]   # mean_f/sq_f: (d,), mean_g/sq_g: (d,), cross: (d,d)
+
+STAT_KEYS = ("mean_f", "sq_f", "mean_g", "sq_g", "cross")
+
+
+def encoding_stats(zf, zg) -> Stats:
+    """Five batch statistics of encodings zf, zg: (N, d) -> Stats."""
+    zf = zf.astype(F32)
+    zg = zg.astype(F32)
+    n = zf.shape[0]
+    return {
+        "mean_f": zf.mean(0),
+        "sq_f": (zf * zf).mean(0),
+        "mean_g": zg.mean(0),
+        "sq_g": (zg * zg).mean(0),
+        "cross": zf.T @ zg / n,
+    }
+
+
+def weighted_average_stats(stats: Stats, weights) -> Stats:
+    """Aggregate stacked per-client stats (leading axis K) with weights N_k/N.
+
+    Implements paper Eq. 3 exactly.
+    """
+    w = weights.astype(F32) / jnp.sum(weights.astype(F32))
+
+    def avg(x):
+        return jnp.tensordot(w, x, axes=1)
+
+    return {k: avg(v) for k, v in stats.items()}
+
+
+def correlation_matrix(stats: Stats, eps: float = 1e-8):
+    """C_ij per paper Eq. 2, from the five statistics."""
+    var_f = stats["sq_f"] - stats["mean_f"] ** 2
+    var_g = stats["sq_g"] - stats["mean_g"] ** 2
+    cov = stats["cross"] - jnp.outer(stats["mean_f"], stats["mean_g"])
+    denom = jnp.sqrt(jnp.maximum(var_f, 0.0) + eps)[:, None] * \
+        jnp.sqrt(jnp.maximum(var_g, 0.0) + eps)[None, :]
+    return cov / denom
+
+
+def cco_loss_from_stats(stats: Stats, lam: float = 20.0) -> jnp.ndarray:
+    """Paper Eq. 1 with the 1/(d-1) off-diagonal normalization."""
+    c = correlation_matrix(stats)
+    d = c.shape[0]
+    diag = jnp.diagonal(c)
+    on = jnp.sum((1.0 - diag) ** 2)
+    off = (jnp.sum(c * c) - jnp.sum(diag * diag)) / (d - 1)
+    return on + lam * off
+
+
+def cco_loss(zf, zg, lam: float = 20.0) -> jnp.ndarray:
+    """Centralized large-batch CCO loss (the paper's upper-bound baseline)."""
+    return cco_loss_from_stats(encoding_stats(zf, zg), lam)
+
+
+def dcco_combine(local: Stats, agg: Stats) -> Stats:
+    """Combined statistics <.>_C = <.>_k + sg(<.>_A - <.>_k)  (paper Fig. 2).
+
+    Value equals the aggregated statistics; gradients flow only through the
+    local statistics — each client can backprop only through its own data.
+    """
+    return {k: local[k] + jax.lax.stop_gradient(agg[k] - local[k]) for k in local}
+
+
+def encoding_stats_masked(zf, zg, mask) -> Stats:
+    """Statistics over valid samples only (mask: (N,) in {0,1}).
+
+    Supports variable-size clients (DERM: 1-6 images/case) via padding."""
+    zf = zf.astype(F32)
+    zg = zg.astype(F32)
+    w = mask.astype(F32)
+    n = jnp.maximum(w.sum(), 1.0)
+    zf_m = zf * w[:, None]
+    zg_m = zg * w[:, None]
+    return {
+        "mean_f": zf_m.sum(0) / n,
+        "sq_f": (zf_m * zf).sum(0) / n,
+        "mean_g": zg_m.sum(0) / n,
+        "sq_g": (zg_m * zg).sum(0) / n,
+        "cross": zf_m.T @ zg / n,
+    }
+
+
+def per_client_stats(zf, zg, clients: int) -> Stats:
+    """Reshape a round's encodings (N, d) into per-client stats (K leading).
+
+    Assumes equal-size clients laid out contiguously: N = K * n_k.
+    """
+    n, d = zf.shape
+    assert n % clients == 0
+    zf_c = zf.reshape(clients, n // clients, d)
+    zg_c = zg.reshape(clients, n // clients, d)
+    return jax.vmap(encoding_stats)(zf_c, zg_c)

@@ -1,0 +1,45 @@
+"""Evaluation protocols (paper Sec. 4): linear evaluation on frozen
+encodings and full-finetuning cross-entropy training.
+
+The linear probe uses a closed-form ridge classifier on one-hot targets —
+deterministic and cheap, which is what benchmarks need for *relative*
+comparisons between pretraining methods (the paper's tables compare methods
+under an identical probe protocol; the probe family matters less than
+holding it fixed)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ridge_linear_probe(train_z, train_y, test_z, test_y, num_classes: int,
+                       l2: float = 1e-2):
+    """Fit W on (train_z -> one-hot) in closed form; return test accuracy."""
+    z = train_z.astype(F32)
+    z = jnp.concatenate([z, jnp.ones((z.shape[0], 1), F32)], axis=1)  # bias
+    y = jax.nn.one_hot(train_y, num_classes, dtype=F32)
+    d = z.shape[1]
+    a = z.T @ z + l2 * jnp.eye(d, dtype=F32)
+    b = z.T @ y
+    w = jnp.linalg.solve(a, b)
+    zt = jnp.concatenate([test_z.astype(F32),
+                          jnp.ones((test_z.shape[0], 1), F32)], axis=1)
+    pred = jnp.argmax(zt @ w, axis=-1)
+    return (pred == test_y).mean()
+
+
+def knn_probe(train_z, train_y, test_z, test_y, k: int = 5):
+    """Cosine k-NN accuracy — second, parameter-free probe."""
+    def norm(z):
+        z = z.astype(F32)
+        return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
+
+    sim = norm(test_z) @ norm(train_z).T                     # (T, N)
+    _, idx = jax.lax.top_k(sim, k)
+    votes = train_y[idx]                                     # (T, k)
+    num_classes = int(jnp.max(train_y)) + 1
+    counts = jax.vmap(lambda v: jnp.bincount(v, length=num_classes))(votes)
+    pred = jnp.argmax(counts, axis=-1)
+    return (pred == test_y).mean()

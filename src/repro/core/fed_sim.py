@@ -1,0 +1,165 @@
+"""Client-level federated simulator — the paper's training runtime.
+
+This is the *protocol-faithful* implementation: explicit client sampling,
+model broadcast, the two server<->client communication phases of DCCO
+(Fig. 2), local training, and the FedOpt-style server update. The pod-scale
+fused path (launch/steps.py) is the performance implementation; this module
+is the reference semantics, and tests assert they agree (Appendix A).
+
+Client data layout: a pytree whose leaves have leading dims (K, n, ...) —
+K clients, n samples each (padded; ``mask`` (K, n) marks real samples, so
+variable-size clients like DERM's 1-6 images/case are supported).
+
+``encoder_apply(params, batch) -> (zf, zg)`` abstracts the dual encoding
+model: batch is one client's (n, ...) slice holding both views.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cco, losses
+from repro import utils
+from repro.optim import optimizers as opt_lib
+
+F32 = jnp.float32
+
+
+class RoundMetrics(NamedTuple):
+    loss: jnp.ndarray
+    encoding_std: jnp.ndarray
+
+
+def sample_clients(key, num_clients: int, clients_per_round: int):
+    """Server samples K clients without replacement."""
+    return jax.random.choice(key, num_clients, (clients_per_round,), replace=False)
+
+
+def _client_masks(client_sizes, n_pad: int):
+    idx = jnp.arange(n_pad)[None, :]
+    return (idx < client_sizes[:, None]).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# DCCO round (paper Sec 3.3, Fig. 2)
+# ---------------------------------------------------------------------------
+
+def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
+               client_data, client_sizes, *, lam: float = 20.0,
+               client_lr: float = 1.0, local_steps: int = 1):
+    """One DCCO round. Returns (params, opt_state, metrics)."""
+    n_pad = jax.tree.leaves(client_data)[0].shape[1]
+    masks = _client_masks(client_sizes, n_pad)               # (K, n)
+    w = client_sizes.astype(F32) / jnp.sum(client_sizes.astype(F32))
+
+    # ---- phase 1: clients compute local stats; server aggregates (Eq. 3)
+    def client_stats(batch, mask):
+        zf, zg = encoder_apply(params, batch)
+        return cco.encoding_stats_masked(zf, zg, mask)
+
+    st_k = jax.vmap(client_stats)(client_data, masks)
+    agg = cco.weighted_average_stats(st_k, client_sizes.astype(F32))
+
+    # ---- phase 2: server redistributes agg stats; clients run local steps
+    def client_update(batch, mask):
+        def loss_fn(p):
+            zf, zg = encoder_apply(p, batch)
+            local = cco.encoding_stats_masked(zf, zg, mask)
+            combined = cco.dcco_combine(local, agg)
+            return cco.cco_loss_from_stats(combined, lam)
+
+        p_local = params
+        loss0 = jnp.zeros((), F32)
+        for step in range(local_steps):
+            loss_val, g = jax.value_and_grad(loss_fn)(p_local)
+            if step == 0:
+                loss0 = loss_val
+            # plain GD on the client (paper: lr 1.0)
+            p_local = jax.tree.map(
+                lambda p_, g_: (p_.astype(F32) - client_lr * g_.astype(F32)).astype(p_.dtype),
+                p_local, g)
+        delta = utils.tree_sub(utils.tree_cast(p_local, F32), utils.tree_cast(params, F32))
+        return delta, loss0
+
+    deltas, losses_k = jax.vmap(client_update)(client_data, masks)
+
+    # ---- server: weighted average of deltas -> FedOpt pseudo-gradient
+    avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+    pseudo_grad = utils.tree_scale(avg_delta, -1.0)
+    updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
+    params = opt_lib.apply_updates(params, updates)
+
+    # collapse probe on the aggregated stats
+    enc_std = jnp.sqrt(jnp.maximum(agg["sq_f"] - agg["mean_f"] ** 2, 0.0)).mean()
+    return params, opt_state, RoundMetrics(jnp.sum(w * losses_k), enc_std)
+
+
+# ---------------------------------------------------------------------------
+# FedAvg baselines (within-client loss, no stats exchange)
+# ---------------------------------------------------------------------------
+
+def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
+                 client_data, client_sizes, *, loss_kind: str = "cco",
+                 lam: float = 20.0, temperature: float = 0.1,
+                 client_lr: float = 1.0, local_steps: int = 1):
+    """FedAvg with a within-client loss: 'cco' | 'contrastive' | 'byol'."""
+    n_pad = jax.tree.leaves(client_data)[0].shape[1]
+    masks = _client_masks(client_sizes, n_pad)
+    w = client_sizes.astype(F32) / jnp.sum(client_sizes.astype(F32))
+
+    def client_loss(p, batch, mask):
+        zf, zg = encoder_apply(p, batch)
+        if loss_kind == "cco":
+            st = cco.encoding_stats_masked(zf, zg, mask)
+            return cco.cco_loss_from_stats(st, lam)
+        if loss_kind == "contrastive":
+            # NOTE: padding samples contribute as (weak) negatives; paper's
+            # clients are tiny so we keep the simple masked-mean variant.
+            return losses.ntxent_loss(zf, zg, temperature)
+        if loss_kind == "byol":
+            return losses.byol_predictive_loss(zf, zg)
+        raise ValueError(loss_kind)
+
+    def client_update(batch, mask):
+        p_local = params
+        loss0 = jnp.zeros((), F32)
+        for step in range(local_steps):
+            loss_val, g = jax.value_and_grad(client_loss)(p_local, batch, mask)
+            if step == 0:
+                loss0 = loss_val
+            p_local = jax.tree.map(
+                lambda p_, g_: (p_.astype(F32) - client_lr * g_.astype(F32)).astype(p_.dtype),
+                p_local, g)
+        return utils.tree_sub(utils.tree_cast(p_local, F32),
+                              utils.tree_cast(params, F32)), loss0
+
+    deltas, losses_k = jax.vmap(client_update)(client_data, masks)
+    avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+    pseudo_grad = utils.tree_scale(avg_delta, -1.0)
+    updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
+    params = opt_lib.apply_updates(params, updates)
+    return params, opt_state, RoundMetrics(jnp.sum(w * losses_k), jnp.zeros((), F32))
+
+
+# ---------------------------------------------------------------------------
+# Centralized step (the paper's upper bound) — for equivalence checks
+# ---------------------------------------------------------------------------
+
+def centralized_step(encoder_apply: Callable, params, opt_state, server_opt,
+                     batch, mask=None, *, lam: float = 20.0):
+    """One centralized large-batch CCO step. batch leaves: (N, ...)."""
+    def loss_fn(p):
+        zf, zg = encoder_apply(p, batch)
+        if mask is not None:
+            st = cco.encoding_stats_masked(zf, zg, mask)
+        else:
+            st = cco.encoding_stats(zf, zg)
+        return cco.cco_loss_from_stats(st, lam)
+
+    loss, g = jax.value_and_grad(loss_fn)(params)
+    updates, opt_state = server_opt.update(g, opt_state, params)
+    params = opt_lib.apply_updates(params, updates)
+    return params, opt_state, RoundMetrics(loss, jnp.zeros((), F32))

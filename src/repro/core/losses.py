@@ -1,0 +1,51 @@
+"""Comparative losses (paper Sec. 4): NT-Xent contrastive (SimCLR, tau=0.1),
+supervised cross-entropy, and the predictive-loss collapse probe (App. C)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ntxent_loss(zf, zg, temperature: float = 0.1) -> jnp.ndarray:
+    """SimCLR NT-Xent over a batch of paired encodings zf, zg: (N, d).
+
+    Each zf[i] is contrasted against zg[i] (positive) and all other
+    encodings in the union of {zf, zg} minus itself (negatives); symmetrized.
+    """
+    n = zf.shape[0]
+    zf = zf.astype(F32)
+    zg = zg.astype(F32)
+    za = jnp.concatenate([zf, zg], axis=0)                  # (2N, d)
+    za = za / jnp.maximum(jnp.linalg.norm(za, axis=-1, keepdims=True), 1e-8)
+    sim = za @ za.T / temperature                           # (2N, 2N)
+    sim = jnp.where(jnp.eye(2 * n, dtype=bool), -1e9, sim)
+    # positives: i <-> i+N
+    pos_idx = jnp.concatenate([jnp.arange(n) + n, jnp.arange(n)])
+    logprob = jax.nn.log_softmax(sim, axis=-1)
+    loss = -logprob[jnp.arange(2 * n), pos_idx]
+    return loss.mean()
+
+
+def softmax_cross_entropy(logits, labels, num_classes: int | None = None) -> jnp.ndarray:
+    """logits: (..., C); labels int (...)."""
+    logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def byol_predictive_loss(z_online, z_target) -> jnp.ndarray:
+    """Normalized MSE predictive loss (BYOL/SimSiam family) — used by the
+    App.-C collapse probe: without batch statistics this loss can be driven
+    to ~0 by a constant encoder."""
+    zo = z_online.astype(F32)
+    zt = jax.lax.stop_gradient(z_target.astype(F32))
+    zo = zo / jnp.maximum(jnp.linalg.norm(zo, axis=-1, keepdims=True), 1e-8)
+    zt = zt / jnp.maximum(jnp.linalg.norm(zt, axis=-1, keepdims=True), 1e-8)
+    return (2.0 - 2.0 * (zo * zt).sum(-1)).mean()
+
+
+def encoding_variance(z) -> jnp.ndarray:
+    """Mean per-dimension std of encodings — collapse indicator (VICReg-style)."""
+    return jnp.sqrt(jnp.var(z.astype(F32), axis=0) + 1e-8).mean()

@@ -1,0 +1,93 @@
+"""D-VICReg: the paper's distributed-statistics strategy applied to VICReg
+(Bardes et al. 2022) — the extension the paper names as future work (Sec. 6:
+"evaluate the proposed aggregated statistics-based distributed learning
+strategy with other statistics-based loss functions such as Bardes et al.").
+
+VICReg needs seven linear-in-samples statistics (DCCO's five plus the two
+within-view second-moment matrices), so the same aggregate/redistribute/
+stop-grad-combine machinery — and the Appendix-A equivalence — applies
+verbatim:
+
+  invariance:  ⟨|F − G|²⟩         from ⟨F²⟩, ⟨G²⟩, diag⟨FG^T⟩
+  variance:    hinge(γ − std(F)) from ⟨F⟩, ⟨F²⟩ (and G likewise)
+  covariance:  off-diag Cov(F)²  from ⟨FF^T⟩, ⟨F⟩ (and G likewise)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cco
+
+F32 = jnp.float32
+
+VICREG_STAT_KEYS = cco.STAT_KEYS + ("cov_f", "cov_g")
+
+
+def vicreg_stats(zf, zg) -> Dict[str, jnp.ndarray]:
+    """Seven statistics: DCCO's five + within-view second moments."""
+    st = cco.encoding_stats(zf, zg)
+    zf = zf.astype(F32)
+    zg = zg.astype(F32)
+    n = zf.shape[0]
+    st["cov_f"] = zf.T @ zf / n
+    st["cov_g"] = zg.T @ zg / n
+    return st
+
+
+def vicreg_stats_masked(zf, zg, mask) -> Dict[str, jnp.ndarray]:
+    st = cco.encoding_stats_masked(zf, zg, mask)
+    zf = zf.astype(F32)
+    zg = zg.astype(F32)
+    w = mask.astype(F32)
+    n = jnp.maximum(w.sum(), 1.0)
+    st["cov_f"] = (zf * w[:, None]).T @ zf / n
+    st["cov_g"] = (zg * w[:, None]).T @ zg / n
+    return st
+
+
+def vicreg_loss_from_stats(st, *, inv_weight: float = 25.0,
+                           var_weight: float = 25.0, cov_weight: float = 1.0,
+                           gamma: float = 1.0, eps: float = 1e-4):
+    """VICReg (Bardes et al. 2022 Eq. 6) computed purely from statistics."""
+    d = st["mean_f"].shape[0]
+    # invariance: E|F-G|^2 = E F^2 + E G^2 - 2 diag(E F G^T)
+    inv = jnp.sum(st["sq_f"] + st["sq_g"] - 2.0 * jnp.diagonal(st["cross"])) / d
+
+    def var_term(sq, mean):
+        var = jnp.maximum(sq - mean ** 2, 0.0)
+        return jnp.mean(jax.nn.relu(gamma - jnp.sqrt(var + eps)))
+
+    var = var_term(st["sq_f"], st["mean_f"]) + var_term(st["sq_g"], st["mean_g"])
+
+    def cov_term(cov2, mean):
+        cov = cov2 - jnp.outer(mean, mean)
+        off = jnp.sum(cov * cov) - jnp.sum(jnp.diagonal(cov) ** 2)
+        return off / d
+
+    covp = cov_term(st["cov_f"], st["mean_f"]) + cov_term(st["cov_g"], st["mean_g"])
+    return inv_weight * inv + var_weight * var + cov_weight * covp
+
+
+def vicreg_loss(zf, zg, **kw):
+    """Centralized large-batch VICReg."""
+    return vicreg_loss_from_stats(vicreg_stats(zf, zg), **kw)
+
+
+def dvicreg_loss_per_client(zf, zg, clients: int, **kw):
+    """Faithful D-VICReg objective: per-client stats, weighted aggregate,
+    stop-grad combine (paper Fig. 2 with VICReg's seven statistics)."""
+    n, d = zf.shape
+    assert n % clients == 0
+    zf_c = zf.reshape(clients, n // clients, d)
+    zg_c = zg.reshape(clients, n // clients, d)
+    st_k = jax.vmap(vicreg_stats)(zf_c, zg_c)
+    w = jnp.full((clients,), 1.0 / clients, F32)
+    agg = cco.weighted_average_stats(st_k, w)
+
+    def client_loss(stats_k):
+        return vicreg_loss_from_stats(cco.dcco_combine(stats_k, agg), **kw)
+
+    return jnp.sum(w * jax.vmap(client_loss)(st_k))

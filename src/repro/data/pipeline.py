@@ -1,0 +1,84 @@
+"""Federated data pipeline: owns the client partition and emits per-round
+batches in the (K, n, ...) layout expected by repro.core.fed_sim, or the
+flat (N, ...) layout expected by the pod-scale fused step.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import augment, partition
+
+
+class FederatedDataset:
+    """Wraps (data, labels) + a client partition.
+
+    data: dict of np arrays with leading N (e.g. {"images": ...} or
+    {"tokens": ...}); client_index: (num_clients, samples_per_client) int.
+    """
+
+    def __init__(self, data: Dict[str, np.ndarray], labels: np.ndarray,
+                 client_index: np.ndarray, vocab: int = 0):
+        self.data = data
+        self.labels = labels
+        self.client_index = client_index
+        self.vocab = vocab
+
+    @property
+    def num_clients(self) -> int:
+        return self.client_index.shape[0]
+
+    @property
+    def samples_per_client(self) -> int:
+        return self.client_index.shape[1]
+
+    @classmethod
+    def build(cls, data, labels, *, num_clients, samples_per_client,
+              alpha: float, seed: int = 0, vocab: int = 0):
+        if alpha >= 1e6:
+            idx = partition.iid_partition(len(labels), num_clients,
+                                          samples_per_client, seed)
+        else:
+            idx = partition.dirichlet_partition(labels, num_clients,
+                                                samples_per_client, alpha, seed)
+        return cls(data, labels, idx, vocab=vocab)
+
+    # ------------------------------------------------------------- rounds --
+
+    def round_batch(self, key, clients_per_round: int):
+        """Sample K clients, gather raw samples, build two augmented views.
+
+        Returns (client_data pytree (K, n, ...), client_sizes (K,)).
+        """
+        k_sel, k_aug = jax.random.split(key)
+        sel = jax.random.choice(k_sel, self.num_clients, (clients_per_round,),
+                                replace=False)
+        sel = np.asarray(sel)
+        idx = self.client_index[sel]                          # (K, n)
+        k, n = idx.shape
+        out = {}
+        if "images" in self.data:
+            imgs = jnp.asarray(self.data["images"][idx.reshape(-1)])
+            keys = jax.random.split(k_aug, imgs.shape[0])
+            v1, v2 = jax.vmap(augment.two_views_image)(keys, imgs)
+            out["v1"] = v1.reshape(k, n, *v1.shape[1:])
+            out["v2"] = v2.reshape(k, n, *v2.shape[1:])
+        if "tokens" in self.data:
+            toks = jnp.asarray(self.data["tokens"][idx.reshape(-1)])
+            keys = jax.random.split(k_aug, toks.shape[0])
+            v1, v2 = jax.vmap(
+                lambda kk, tt: augment.two_views_tokens(kk, tt, self.vocab)
+            )(keys, toks)
+            out["v1"] = v1.reshape(k, n, *v1.shape[1:])
+            out["v2"] = v2.reshape(k, n, *v2.shape[1:])
+        sizes = jnp.full((k,), n, jnp.int32)
+        return out, sizes
+
+    def flat_round_batch(self, key, clients_per_round: int):
+        """Same sampling, flattened to (K*n, ...) for the fused pod step."""
+        batch, sizes = self.round_batch(key, clients_per_round)
+        flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
+        return flat, sizes

@@ -1,0 +1,1 @@
+from repro.kernels.ops import cco_stats, flash_attention  # noqa: F401

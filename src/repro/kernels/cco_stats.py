@@ -1,0 +1,114 @@
+"""Fused CCO-statistics Pallas TPU kernel.
+
+The DCCO hot spot: per-cohort encoding statistics
+    mean_f, E[f^2], mean_g, E[g^2], E[f g^T]
+over a batch of encodings (N, d). A naive implementation reads the
+encodings from HBM five times (once per statistic); this kernel computes
+all five in ONE pass: each (bn x bd) VMEM tile of zf/zg is loaded once,
+the d x d cross-moment tile goes through the MXU, and the four vector
+moments ride along on the VPU.
+
+Grid: (d_i tiles, d_j tiles, batch tiles) — batch innermost so output
+tiles stay resident in VMEM across the accumulation (revisited-output
+pattern). Vector stats are written by the j==0 (resp. i==0) columns only.
+Block sizes are multiples of 128 to align with MXU/VREG lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _stats_kernel(zf_ref, zg_ref, inv_n_ref,
+                  cross_ref, mean_f_ref, sq_f_ref, mean_g_ref, sq_g_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kb = pl.program_id(2)
+    nk = pl.num_programs(2)
+    inv_n = inv_n_ref[0]
+
+    zf = zf_ref[...].astype(F32)          # (bn, bdi)
+    zg = zg_ref[...].astype(F32)          # (bn, bdj)
+
+    @pl.when(kb == 0)
+    def _init():
+        cross_ref[...] = jnp.zeros_like(cross_ref)
+
+    cross_ref[...] += jax.lax.dot_general(
+        zf, zg, (((0,), (0,)), ((), ())),
+        preferred_element_type=F32) * inv_n
+
+    @pl.when(j == 0)
+    def _f_stats():
+        @pl.when(kb == 0)
+        def _init_f():
+            mean_f_ref[...] = jnp.zeros_like(mean_f_ref)
+            sq_f_ref[...] = jnp.zeros_like(sq_f_ref)
+        mean_f_ref[...] += jnp.sum(zf, axis=0) * inv_n
+        sq_f_ref[...] += jnp.sum(zf * zf, axis=0) * inv_n
+
+    @pl.when(i == 0)
+    def _g_stats():
+        @pl.when(kb == 0)
+        def _init_g():
+            mean_g_ref[...] = jnp.zeros_like(mean_g_ref)
+            sq_g_ref[...] = jnp.zeros_like(sq_g_ref)
+        mean_g_ref[...] += jnp.sum(zg, axis=0) * inv_n
+        sq_g_ref[...] += jnp.sum(zg * zg, axis=0) * inv_n
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def cco_stats_pallas(zf, zg, *, block_n: int = 512, block_d: int = 256,
+                     interpret: bool = False):
+    """zf, zg: (N, d) -> dict of the five statistics (all f32).
+
+    N and d are padded to block multiples internally (zero padding is exact
+    for sums; the 1/N scale uses the true N).
+    """
+    n, d = zf.shape
+    bn = min(block_n, max(n, 8))
+    bd = min(block_d, d)
+    n_p = -(-n // bn) * bn
+    d_p = -(-d // bd) * bd
+    if n_p != n or d_p != d:
+        zf = jnp.pad(zf, ((0, n_p - n), (0, d_p - d)))
+        zg = jnp.pad(zg, ((0, n_p - n), (0, d_p - d)))
+    gi, gj, gk = d_p // bd, d_p // bd, n_p // bn
+    inv_n = jnp.full((1,), 1.0 / n, F32)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((d_p, d_p), F32),   # cross
+        jax.ShapeDtypeStruct((d_p,), F32),       # mean_f
+        jax.ShapeDtypeStruct((d_p,), F32),       # sq_f
+        jax.ShapeDtypeStruct((d_p,), F32),       # mean_g
+        jax.ShapeDtypeStruct((d_p,), F32),       # sq_g
+    )
+    grid = (gi, gj, gk)
+    cross, mean_f, sq_f, mean_g, sq_g = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, kb: (kb, i)),   # zf
+            pl.BlockSpec((bn, bd), lambda i, j, kb: (kb, j)),   # zg
+            pl.BlockSpec((1,), lambda i, j, kb: (0,)),          # inv_n scalar
+        ],
+        out_specs=(
+            pl.BlockSpec((bd, bd), lambda i, j, kb: (i, j)),
+            pl.BlockSpec((bd,), lambda i, j, kb: (i,)),
+            pl.BlockSpec((bd,), lambda i, j, kb: (i,)),
+            pl.BlockSpec((bd,), lambda i, j, kb: (j,)),
+            pl.BlockSpec((bd,), lambda i, j, kb: (j,)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(zf, zg, inv_n)
+    return {
+        "mean_f": mean_f[:d], "sq_f": sq_f[:d],
+        "mean_g": mean_g[:d], "sq_g": sq_g[:d],
+        "cross": cross[:d, :d],
+    }

@@ -1,0 +1,111 @@
+"""Blockwise (flash-style) attention Pallas TPU kernel.
+
+Causal/sliding-window GQA attention with online softmax. The backbone's
+attention hot spot re-tiled for the TPU memory hierarchy: (bq x dh) Q tiles
+and (bkv x dh) K/V tiles staged in VMEM, scores through the MXU, running
+(m, l) statistics in VMEM scratch that persist across the innermost
+(kv-block) grid dimension.
+
+Layout: q (B, H, Sq, Dh); k, v (B, KVH, Skv, Dh); GQA is handled in the
+index_map (query head h reads kv head h // group).
+
+Queries are the last Sq positions of the Skv-long context (covers both
+self-attention Sq == Skv and chunked prefill).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, scale: float, causal: bool, window: int,
+                  bq: int, bkv: int, q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(F32)                       # (bq, dh)
+    k = k_ref[0, 0].astype(F32)                       # (bkv, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale  # (bq, bkv)
+
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kv_pos = ik * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    valid = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        valid &= kv_pos <= q_pos
+    if window > 0:
+        valid &= kv_pos > (q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0].astype(F32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=F32)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "interpret", "scale"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale: float | None = None, block_q: int = 256,
+                           block_kv: int = 512, interpret: bool = False):
+    """q: (B,H,Sq,Dh); k, v: (B,KVH,Skv,Dh) -> (B,H,Sq,Dh)."""
+    b, h, sq, dh = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (
+        f"seq dims ({sq},{skv}) must divide blocks ({bq},{bkv})")
+    grid = (b, h, sq // bq, skv // bkv)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, q_offset=skv - sq)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+            pl.BlockSpec((1, 1, bkv, dh), lambda bb, hh, iq, ik: (bb, hh // (h // kvh), ik, 0)),
+            pl.BlockSpec((1, 1, bkv, dh), lambda bb, hh, iq, ik: (bb, hh // (h // kvh), ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), F32),       # running max
+            pltpu.VMEM((bq,), F32),       # running denom
+            pltpu.VMEM((bq, dh), F32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

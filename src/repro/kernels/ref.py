@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def cco_stats_ref(zf, zg):
+    """Five encoding statistics of the CCO loss (paper Eq. 2-3).
+
+    zf, zg: (N, d). Returns dict of f32: mean_f/sq_f/mean_g/sq_g (d,),
+    cross (d, d)."""
+    zf = zf.astype(F32)
+    zg = zg.astype(F32)
+    n = zf.shape[0]
+    return {
+        "mean_f": zf.mean(0),
+        "sq_f": (zf * zf).mean(0),
+        "mean_g": zg.mean(0),
+        "sq_g": (zg * zg).mean(0),
+        "cross": zf.T @ zg / n,
+    }
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: (B,H,Sq,Dh), k/v: (B,KVH,Skv,Dh) -> (B,H,Sq,Dh).
+
+    Queries are assumed to be the LAST Sq positions of the Skv context
+    (self-attention when Sq == Skv)."""
+    b, h, sq, dh = q.shape
+    kvh, skv = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, kvh, g, sq, dh)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(F32), k.astype(F32)) * scale
+    q_pos = jnp.arange(skv - sq, skv)
+    kv_pos = jnp.arange(skv)
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= kv_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(F32))
+    return o.reshape(b, h, sq, dh).astype(q.dtype)

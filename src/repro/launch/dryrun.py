@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first two lines — before ANY other import — because jax
+# locks the device count on first initialization. Never set this globally
+# (smoke tests / benches must see 1 device).
+#
+# Multi-pod dry-run: AOT lower + compile every (arch x input-shape) on the
+# production mesh; records memory/cost/collective analysis for the roofline.
+# Run as a script: ``PYTHONPATH=src python -m repro.launch.dryrun --all``.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import ARCH_IDS, get_config, get_dual_encoder_config, \
+    TrainConfig  # noqa: E402
+from repro.launch import inputs as inp  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh, HardwareSpec  # noqa: E402
+from repro.models import dual_encoder, transformer  # noqa: E402
+from repro.optim import optimizers as opt_lib  # noqa: E402
+from repro.sharding import specs as shard_specs  # noqa: E402
+
+SDS = jax.ShapeDtypeStruct
+DRYRUN_ARCHS = tuple(a for a in ARCH_IDS if a != "resnet14-cifar")
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "dryrun_results.json")
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>(?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _split_computations(hlo_text: str):
+    """Split post-optimization HLO text into {name: block_text}."""
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        st = line.strip()
+        if (st.startswith("%") or st.startswith("ENTRY")) and st.endswith("{") \
+                and "(" in st and "->" in st:
+            name = st.split()[1] if st.startswith("ENTRY") else st.split()[0]
+            cur_name = name.lstrip("%").split(" ")[0]
+            cur_lines = []
+        elif st == "}" and cur_name is not None:
+            comps[cur_name] = "\n".join(cur_lines)
+            cur_name = None
+        elif cur_name is not None:
+            cur_lines.append(line)
+    return comps
+
+
+_WHILE_RE = re.compile(r"while\([^)]*\),\s*condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _line_bytes(text: str) -> float:
+    bytes_ = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return bytes_
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective bytes from the post-SPMD HLO, **scaled by while-
+    loop trip counts** (XLA text lists each loop body once; jax scans lower
+    to whiles whose bound is an s32 constant in the condition computation).
+
+    Ring-model wire estimate: all-reduce ~ 2x payload; others ~ 1x.
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    for name in comps:
+        if name.startswith("main"):
+            entry = name
+    if entry is None:  # fallback: treat whole text as one block
+        comps = {"main": hlo_text}
+        entry = "main"
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(x) for x in _TRIP_RE.findall(comps.get(cond_name, ""))]
+        consts = [c for c in consts if c > 1]
+        return max(consts) if consts else 1
+
+    per_op: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    wire = 0.0
+    seen = set()
+
+    def visit(name: str, mult: float):
+        nonlocal wire
+        if (name, mult) in seen or name not in comps:
+            return
+        seen.add((name, mult))
+        block = comps[name]
+        for m in _COLL_RE.finditer(block):
+            if "-done(" in m.group(0):
+                continue
+            op = m.group("op")
+            b = _line_bytes(m.group("type")) * mult
+            per_op[op] = per_op.get(op, 0.0) + b
+            count[op] = count.get(op, 0) + 1
+            wire += b * (2.0 if op == "all-reduce" else 1.0)
+        for wm in _WHILE_RE.finditer(block):
+            cond, body = wm.group(1), wm.group(2)
+            visit(body, mult * trip_count(cond))
+
+    visit(entry, 1.0)
+    return {"bytes_by_op": per_op, "count_by_op": count, "wire_bytes": wire,
+            "total_bytes": sum(per_op.values())}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _eval_shape_params(cfg, de_cfg, train: bool):
+    key = SDS((2,), jnp.uint32)
+    if train:
+        fn = lambda k: dual_encoder.init_dual_encoder(k, cfg, de_cfg)
+    else:
+        fn = lambda k: transformer.init_params(cfg, k)
+    return jax.eval_shape(fn, key)
+
+
+def build_case(arch: str, shape_name: str, mesh, *, dcco_impl: str = "fused",
+               remat: str = "auto", num_microbatches: int = 16,
+               sharding: str = "tp", parallel_block: bool = False,
+               kv_int8: bool = False, moe_group: int = 512):
+    """Returns (step_fn, in_args_sds, in_shardings, out_shardings).
+
+    Baseline training memory policy (required to fit 16 GiB v5e HBM at
+    batch 256 x 4k x two views): remat on the layer scan + exact DCCO
+    microbatching (stats pass then grad pass — Appendix A makes this
+    lossless; see steps.make_dcco_train_step).
+    """
+    shape = inp.INPUT_SHAPES[shape_name]
+    if remat == "auto":
+        remat = "full" if shape.kind == "train" else "none"
+    cfg = get_config(arch).replace(dtype="bfloat16", attn_impl="blockwise",
+                                   remat=remat, parallel_block=parallel_block,
+                                   kv_cache_dtype="int8" if kv_int8 else "model")
+    cfg = inp.arch_variant_for_shape(cfg, shape)
+    de_cfg = get_dual_encoder_config(arch)
+    ax = shard_specs.data_axes(mesh)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(seq_len=shape.seq_len, global_batch=shape.global_batch,
+                           samples_per_client=1, dcco_impl=dcco_impl)
+        opt = opt_lib.adam(5e-3)
+        all_axes = tuple(mesh.axis_names)
+        data_ax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        if sharding == "fsdp":
+            # batch spread over every axis -> per-device activations shrink
+            # by the model-axis factor; exact microbatching becomes
+            # unnecessary (1 seq/device already fits with remat). Activation
+            # shardings are pinned so SPMD gathers weights, not activations.
+            num_microbatches = 1
+            n_super = cfg.num_superblocks
+            chunks = next((c for c in (6, 4, 3, 2) if n_super % c == 0), 1)
+            cfg = cfg.replace(act_shard_axes=tuple(mesh.axis_names),
+                              layer_chunks=chunks,
+                              fsdp_model_size=dict(zip(
+                                  mesh.axis_names,
+                                  mesh.devices.shape))["model"])
+        if dcco_impl == "shard_map":
+            # protocol-faithful device-level DCCO: local stats -> explicit
+            # psum over the data axes -> stop-grad combine (Fig. 2 on wire).
+            # shard_map needs the concrete mesh; microbatching is bypassed.
+            num_microbatches = 1
+        step = steps_lib.make_dcco_train_step(
+            cfg, de_cfg, tcfg, opt, num_microbatches=num_microbatches,
+            constrain_sharding=True, data_axes=data_ax,
+            mesh=mesh if dcco_impl == "shard_map" else None)
+        params_sds = _eval_shape_params(cfg, de_cfg, train=True)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        batch_sds = inp.train_input_specs(cfg, shape)
+        pspecs = shard_specs.param_pspecs(params_sds, mesh, mode=sharding)
+        ospecs = shard_specs.opt_state_pspecs(
+            shard_specs.param_pspecs(opt_sds, mesh, mode=sharding),
+            opt_sds, mesh)  # ZeRO-1
+        total_dev = int(np.prod(mesh.devices.shape))
+        def _bspec(x):
+            if sharding == "fsdp" and x.shape[0] % total_dev == 0:
+                return P(all_axes, *([None] * (x.ndim - 1)))
+            return shard_specs.batch_pspec(mesh, x.ndim, x.shape[0])
+        bspecs = jax.tree.map(_bspec, batch_sds)
+        mspecs = {"loss": P(), "encoding_std": P()}
+        in_sh = (_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, bspecs))
+        out_sh = (_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, mspecs))
+        return step, (params_sds, opt_sds, batch_sds), in_sh, out_sh
+
+    if shape.kind == "prefill":
+        if sharding == "fsdp":
+            # inference FSDP: weights stay model-sharded as storage and are
+            # gathered once per layer; activations pinned batch-over-data.
+            n_super = cfg.num_superblocks
+            chunks = next((c for c in (6, 4, 3, 2) if n_super % c == 0), 1)
+            cfg = cfg.replace(
+                act_shard_axes=("pod", "data") if "pod" in mesh.axis_names
+                else ("data",),
+                layer_chunks=chunks,
+                fsdp_model_size=dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))["model"])
+        step = steps_lib.make_prefill_step(cfg, max_len=shape.seq_len)
+        params_sds = _eval_shape_params(cfg, de_cfg, train=False)
+        batch_sds = inp.prefill_input_specs(cfg, shape)
+        pspecs = shard_specs.param_pspecs(params_sds, mesh, mode=sharding)
+        bspecs = jax.tree.map(lambda x: shard_specs.batch_pspec(mesh, x.ndim, x.shape[0]), batch_sds)
+        in_sh = (_named(mesh, pspecs), _named(mesh, bspecs))
+        return step, (params_sds, batch_sds), in_sh, None
+
+    # decode
+    step = steps_lib.make_serve_step(cfg)
+    params_sds = _eval_shape_params(cfg, de_cfg, train=False)
+    cache_sds = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch, shape.seq_len))
+    batch_sds = inp.decode_input_specs(cfg, shape)
+    pspecs = shard_specs.param_pspecs(params_sds, mesh)
+    seq_shard = shape.global_batch == 1
+    cspecs = shard_specs.cache_pspecs(cache_sds, mesh, seq_shard=seq_shard)
+    bspecs = jax.tree.map(lambda x: shard_specs.batch_pspec(mesh, x.ndim, x.shape[0]), batch_sds)
+    logits_spec = shard_specs.batch_pspec(mesh, 2, shape.global_batch)
+    in_sh = (_named(mesh, pspecs), _named(mesh, cspecs), _named(mesh, bspecs))
+    out_sh = (_named(mesh, logits_spec), _named(mesh, cspecs))
+    return step, (params_sds, cache_sds, batch_sds), in_sh, out_sh
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool, **kw) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    step, args, in_sh, out_sh = build_case(arch, shape_name, mesh, **kw)
+    # donation: decode donates the cache (in-place update); train donates
+    # params+opt state (outputs alias inputs). Halves the respective temps.
+    kind = inp.INPUT_SHAPES[shape_name].kind
+    donate = (1,) if kind == "decode" else (0, 1) if kind == "train" else ()
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {k: int(getattr(mem, k)) for k in
+                   ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes")
+                   if hasattr(mem, k)}
+    except Exception as e:  # CPU backend may not implement it fully
+        mem_rec = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis() or {}
+        cost_rec = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float)) and (
+                        "flops" in k or "bytes" in k or "utilization" in k.lower())}
+        flops = float(cost.get("flops", 0.0))
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:
+        cost_rec, flops, bytes_accessed = {"error": str(e)}, 0.0, 0.0
+    coll = collective_stats(compiled.as_text())
+    chips = int(np.prod(mesh.devices.shape))
+    hw = HardwareSpec
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "chips": chips, "compile_s": round(t1 - t0, 2),
+        "memory": mem_rec, "cost": cost_rec,
+        "flops_per_device": flops, "bytes_per_device": bytes_accessed,
+        "collectives": coll,
+        "roofline": {
+            "compute_s": flops / hw.PEAK_FLOPS_BF16,
+            "memory_s": bytes_accessed / hw.HBM_BW,
+            "collective_s": coll["wire_bytes"] / hw.ICI_BW,
+        },
+    }
+    terms = rec["roofline"]
+    rec["roofline"]["dominant"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    return rec
+
+
+def load_results(path: str) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_PATH))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--dcco-impl", default="fused")
+    ap.add_argument("--remat", default="auto")
+    ap.add_argument("--micro", type=int, default=16)
+    ap.add_argument("--sharding", choices=["tp", "fsdp"], default="tp")
+    ap.add_argument("--parallel-block", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--bf16-comm", action="store_true",
+                    help="bf16 matmul partial sums -> bf16 TP all-reduces")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(DRYRUN_ARCHS)
+    shapes = [args.shape] if args.shape else list(inp.INPUT_SHAPES)
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+    results = load_results(args.out)
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in pods:
+                key = f"{args.tag}/{arch}/{shape_name}/{'multi' if mp else 'single'}"
+                if key in results and not args.force:
+                    print(f"[skip cached] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                if args.bf16_comm:
+                    from repro.models import common as common_mod
+                    common_mod.set_matmul_preferred(jnp.bfloat16)
+                try:
+                    rec = run_case(arch, shape_name, mp,
+                                   dcco_impl=args.dcco_impl, remat=args.remat,
+                                   num_microbatches=args.micro,
+                                   sharding=args.sharding,
+                                   parallel_block=args.parallel_block,
+                                   kv_int8=args.kv_int8)
+                    results[key] = rec
+                    r = rec["roofline"]
+                    print(f"  ok compile={rec['compile_s']}s "
+                          f"compute={r['compute_s']:.4f}s mem={r['memory_s']:.4f}s "
+                          f"coll={r['collective_s']:.4f}s dom={r['dominant']}",
+                          flush=True)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((key, str(e)))
+                    results[key] = {"error": str(e), "arch": arch,
+                                    "shape": shape_name, "multi_pod": mp}
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"done. {len(failures)} failures")
+    for k, e in failures:
+        print(" FAIL", k, e[:200])
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for every model
+input (no device allocation — the dry-run lowers/compiles against these).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# long-context policy per attention family (see DESIGN.md §4):
+#   gqa  -> sliding-window 8192 variant (ring-buffer cache)
+#   mla  -> full latent cache (memory/step-compute are linear already)
+#   ssm  -> native O(1) state
+LONG_CONTEXT_WINDOW = 8192
+
+
+def arch_variant_for_shape(cfg, shape: InputShape):
+    """Apply the long-context variant where required."""
+    if shape.name == "long_500k" and not cfg.use_mla \
+            and any(k == "attn" for k in cfg.block_pattern):
+        return cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _tok(batch, seq):
+    return SDS((batch, seq), jnp.int32)
+
+
+def train_input_specs(cfg, shape: InputShape):
+    """Two augmented views for the DCCO dual-encoder train step.
+
+    VLM (Fig. 1c): view1 = text tokens of the full seq_len; view2 = the
+    vision tower input (stub patch embeddings + 1 BOS token).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.modality == "vision_text":
+        return {
+            "view1": {"tokens": _tok(b, s)},
+            "view2": {"tokens": _tok(b, 1),
+                      "patch_embeds": SDS((b, cfg.vis_patches, cfg.vis_dim),
+                                          jnp.bfloat16)},
+        }
+    return {"view1": {"tokens": _tok(b, s)}, "view2": {"tokens": _tok(b, s)}}
+
+
+def prefill_input_specs(cfg, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.modality == "vision_text":
+        return {"tokens": _tok(b, s - cfg.vis_patches),
+                "patch_embeds": SDS((b, cfg.vis_patches, cfg.vis_dim), jnp.bfloat16)}
+    return {"tokens": _tok(b, s)}
+
+
+def decode_input_specs(cfg, shape: InputShape):
+    return {"tokens": _tok(shape.global_batch, 1)}
+
+
+def sds_tree(tree):
+    """Concrete pytree -> ShapeDtypeStruct pytree."""
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)

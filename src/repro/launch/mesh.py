@@ -1,0 +1,28 @@
+"""Production mesh construction (TPU v5e, 256 chips/pod).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (host) devices exist — used by tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+class HardwareSpec:
+    """TPU v5e constants used by the roofline analysis (benchmarks/roofline)."""
+    PEAK_FLOPS_BF16 = 197e12        # per chip
+    HBM_BW = 819e9                  # bytes/s per chip
+    ICI_BW = 50e9                   # bytes/s per link
+    HBM_BYTES = 16 * 2**30          # 16 GiB per chip

@@ -1,0 +1,173 @@
+"""Step builders: DCCO train step (the paper's technique at pod scale),
+prefill and serve (decode) steps. Pure functions of (cfg, de_cfg, tcfg) so
+the dry-run can lower them AOT against ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cco, dcco
+from repro.models import dual_encoder, transformer
+from repro.optim import optimizers as opt_lib
+
+F32 = jnp.float32
+
+
+def make_dcco_train_step(cfg, de_cfg, tcfg, server_opt, mesh=None,
+                         data_axes=("data",), num_microbatches: int = 1,
+                         constrain_sharding: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). One federated DCCO round == one step (Appendix-A theorem);
+    the client axis is the leading batch dim, sharded over (pod, data).
+
+    num_microbatches > 1 enables EXACT microbatched large-batch CCO: the
+    paper's statistics-aggregation trick applied inside the device —
+    phase 1 scans microbatches accumulating the five statistics (no
+    activations kept), phase 2 scans again taking per-microbatch gradients
+    of L_CCO(local + sg(agg - local)); by Appendix A their average IS the
+    full-batch gradient. Costs one extra forward (~33% FLOPs) and cuts
+    live activation memory by the microbatch factor. (A naive microbatched
+    CCO would compute small-batch statistics — exactly the degradation the
+    paper exists to avoid.)
+    """
+    lam = de_cfg.lambda_cco
+    clients = 0
+    if tcfg.dcco_impl == "per_client":
+        clients = tcfg.global_batch // tcfg.samples_per_client
+
+    def add_aux(loss, aux):
+        if cfg.moe is not None and cfg.moe.num_experts > 0:
+            loss = loss + cfg.moe.balance_weight * aux["balance"] \
+                + 1e-4 * aux["router_z"]
+        return loss
+
+    def loss_fn(params, batch):
+        zf, zg, aux = dual_encoder.encode_pair(cfg, de_cfg, params,
+                                               batch["view1"], batch["view2"])
+        loss = add_aux(dcco.dcco_loss(zf, zg, lam, impl=tcfg.dcco_impl,
+                                      clients=clients, mesh=mesh,
+                                      data_axes=data_axes), aux)
+        metrics = {"loss": loss,
+                   "encoding_std": jnp.sqrt(jnp.var(zf, axis=0) + 1e-8).mean()}
+        return loss, metrics
+
+    def single_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        updates, opt_state = server_opt.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    if num_microbatches <= 1:
+        return single_step
+
+    def micro_step(params, opt_state, batch):
+        nm = num_microbatches
+        micro = jax.tree.map(
+            lambda x: x.reshape((nm, x.shape[0] // nm) + x.shape[1:]), batch)
+        if constrain_sharding:
+            # keep the per-microbatch batch dim sharded over (pod, data) —
+            # XLA's reshape propagation otherwise replicates it and the
+            # remat-saved activations blow up by the data-parallel factor
+            from jax.sharding import PartitionSpec as P
+            ax = data_axes if len(data_axes) > 1 else data_axes[0]
+            micro = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, P(None, ax, *([None] * (x.ndim - 2)))), micro)
+
+        # phase 1: accumulate global statistics (forward only, no residuals)
+        def stats_body(acc, mb):
+            zf, zg, _ = dual_encoder.encode_pair(cfg, de_cfg, params,
+                                                 mb["view1"], mb["view2"])
+            st = cco.encoding_stats(zf, zg)
+            return jax.tree.map(lambda a, s: a + s / nm, acc, st), None
+
+        d_out = de_cfg.proj_dims[-1]
+        zero_stats = {"mean_f": jnp.zeros((d_out,), F32),
+                      "sq_f": jnp.zeros((d_out,), F32),
+                      "mean_g": jnp.zeros((d_out,), F32),
+                      "sq_g": jnp.zeros((d_out,), F32),
+                      "cross": jnp.zeros((d_out, d_out), F32)}
+        agg, _ = jax.lax.scan(stats_body, zero_stats, micro)
+        agg = jax.lax.stop_gradient(agg)
+
+        # phase 2: per-microbatch gradients with combined statistics.
+        # Each view's tower is wrapped in jax.checkpoint: only the pooled
+        # encodings are saved across the loss; towers are recomputed one at
+        # a time in the backward pass, so a single view's activations are
+        # live at any moment (2x less residual memory for +1 forward).
+        def mb_loss(p, mb):
+            enc_f = jax.checkpoint(
+                lambda pp, v: dual_encoder.encode(cfg, de_cfg, pp, v, tower="f"))
+            enc_g = jax.checkpoint(
+                lambda pp, v: dual_encoder.encode(cfg, de_cfg, pp, v, tower="g"))
+            zf, aux1 = enc_f(p, mb["view1"])
+            zg, aux2 = enc_g(p, mb["view2"])
+            aux = {k: aux1[k] + aux2[k] for k in aux1}
+            local = cco.encoding_stats(zf, zg)
+            combined = cco.dcco_combine(local, agg)
+            loss = add_aux(cco.cco_loss_from_stats(combined, lam), aux)
+            std = jnp.sqrt(jnp.var(zf, axis=0) + 1e-8).mean()
+            return loss, std
+
+        def grad_body(acc, mb):
+            (loss, std), g = jax.value_and_grad(mb_loss, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, gi: a + gi.astype(F32) / nm, acc, g)
+            return acc, (loss, std)
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        grads, (losses_m, stds) = jax.lax.scan(grad_body, zero_g, micro)
+        updates, opt_state = server_opt.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        metrics = {"loss": losses_m.mean(), "encoding_std": stds.mean()}
+        return params, opt_state, metrics
+
+    return micro_step
+
+
+def make_prefill_step(cfg, max_len: int):
+    """prefill_step(tower_params, batch) -> (last_logits, cache)."""
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        cache = transformer.init_cache(cfg, b, max_len)
+        return transformer.prefill(cfg, params, tokens, cache,
+                                   patch_embeds=batch.get("patch_embeds"))
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """serve_step(tower_params, cache, batch) -> (logits, cache).
+
+    One new token against a pre-populated KV cache/recurrent state.
+    """
+
+    def serve_step(params, cache, batch):
+        return transformer.decode_step(cfg, params, cache, batch["tokens"])
+
+    return serve_step
+
+
+def make_lm_train_step(cfg, server_opt):
+    """Plain next-token LM training step (used by examples & finetuning)."""
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        h = transformer.forward(cfg, params, tokens[:, :-1])
+        logits = transformer.logits_from_hidden(cfg, params, h)
+        logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tokens[:, 1:][..., None], axis=-1)[..., 0]
+        return nll.mean()
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, opt_state = server_opt.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return step

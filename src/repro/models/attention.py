@@ -1,0 +1,385 @@
+"""Attention: GQA (+qk_norm, RoPE, sliding window) and MLA (DeepSeek-V2).
+
+Two XLA implementations are provided:
+  * ``naive``      — materializes (B,H,Sq,Skv) scores; fine for short seq.
+  * ``blockwise``  — flash-style online-softmax over KV blocks, scanned over
+                     Q blocks; O(Sq·block) live memory. This is the XLA
+                     analogue of the Pallas kernel in repro/kernels/flash.
+
+Decode uses a KV cache; sliding-window decode uses a ring buffer of size W so
+``long_500k`` decode state is O(W), not O(S). MLA caches the compressed
+latent (kv_lora + rope dims per token) instead of full K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+from repro.models.common import F32, linear, linear_init, rmsnorm, rmsnorm_init, apply_rope
+
+NEG_INF = -1e30
+
+
+# =========================================================================
+# masking helpers
+# =========================================================================
+
+def _mask(q_pos, kv_pos, window: int):
+    """(..., Sq, Skv) boolean validity. q_pos: (...,Sq), kv_pos: (...,Skv)."""
+    m = kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        m &= kv_pos[..., None, :] > (q_pos[..., :, None] - window)
+    m &= kv_pos[..., None, :] >= 0          # ring-buffer slots not yet written
+    return m
+
+
+# =========================================================================
+# core attention math (shared by GQA and MLA paths)
+# =========================================================================
+
+def naive_attention(q, k, v, q_pos, kv_pos, window: int = 0, scale: float | None = None):
+    """q: (B,Sq,H,Dh) k: (B,Skv,KVH,Dk) v: (B,Skv,KVH,Dv); H % KVH == 0."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=F32) * scale
+    m = _mask(q_pos, kv_pos, window)[:, None, None]          # (B,1,1,Sq,Skv)
+    scores = jnp.where(m, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v, preferred_element_type=F32)
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, q_pos, kv_pos, window: int = 0,
+                        kv_block: int = 1024, scale: float | None = None,
+                        unroll: int = 1):
+    """Flash-style attention: online softmax scanned over KV blocks.
+
+    Q is processed whole — with batch sharded over (pod,data) and heads over
+    `model`, per-device score blocks are (B/dp, Sq, H/mp, kv_block), which
+    fits HBM for every assigned shape. Same semantics as naive_attention.
+    All reductions in f32.
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+
+    kv_block = min(kv_block, skv)
+    skv_p = -(-skv // kv_block) * kv_block
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, skv_p - skv)), constant_values=-2)
+    nkv = skv_p // kv_block
+    qg = q.reshape(b, sq, kvh, g, dh)
+    ks = k.reshape(b, nkv, kv_block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nkv, kv_block, kvh, dv).transpose(1, 0, 2, 3, 4)
+    kps = kv_pos.reshape(b, nkv, kv_block).transpose(1, 0, 2)
+
+    def kv_step(carry, kb):
+        acc, m_run, l_run = carry
+        ki, vi, kpi = kb
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ki,
+                       preferred_element_type=F32) * scale     # (B,KVH,G,Sq,kvb)
+        valid = _mask(q_pos, kpi, window)[:, None, None]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vi.dtype), vi,
+                        preferred_element_type=F32)
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kvh, g, sq, dv), F32)
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, F32)
+    l0 = jnp.zeros((b, kvh, g, sq), F32)
+    # flash semantics: recompute scores/probabilities in the backward pass
+    # instead of saving the (Sq x kv_block) f32 tensors per block
+    (acc, m_run, l_run), _ = jax.lax.scan(
+        jax.checkpoint(kv_step, prevent_cse=False),
+        (acc0, m0, l0), (ks, vs, kps), unroll=unroll)
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]           # (B,KVH,G,Sq,Dv)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attention_math(cfg, q, k, v, q_pos, kv_pos, scale=None):
+    window = cfg.sliding_window
+    if cfg.attn_impl == "blockwise" and q.shape[1] > 1:
+        return blockwise_attention(q, k, v, q_pos, kv_pos, window,
+                                   kv_block=cfg.attn_block, scale=scale)
+    return naive_attention(q, k, v, q_pos, kv_pos, window, scale=scale)
+
+
+# =========================================================================
+# GQA block
+# =========================================================================
+
+def gqa_init(key, cfg, dtype):
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], d, h * dh, dtype),
+        "wk": linear_init(ks[1], d, kvh * dh, dtype),
+        "wv": linear_init(ks[2], d, kvh * dh, dtype),
+        "wo": linear_init(ks[3], h * dh, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _gqa_qkv(cfg, p, x, positions):
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, h, dh)
+    k = linear(p["wk"], x).reshape(b, s, kvh, dh)
+    v = linear(p["wv"], x).reshape(b, s, kvh, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(cfg, p, x, positions):
+    """Self-attention over a full sequence. x: (B,S,D); positions: (B,S)."""
+    b, s, _ = x.shape
+    q, k, v = _gqa_qkv(cfg, p, x, positions)
+    out = attention_math(cfg, q, k, v, positions, positions)
+    return linear(p["wo"], out.reshape(b, s, -1))
+
+
+def _quantize_kv(x):
+    """Per-(position, head) max-abs int8 quantization. x: (B,S,KVH,Dh)."""
+    scale = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(F32)
+
+
+def _dequantize_kv(q, scale, dtype):
+    return (q.astype(F32) * scale[..., None]).astype(dtype)
+
+
+def gqa_cache_init(cfg, batch: int, max_len: int, dtype):
+    kvh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((batch, w, kvh, dh), jnp.int8),
+            "v": jnp.zeros((batch, w, kvh, dh), jnp.int8),
+            "k_scale": jnp.zeros((batch, w, kvh), F32),
+            "v_scale": jnp.zeros((batch, w, kvh), F32),
+            "kv_pos": jnp.full((batch, w), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, w, kvh, dh), dtype),
+        "v": jnp.zeros((batch, w, kvh, dh), dtype),
+        "kv_pos": jnp.full((batch, w), -1, jnp.int32),
+    }
+
+
+def _cache_write(cfg, cache, k, v, positions, slot):
+    """Write k/v (B,S,KVH,Dh) into the cache at slot (ring index or 0)."""
+    upd = {"kv_pos": jax.lax.dynamic_update_slice_in_dim(
+        cache["kv_pos"], positions, slot, axis=1)}
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        upd["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
+        upd["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
+        upd["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks, slot, axis=1)
+        upd["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs, slot, axis=1)
+    else:
+        upd["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        upd["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    return upd
+
+
+def _cache_read(cfg, cache, dtype):
+    if cfg.kv_cache_dtype == "int8":
+        return (_dequantize_kv(cache["k"], cache["k_scale"], dtype),
+                _dequantize_kv(cache["v"], cache["v_scale"], dtype))
+    return cache["k"], cache["v"]
+
+
+def gqa_prefill(cfg, p, x, positions, cache):
+    """Full-sequence forward that also fills the cache (positions start at 0).
+
+    Attention runs on the full-precision K/V; the cache stores the
+    (possibly int8-quantized) copies — standard serving practice."""
+    b, s, _ = x.shape
+    q, k, v = _gqa_qkv(cfg, p, x, positions)
+    out = attention_math(cfg, q, k, v, positions, positions)
+    w = cache["k"].shape[1]
+    if s >= w:  # keep last w entries (ring consistent: slot = pos % w)
+        tail_pos = positions[:, s - w:]
+        idx = tail_pos[0] % w
+        k_t, v_t = k[:, s - w:], v[:, s - w:]
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks = _quantize_kv(k_t)
+            vq, vs = _quantize_kv(v_t)
+            cache = {
+                "k": cache["k"].at[:, idx].set(kq),
+                "v": cache["v"].at[:, idx].set(vq),
+                "k_scale": cache["k_scale"].at[:, idx].set(ks),
+                "v_scale": cache["v_scale"].at[:, idx].set(vs),
+                "kv_pos": cache["kv_pos"].at[:, idx].set(tail_pos),
+            }
+        else:
+            cache = {
+                "k": cache["k"].at[:, idx].set(k_t),
+                "v": cache["v"].at[:, idx].set(v_t),
+                "kv_pos": cache["kv_pos"].at[:, idx].set(tail_pos),
+            }
+    else:
+        cache = _cache_write(cfg, cache, k, v, positions, 0)
+    return linear(p["wo"], out.reshape(b, s, -1)), cache
+
+
+def gqa_decode(cfg, p, x, pos, cache):
+    """One-token decode. x: (B,1,D); pos: () int32 current position."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _gqa_qkv(cfg, p, x, positions)
+    w = cache["k"].shape[1]
+    slot = pos % w
+    cache = dict(cache, **_cache_write(cfg, cache, k, v, positions, slot))
+    k_full, v_full = _cache_read(cfg, cache, k.dtype)
+    out = naive_attention(q, k_full, v_full, positions, cache["kv_pos"],
+                          cfg.sliding_window)
+    return linear(p["wo"], out.reshape(b, 1, -1)), cache
+
+
+# =========================================================================
+# MLA (multi-head latent attention, DeepSeek-V2) block
+# =========================================================================
+
+def mla_init(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    r, dr, dn, dv = cfg.kv_lora_rank, cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": linear_init(ks[0], d, h * (dn + dr), dtype),
+        "w_dkv": linear_init(ks[1], d, r + dr, dtype),      # latent + shared rope key
+        "kv_norm": rmsnorm_init(r),
+        "w_uk": linear_init(ks[2], r, h * dn, dtype),
+        "w_uv": linear_init(ks[3], r, h * dv, dtype),
+        "wo": linear_init(ks[4], h * dv, d, dtype),
+    }
+    return p
+
+
+def _mla_latent(cfg, p, x, positions):
+    """Returns (latent (B,S,r) normalized, k_rope (B,S,1,dr) rotated)."""
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ckv = linear(p["w_dkv"], x)
+    latent, k_rope = ckv[..., :r], ckv[..., r:]
+    latent = rmsnorm(p["kv_norm"], latent, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+    return latent, k_rope
+
+
+def _mla_q(cfg, p, x, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = linear(p["wq"], x).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_expand_kv(cfg, p, latent, k_rope):
+    """Materialize per-head K (nope+rope) and V from the latent."""
+    b, s, _ = latent.shape
+    h, dn, dv = cfg.num_heads, cfg.qk_nope_head_dim, cfg.v_head_dim
+    k_nope = linear(p["w_uk"], latent).reshape(b, s, h, dn)
+    v = linear(p["w_uv"], latent).reshape(b, s, h, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, k_rope.shape[-1]))], -1)
+    return k, v
+
+
+def mla_forward(cfg, p, x, positions):
+    b, s, _ = x.shape
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    latent, k_rope = _mla_latent(cfg, p, x, positions)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    k, v = _mla_expand_kv(cfg, p, latent, k_rope)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    out = attention_math(cfg, q, k, v, positions, positions, scale=scale)
+    return linear(p["wo"], out.reshape(b, s, -1))
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, dtype):
+    return {
+        "latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        "kv_pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def mla_prefill(cfg, p, x, positions, cache):
+    out = mla_forward(cfg, p, x, positions)
+    latent, k_rope = _mla_latent(cfg, p, x, positions)
+    s = x.shape[1]
+    cache = {
+        "latent": jax.lax.dynamic_update_slice_in_dim(cache["latent"], latent, 0, axis=1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope[:, :, 0, :], 0, axis=1),
+        "kv_pos": jax.lax.dynamic_update_slice_in_dim(cache["kv_pos"], positions, 0, axis=1),
+    }
+    return out, cache
+
+
+def mla_decode(cfg, p, x, pos, cache, absorb: bool = True):
+    """One-token MLA decode.
+
+    absorb=True uses the weight-absorption trick: attention runs directly in
+    the latent space (scores = (q_nope W_uk^T) · latent), so the cached latent
+    is never expanded to per-head K/V — per-step HBM traffic drops from
+    O(S·h·(dn+dv)) to O(S·(r+dr)). absorb=False is the naive baseline that
+    expands the full cache every step; kept for §Perf comparison.
+    """
+    b = x.shape[0]
+    h, dn, dv, r, dr = (cfg.num_heads, cfg.qk_nope_head_dim, cfg.v_head_dim,
+                        cfg.kv_lora_rank, cfg.qk_rope_head_dim)
+    scale = 1.0 / np.sqrt(dn + dr)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    latent, k_rope = _mla_latent(cfg, p, x, positions)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    cache = {
+        "latent": jax.lax.dynamic_update_slice_in_dim(cache["latent"], latent, pos, axis=1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope[:, :, 0, :], pos, axis=1),
+        "kv_pos": jax.lax.dynamic_update_slice_in_dim(cache["kv_pos"], positions, pos, axis=1),
+    }
+    lat, krope_c, kv_pos = cache["latent"], cache["k_rope"], cache["kv_pos"]
+    if absorb:
+        wuk = p["w_uk"]["w"].reshape(r, h, dn)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wuk, preferred_element_type=F32)
+        s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(lat.dtype), lat,
+                           preferred_element_type=F32)
+        s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope, krope_c, preferred_element_type=F32)
+        scores = (s_lat + s_rope) * scale
+        m = _mask(positions, kv_pos, 0)[:, None]
+        scores = jnp.where(m, scores, NEG_INF)
+        pr = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", pr.astype(lat.dtype), lat,
+                           preferred_element_type=F32)         # (B,1,h,r)
+        wuv = p["w_uv"]["w"].reshape(r, h, dv)
+        out = jnp.einsum("bqhr,rhd->bqhd", o_lat.astype(x.dtype), wuv,
+                         preferred_element_type=F32).astype(x.dtype)
+    else:
+        k, v = _mla_expand_kv(cfg, p, lat, krope_c[:, :, None, :])
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        out = naive_attention(q, k, v, positions, kv_pos, 0, scale=scale)
+    return linear(p["wo"], out.reshape(b, 1, -1)), cache

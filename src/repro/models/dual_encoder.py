@@ -1,0 +1,85 @@
+"""Dual encoding model (paper Fig. 1): tower(s) + pooling + projection head.
+
+Supports the three wirings in the paper:
+  (a) shared tower, two augmented views of the same input  (self-supervised)
+  (b) two different towers over two views
+  (c) two modality-specific towers (VLM: vision patches vs text tokens)
+
+The projection network follows Sec 4.2: a 3-layer MLP that *increases*
+dimensionality before the CCO loss and is discarded downstream.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer, resnet as resnet_mod
+from repro.models.common import F32, dtype_of, mlp, mlp_init
+
+
+def is_resnet(cfg) -> bool:
+    return getattr(cfg, "family", "") == "resnet"
+
+
+def init_dual_encoder(key, cfg, de_cfg):
+    k_tower, k_tower2, k_proj, k_proj2 = jax.random.split(key, 4)
+    dtype = dtype_of(cfg.dtype)
+    if is_resnet(cfg):
+        tower = resnet_mod.resnet_init(k_tower, cfg, dtype)
+        d_enc = cfg.resnet_channels[-1]
+    else:
+        tower = transformer.init_params(cfg, k_tower)
+        d_enc = cfg.d_model
+    params: Dict[str, Any] = {
+        "tower": tower,
+        "proj": mlp_init(k_proj, (d_enc,) + tuple(de_cfg.proj_dims), dtype, bias=True),
+    }
+    if not de_cfg.shared_towers:
+        if is_resnet(cfg):
+            params["tower_g"] = resnet_mod.resnet_init(k_tower2, cfg, dtype)
+        else:
+            params["tower_g"] = transformer.init_params(cfg, k_tower2)
+        params["proj_g"] = mlp_init(k_proj2, (d_enc,) + tuple(de_cfg.proj_dims),
+                                    dtype, bias=True)
+    return params
+
+
+def _pool(hidden, mask=None):
+    """Mean-pool token encodings -> (B, D) in f32."""
+    h = hidden.astype(F32)
+    if mask is not None:
+        m = mask.astype(F32)[..., None]
+        return (h * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+    return h.mean(axis=1)
+
+
+def encode(cfg, de_cfg, params, view, tower: str = "f"):
+    """Encode one view -> (z (B, d_proj) f32, aux dict).
+
+    view: dict with 'tokens' (B,S) and/or 'patch_embeds' (B,P,vis_dim) and/or
+    'images' (B,H,W,C) for the resnet tower; optional 'mask' (B,S).
+    """
+    tower_p = params["tower"] if (tower == "f" or de_cfg.shared_towers) \
+        else params["tower_g"]
+    proj_p = params["proj"] if (tower == "f" or de_cfg.shared_towers) \
+        else params["proj_g"]
+    aux = {"balance": jnp.zeros((), F32), "router_z": jnp.zeros((), F32)}
+    if is_resnet(cfg):
+        pooled = resnet_mod.resnet_forward(cfg, tower_p, view["images"])
+    else:
+        hidden, aux = transformer.forward(
+            cfg, tower_p, view["tokens"],
+            patch_embeds=view.get("patch_embeds"), return_aux=True)
+        pooled = _pool(hidden, view.get("mask"))
+    z = mlp(proj_p, pooled.astype(dtype_of(cfg.dtype)))
+    return z.astype(F32), aux
+
+
+def encode_pair(cfg, de_cfg, params, view1, view2):
+    """Encode both views (F and G). Returns (zf, zg, aux)."""
+    zf, aux1 = encode(cfg, de_cfg, params, view1, tower="f")
+    zg, aux2 = encode(cfg, de_cfg, params, view2, tower="g")
+    aux = {k: aux1[k] + aux2[k] for k in aux1}
+    return zf, zg, aux

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based einsum dispatch.
+
+TPU-native (GShard/MaxText style): tokens are split into groups, each group
+dispatches into (experts, capacity) slots via one-hot einsums — all shapes
+static, so the expert dim shards cleanly over the ``model`` mesh axis
+(expert parallelism) and the data→expert reshard lowers to an all-to-all.
+
+DeepSeek flavour: ``num_shared_experts`` always-on experts (fused into one
+wider SwiGLU) + fine-grained routed experts (small d_ff), top-k softmax
+gating with weights normalized over the selected experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import F32, linear, linear_init, swiglu, swiglu_init
+
+
+def moe_init(key, d_model: int, moe_cfg, dtype):
+    e, dff = moe_cfg.num_experts, moe_cfg.d_ff
+    k_router, k_exp, k_shared = jax.random.split(key, 3)
+    ks = jax.random.split(k_exp, 3)
+    std = 1.0 / np.sqrt(d_model)
+    p = {
+        "router": {"w": (jax.random.normal(k_router, (d_model, e), F32) * std).astype(F32)},
+        # stacked expert weights, leading dim = experts (sharded over `model`)
+        "experts": {
+            "gate": (jax.random.truncated_normal(ks[0], -2, 2, (e, d_model, dff), F32) * std).astype(dtype),
+            "up": (jax.random.truncated_normal(ks[1], -2, 2, (e, d_model, dff), F32) * std).astype(dtype),
+            "down": (jax.random.truncated_normal(ks[2], -2, 2, (e, dff, d_model), F32)
+                     * (1.0 / np.sqrt(dff))).astype(dtype),
+        },
+    }
+    if moe_cfg.num_shared_experts > 0:
+        p["shared"] = swiglu_init(k_shared, d_model,
+                                  moe_cfg.num_shared_experts * dff, dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, moe_cfg) -> int:
+    c = int(np.ceil(tokens_per_group * moe_cfg.top_k / moe_cfg.num_experts
+                    * moe_cfg.capacity_factor))
+    return max(c, 1)
+
+
+def moe_forward(p, x, moe_cfg, group_size: int = 512):
+    """x: (B, S, D) -> (y (B,S,D), aux_losses dict).
+
+    Tokens flattened to T=B*S, grouped into G groups of `group_size`; each
+    group routes independently (bounds the dispatch tensor to
+    group_size x E x C).
+    """
+    b, s, d = x.shape
+    e, k = moe_cfg.num_experts, moe_cfg.top_k
+    t = b * s
+    g_sz = min(group_size, t)
+    assert t % g_sz == 0, f"tokens {t} not divisible by group {g_sz}"
+    g = t // g_sz
+    xt = x.reshape(g, g_sz, d)
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(F32), p["router"]["w"],
+                        preferred_element_type=F32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,S,E)
+
+    # top-k selection; weights renormalized over the chosen experts
+    topk_p, topk_idx = jax.lax.top_k(probs, k)                 # (G,S,K)
+    topk_w = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
+
+    cap = _capacity(g_sz, moe_cfg)
+    sel = jax.nn.one_hot(topk_idx, e, dtype=F32)               # (G,S,K,E)
+    # position of each (token, k) within its expert queue, priority by k then s
+    pos_in_e = jnp.cumsum(sel.reshape(g, g_sz * k, e), axis=1).reshape(g, g_sz, k, e) - 1.0
+    keep = (pos_in_e < cap) * sel                              # drop overflow
+    pos_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap, dtype=F32) * keep[..., None]
+    # combine[g,s,e,c] = routing weight of token s into slot (e,c)
+    combine = jnp.einsum("gske,gskec->gsec", topk_w[..., None] * keep, pos_oh,
+                         preferred_element_type=F32)
+    dispatch = (combine > 0).astype(x.dtype)                   # (G,S,E,C)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xt, preferred_element_type=F32).astype(x.dtype)
+    we = p["experts"]
+    h = jnp.einsum("gecd,edf->gecf", xe, we["gate"], preferred_element_type=F32)
+    u = jnp.einsum("gecd,edf->gecf", xe, we["up"], preferred_element_type=F32)
+    h = (jax.nn.silu(h) * u).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h, we["down"], preferred_element_type=F32)
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye.astype(F32),
+                   preferred_element_type=F32).astype(x.dtype)
+    y = y.reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x)
+
+    # aux losses: load balance (Shazeer/GShard) + router z-loss
+    me = probs.mean(axis=(0, 1))                               # mean prob per expert
+    ce = sel[..., :].sum(2).mean(axis=(0, 1))                  # fraction routed per expert
+    balance = e * jnp.sum(me * ce) / k
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"balance": balance, "router_z": z,
+           "dropped_frac": 1.0 - keep.sum() / (sel.sum() + 1e-9)}
+    return y, aux

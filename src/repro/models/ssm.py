@@ -1,0 +1,168 @@
+"""Mamba2 (SSD) block — TPU adaptation.
+
+The GPU reference implements SSD with a fused CUDA scan; on TPU we use the
+chunked formulation: the sequence is split into chunks of length L, the
+intra-chunk term is a masked (L x L) matmul batch (MXU-friendly), and the
+inter-chunk term is a short ``lax.scan`` over chunk states. This keeps all
+heavy math in matmuls with hardware-aligned dims instead of a long
+elementwise recurrence.
+
+State spec (decode): conv ring (B, W-1, conv_dim) + SSM state (B, H, P, N),
+P = head_dim, N = ssm state size. O(1) in sequence length -> long_500k fits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import F32, linear, linear_init, rmsnorm, rmsnorm_init
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    heads = d_inner // cfg.ssm.head_dim
+    conv_dim = d_inner + 2 * cfg.ssm.state
+    return d_inner, heads, conv_dim
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner, heads, conv_dim = _dims(cfg)
+    n, w = cfg.ssm.state, cfg.ssm.conv_width
+    ks = jax.random.split(key, 5)
+    return {
+        # order: [z (gate, d_inner) | x (d_inner) | B (n) | C (n) | dt (heads)]
+        "in_proj": linear_init(ks[0], d, 2 * d_inner + 2 * n + heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (w, conv_dim), F32) / np.sqrt(w)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads, dtype=F32)),
+        "D": jnp.ones((heads,), F32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, heads, dtype=F32))),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": linear_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, heads, _ = _dims(cfg)
+    n = cfg.ssm.state
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = proj[..., -heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc):
+    """Depthwise causal conv over (B, S, conv_dim)."""
+    w = p["conv_w"].shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * p["conv_w"][i].astype(F32)
+              for i in range(w))
+    return jax.nn.silu(out + p["conv_b"].astype(F32)).astype(xbc.dtype)
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) inputs; dt: (B,S,H) >0; a: (H,) negative decay;
+    b,c: (B,S,N) (single group). Returns y: (B,S,H,P).
+    h_t = exp(dt_t a) h_{t-1} + dt_t * x_t b_t^T ;  y_t = h_t c_t + D x (D added by caller)
+    """
+    bb, s, h, pdim = x.shape
+    n = b.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0, f"seq {s} % chunk {l} != 0"
+    nc = s // l
+
+    def r(t, shape):  # reshape seq -> (chunks, ...)
+        return t.reshape(shape)
+
+    xs = r(x, (bb, nc, l, h, pdim)).transpose(1, 0, 2, 3, 4).astype(F32)
+    dts = r(dt, (bb, nc, l, h)).transpose(1, 0, 2, 3)
+    bs = r(b, (bb, nc, l, n)).transpose(1, 0, 2, 3).astype(F32)
+    cs = r(c, (bb, nc, l, n)).transpose(1, 0, 2, 3).astype(F32)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+
+    def step(hprev, inp):
+        x_g, dt_g, b_g, c_g = inp                         # (B,l,H,P) (B,l,H) (B,l,N)
+        da = dt_g * a[None, None, :]                      # (B,l,H) log-decay (<0)
+        cum = jnp.cumsum(da, axis=1)
+        tot = cum[:, -1]                                  # (B,H)
+        # intra: y[t] = sum_{s<=t} exp(cum_t - cum_s) dt_s (c_t.b_s) x_s
+        # (mask BEFORE exp: the s>t region has positive exponents that
+        # overflow, and inf*0 in the backward pass poisons gradients)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]     # (B,t,s,H)
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], seg, -1e30))
+        cb = jnp.einsum("btn,bsn->bts", c_g, b_g, preferred_element_type=F32)
+        w_ts = cb[..., None] * decay * dt_g[:, None, :, :]
+        y_intra = jnp.einsum("btsh,bshp->bthp", w_ts, x_g, preferred_element_type=F32)
+        # inter: y[t] += exp(cum_t) c_t . h_prev
+        y_inter = jnp.einsum("bth,btn,bhnp->bthp", jnp.exp(cum), c_g, hprev,
+                             preferred_element_type=F32)
+        # state update: h_new = exp(tot) h_prev + sum_s exp(tot - cum_s) dt_s b_s x_s^T
+        sdecay = jnp.exp(tot[:, None, :] - cum) * dt_g    # (B,l,H)
+        states = jnp.einsum("bsh,bsn,bshp->bhnp", sdecay, b_g, x_g,
+                            preferred_element_type=F32)
+        hnew = hprev * jnp.exp(tot)[..., None, None] + states
+        return hnew, y_intra + y_inter
+
+    h0 = jnp.zeros((bb, h, n, pdim), F32)
+    _, ys = jax.lax.scan(step, h0, (xs, dts, bs, cs))     # (nc,B,l,H,P)
+    return ys.transpose(1, 0, 2, 3, 4).reshape(bb, s, h, pdim)
+
+
+def mamba2_forward(cfg, p, x):
+    """x: (B,S,D) -> (B,S,D). Training / prefill (no cache)."""
+    bsz, s, _ = x.shape
+    d_inner, heads, _ = _dims(cfg)
+    pdim, n = cfg.ssm.head_dim, cfg.ssm.state
+    proj = linear(p["in_proj"], x)
+    z, xbc, dt_pre = _split_proj(cfg, proj)
+    xbc = _causal_conv(p, xbc)
+    xi = xbc[..., :d_inner].reshape(bsz, s, heads, pdim)
+    b = xbc[..., d_inner:d_inner + n]
+    c = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_pre.astype(F32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y = _ssd_chunked(xi, dt, a, b, c, cfg.ssm.chunk)
+    y = y + p["D"][None, None, :, None] * xi.astype(F32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype), cfg.norm_eps)
+    return linear(p["out_proj"], y)
+
+
+# ------------------------------------------------------------------ decode ---
+
+def mamba2_cache_init(cfg, batch: int, dtype):
+    d_inner, heads, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, heads, cfg.ssm.state, cfg.ssm.head_dim), F32),
+    }
+
+
+def mamba2_decode(cfg, p, x, cache):
+    """x: (B,1,D) single step."""
+    bsz = x.shape[0]
+    d_inner, heads, conv_dim = _dims(cfg)
+    pdim, n = cfg.ssm.head_dim, cfg.ssm.state
+    proj = linear(p["in_proj"], x)
+    z, xbc, dt_pre = _split_proj(cfg, proj)
+    # conv ring: window = [cache, current]
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)    # (B, W, conv_dim)
+    conv = jnp.einsum("bwc,wc->bc", win.astype(F32), p["conv_w"].astype(F32))
+    xbc1 = jax.nn.silu(conv + p["conv_b"].astype(F32)).astype(x.dtype)[:, None, :]
+    new_conv = win[:, 1:, :]
+    xi = xbc1[..., :d_inner].reshape(bsz, heads, pdim)
+    b = xbc1[:, 0, d_inner:d_inner + n]
+    c = xbc1[:, 0, d_inner + n:]
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(F32) + p["dt_bias"])   # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)                                 # (B,H)
+    h = cache["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, b.astype(F32), xi.astype(F32))
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(F32), h) + p["D"][None, :, None] * xi.astype(F32)
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype), cfg.norm_eps)
+    return linear(p["out_proj"], y), {"conv": new_conv, "ssm": h}

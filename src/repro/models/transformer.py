@@ -1,0 +1,475 @@
+"""Backbone assembly: config-driven block pattern scanned over superblocks.
+
+A *superblock* is one pass through ``cfg.block_pattern`` (e.g. zamba2:
+5 x mamba2 + 1 x attn). Parameters of all superblocks are stacked along a
+leading axis and the layer stack runs under ``jax.lax.scan`` — this keeps the
+HLO small enough that 512-way SPMD partitioning is tractable and matches how
+production frameworks (MaxText et al.) structure deep stacks.
+
+Public entry points:
+  init_params(cfg, key)                      -> params
+  forward(cfg, params, tokens, patch_embeds) -> hidden (B,S,D)
+  lm_loss / logits helpers
+  init_cache(cfg, batch, max_len)            -> cache pytree
+  prefill(cfg, params, tokens, cache)        -> (logits_last, cache)
+  decode_step(cfg, params, cache, token)     -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models import common
+from repro.models.common import F32, dtype_of, embed, embedding_init, linear, linear_init, \
+    mlp, mlp_init, rmsnorm, rmsnorm_init, swiglu, swiglu_init, unembed
+
+
+# =========================================================================
+# per-block init / forward / decode dispatch
+# =========================================================================
+
+def _use_moe(cfg, layer_in_pattern_is_attn: bool) -> bool:
+    return cfg.moe is not None and cfg.moe.num_experts > 0
+
+
+def _block_init(key, cfg, kind: str, dtype, moe_layer: bool):
+    ks = jax.random.split(key, 4)
+    if kind == "attn":
+        p = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model)}
+        if cfg.use_mla:
+            p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn.gqa_init(ks[0], cfg, dtype)
+        if moe_layer:
+            p["moe"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.moe, dtype)
+        else:
+            d_ff = cfg.d_ff if cfg.d_ff > 0 else 4 * cfg.d_model
+            if cfg.moe is not None and cfg.moe.dense_d_ff > 0:
+                d_ff = cfg.moe.dense_d_ff
+            p["ffn"] = swiglu_init(ks[1], cfg.d_model, d_ff, dtype)
+        return p
+    if kind == "mamba2":
+        return {"ln1": rmsnorm_init(cfg.d_model),
+                "mixer": ssm_mod.mamba2_init(ks[0], cfg, dtype)}
+    if kind == "mlstm":
+        return {"ln1": rmsnorm_init(cfg.d_model),
+                "mixer": xlstm_mod.mlstm_init(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"ln1": rmsnorm_init(cfg.d_model),
+                "mixer": xlstm_mod.slstm_init(ks[0], cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _block_forward(cfg, kind: str, p, x, positions):
+    """Full-sequence forward (training). Returns (y, aux)."""
+    aux = {}
+    if kind == "attn":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        attn_fn = attn.mla_forward if cfg.use_mla else attn.gqa_forward
+        if cfg.parallel_block:
+            # PaLM-style: attn + FFN in parallel off one norm; their summed
+            # output closes the TP contraction with a single all-reduce
+            a = attn_fn(cfg, p["attn"], h, positions)
+            if "moe" in p:
+                y, aux = moe_mod.moe_forward(p["moe"], h, cfg.moe)
+            else:
+                y = swiglu(p["ffn"], h)
+            return x + a + y, aux
+        x = x + attn_fn(cfg, p["attn"], h, positions)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, aux = moe_mod.moe_forward(p["moe"], h, cfg.moe)
+            x = x + y
+        else:
+            x = x + swiglu(p["ffn"], h)
+        return x, aux
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "mamba2":
+        x = x + ssm_mod.mamba2_forward(cfg, p["mixer"], h)
+    elif kind == "mlstm":
+        y, _ = xlstm_mod.mlstm_forward(cfg, p["mixer"], h)
+        x = x + y
+    elif kind == "slstm":
+        y, _ = xlstm_mod.slstm_forward(cfg, p["mixer"], h)
+        x = x + y
+    return x, aux
+
+
+def _block_cache_init(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind == "attn":
+        if cfg.use_mla:
+            return attn.mla_cache_init(cfg, batch, max_len, dtype)
+        return attn.gqa_cache_init(cfg, batch, max_len, dtype)
+    if kind == "mamba2":
+        return ssm_mod.mamba2_cache_init(cfg, batch, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_state_init(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.slstm_state_init(cfg, batch)
+    raise ValueError(kind)
+
+
+def _block_prefill(cfg, kind: str, p, x, positions, cache):
+    if kind == "attn":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        pre_fn = attn.mla_prefill if cfg.use_mla else attn.gqa_prefill
+        if cfg.parallel_block:
+            a, cache = pre_fn(cfg, p["attn"], h, positions, cache)
+            if "moe" in p:
+                y, _ = moe_mod.moe_forward(p["moe"], h, cfg.moe)
+            else:
+                y = swiglu(p["ffn"], h)
+            return x + a + y, cache
+        y, cache = pre_fn(cfg, p["attn"], h, positions, cache)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_mod.moe_forward(p["moe"], h, cfg.moe)
+            x = x + y
+        else:
+            x = x + swiglu(p["ffn"], h)
+        return x, cache
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "mamba2":
+        # run full forward; recompute final state for the cache via decode chunking
+        y, cache = _mamba2_prefill(cfg, p["mixer"], h, cache)
+        return x + y, cache
+    if kind == "mlstm":
+        st = (cache["C"], cache["n"], cache["m"])
+        q, k, v, ipre, fpre, gate = xlstm_mod._mlstm_cell_io(cfg, p["mixer"], h)
+        y, (c, n, m) = xlstm_mod._mlstm_chunk_scan(q, k, v, ipre, fpre, st, cfg.xlstm.chunk)
+        bb, s, _ = x.shape
+        hcount, d_in, dh = xlstm_mod._heads_dims(cfg)
+        y = y.reshape(bb, s, d_in).astype(x.dtype)
+        y = rmsnorm(p["mixer"]["norm"], y, cfg.norm_eps) * \
+            jax.nn.silu(gate.astype(F32)).astype(x.dtype)
+        y = linear(p["mixer"]["down"], y)
+        return x + y, {"C": c, "n": n, "m": m}
+    if kind == "slstm":
+        y, cache = xlstm_mod.slstm_forward(cfg, p["mixer"], h, cache)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+def _mamba2_prefill(cfg, p, x, cache):
+    """Forward over full sequence, returning the final (conv, ssm) state."""
+    y = ssm_mod.mamba2_forward(cfg, p, x)
+    # final conv state: last (W-1) xbc inputs; final ssm state: recompute via scan
+    proj = common.linear(p["in_proj"], x)
+    z, xbc, dt_pre = ssm_mod._split_proj(cfg, proj)
+    w = cfg.ssm.conv_width
+    conv_state = xbc[:, -(w - 1):, :]
+    # ssm final state via chunked scan final carry
+    d_inner, heads, _ = ssm_mod._dims(cfg)
+    n = cfg.ssm.state
+    xbc_c = ssm_mod._causal_conv(p, xbc)
+    xi = xbc_c[..., :d_inner].reshape(x.shape[0], x.shape[1], heads, cfg.ssm.head_dim)
+    b = xbc_c[..., d_inner:d_inner + n]
+    c = xbc_c[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_pre.astype(F32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    hfinal = _ssd_final_state(xi, dt, a, b, cfg.ssm.chunk)
+    return y, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": hfinal}
+
+
+def _ssd_final_state(x, dt, a, b, chunk: int):
+    bb, s, h, pdim = x.shape
+    n = b.shape[-1]
+    l = min(chunk, s)
+    nc = s // l
+    xs = x.reshape(bb, nc, l, h, pdim).transpose(1, 0, 2, 3, 4).astype(F32)
+    dts = dt.reshape(bb, nc, l, h).transpose(1, 0, 2, 3)
+    bs = b.reshape(bb, nc, l, n).transpose(1, 0, 2, 3).astype(F32)
+
+    def step(hprev, inp):
+        x_g, dt_g, b_g = inp
+        da = dt_g * a[None, None, :]
+        cum = jnp.cumsum(da, axis=1)
+        tot = cum[:, -1]
+        sdecay = jnp.exp(tot[:, None, :] - cum) * dt_g
+        states = jnp.einsum("bsh,bsn,bshp->bhnp", sdecay, b_g, x_g,
+                            preferred_element_type=F32)
+        return hprev * jnp.exp(tot)[..., None, None] + states, None
+
+    h0 = jnp.zeros((bb, h, n, pdim), F32)
+    hfinal, _ = jax.lax.scan(step, h0, (xs, dts, bs))
+    return hfinal
+
+
+def _block_decode(cfg, kind: str, p, x, pos, cache):
+    if kind == "attn":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        dec_fn = attn.mla_decode if cfg.use_mla else attn.gqa_decode
+        if cfg.parallel_block:
+            a, cache = dec_fn(cfg, p["attn"], h, pos, cache)
+            if "moe" in p:
+                y, _ = moe_mod.moe_forward(p["moe"], h, cfg.moe,
+                                           group_size=x.shape[0])
+            else:
+                y = swiglu(p["ffn"], h)
+            return x + a + y, cache
+        y, cache = dec_fn(cfg, p["attn"], h, pos, cache)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, _ = moe_mod.moe_forward(p["moe"], h, cfg.moe, group_size=x.shape[0])
+            x = x + y
+        else:
+            x = x + swiglu(p["ffn"], h)
+        return x, cache
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "mamba2":
+        y, cache = ssm_mod.mamba2_decode(cfg, p["mixer"], h, cache)
+        return x + y, cache
+    if kind == "mlstm":
+        y, cache = xlstm_mod.mlstm_decode(cfg, p["mixer"], h, cache)
+        return x + y, cache
+    if kind == "slstm":
+        y, cache = xlstm_mod.slstm_decode(cfg, p["mixer"], h, cache)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+# =========================================================================
+# whole-model init / forward / prefill / decode
+# =========================================================================
+
+def _moe_flags(cfg):
+    """Which scanned pattern slots use MoE FFN (first_k_dense handled via
+    separate prologue layers, so all scanned attn slots are MoE)."""
+    return [cfg.moe is not None and cfg.moe.num_experts > 0 and k == "attn"
+            for k in cfg.block_pattern]
+
+
+def init_params(cfg, key):
+    dtype = dtype_of(cfg.dtype)
+    n_super = cfg.num_superblocks
+    k_emb, k_layers, k_pro, k_final, k_vis = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = linear_init(k_final, cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.modality == "vision_text":
+        params["vis_proj"] = mlp_init(k_vis, (cfg.vis_dim, cfg.d_model, cfg.d_model),
+                                      dtype, bias=True)
+
+    moe_flags = _moe_flags(cfg)
+    # prologue: first_k_dense dense-FFN attention layers (unscanned)
+    n_pro = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    if n_pro:
+        pro_keys = jax.random.split(k_pro, n_pro)
+        params["prologue"] = [
+            _block_init(pk, cfg, "attn", dtype, moe_layer=False) for pk in pro_keys]
+
+    # scanned superblocks: stack params along leading axis
+    def one_super(k):
+        ks = jax.random.split(k, len(cfg.block_pattern))
+        return {f"b{i}": _block_init(ks[i], cfg, kind, dtype, moe_flags[i])
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    layer_keys = jax.random.split(k_layers, n_super)
+    stacked = jax.vmap(one_super)(layer_keys)
+    params["layers"] = stacked
+    return params
+
+
+def _constrain_act(cfg, x):
+    if cfg.act_shard_axes is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    ax = cfg.act_shard_axes if len(cfg.act_shard_axes) > 1 else cfg.act_shard_axes[0]
+    return jax.lax.with_sharding_constraint(x, P(ax, *([None] * (x.ndim - 1))))
+
+
+def _constrain_fsdp_layer_params(cfg, sp):
+    """FSDP: re-pin each *sliced* (per-layer) weight to its model-axis shard
+    inside the scan body, so SPMD gathers one layer at a time instead of
+    hoisting a whole-stack all-gather out of the loop."""
+    if not cfg.fsdp_model_size:
+        return sp
+    from jax.sharding import PartitionSpec as P
+    m = cfg.fsdp_model_size
+
+    def rule(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd < 2:
+            return leaf
+        cands = [(shape[i], i) for i in range(nd)
+                 if shape[i] % m == 0 and shape[i] >= m]
+        if not cands:
+            return leaf
+        _, dim = max(cands)
+        parts = [None] * nd
+        parts[dim] = "model"
+        return jax.lax.with_sharding_constraint(leaf, P(*parts))
+
+    return jax.tree.map(rule, sp)
+
+
+def _superblock_forward(cfg, sp, x, positions):
+    sp = _constrain_fsdp_layer_params(cfg, sp)
+    auxes = []
+    for i, kind in enumerate(cfg.block_pattern):
+        x, aux = _block_forward(cfg, kind, sp[f"b{i}"], x, positions)
+        x = _constrain_act(cfg, x)
+        auxes.append({k: aux.get(k, jnp.zeros((), F32)) for k in ("balance", "router_z")})
+    tot = {k: sum(a[k] for a in auxes) for k in ("balance", "router_z")}
+    return x, tot
+
+
+def forward(cfg, params, tokens, patch_embeds=None, return_aux: bool = False):
+    """tokens: (B,S_text) int32. For VLM, patch_embeds (B,P,vis_dim) are
+    projected and prepended (total sequence = P + S_text)."""
+    x = embed(params["embed"], tokens)
+    if cfg.modality == "vision_text" and patch_embeds is not None:
+        vis = mlp(params["vis_proj"], patch_embeds.astype(x.dtype))
+        x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    for p in params.get("prologue", []):
+        x, _ = _block_forward(cfg, "attn", p, x, positions)
+
+    def body(x, sp):
+        x, aux = _superblock_forward(cfg, sp, x, positions)
+        return x, aux
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    n_super = cfg.num_superblocks
+    if not cfg.scan_layers:
+        aux_list = []
+        for i in range(n_super):
+            sp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, aux = body(x, sp)
+            aux_list.append(aux)
+        auxes = jax.tree.map(lambda *xs: jnp.stack(xs), *aux_list)
+    elif cfg.layer_chunks > 1 and n_super % cfg.layer_chunks == 0:
+        k = n_super // cfg.layer_chunks
+        aux_list = []
+        for c in range(cfg.layer_chunks):
+            sub = jax.tree.map(lambda a: a[c * k:(c + 1) * k], params["layers"])
+            x, aux = jax.lax.scan(body, x, sub)
+            aux_list.append(aux)
+        auxes = jax.tree.map(lambda *xs: jnp.concatenate(xs), *aux_list)
+    else:
+        x, auxes = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_aux:
+        aux = {k: jnp.sum(v) for k, v in auxes.items()}
+        return x, aux
+    return x
+
+
+def logits_from_hidden(cfg, params, hidden):
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], hidden)
+    return linear(params["unembed"], hidden).astype(F32)
+
+
+# ------------------------------------------------------------------ cache ---
+
+def init_cache(cfg, batch: int, max_len: int):
+    dtype = dtype_of(cfg.dtype)
+    n_super = cfg.num_superblocks
+
+    def one_super():
+        return {f"b{i}": _block_cache_init(cfg, kind, batch, max_len, dtype)
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    # stack cache along leading superblock axis
+    proto = one_super()
+    stacked = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_super,) + a.shape).copy(), proto)
+    cache = {"layers": stacked, "pos": jnp.zeros((), jnp.int32)}
+    n_pro = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    if n_pro:
+        cache["prologue"] = [
+            _block_cache_init(cfg, "attn", batch, max_len, dtype) for _ in range(n_pro)]
+    return cache
+
+
+def prefill(cfg, params, tokens, cache, patch_embeds=None):
+    """Run the full prompt, fill the cache. Returns (last_logits (B,V), cache)."""
+    x = embed(params["embed"], tokens)
+    if cfg.modality == "vision_text" and patch_embeds is not None:
+        vis = mlp(params["vis_proj"], patch_embeds.astype(x.dtype))
+        x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    new_pro = []
+    for p, pc in zip(params.get("prologue", []), cache.get("prologue", [])):
+        x, pc = _block_prefill(cfg, "attn", p, x, positions, pc)
+        new_pro.append(pc)
+
+    # cache stack rides in the scan CARRY and is updated with
+    # dynamic-update-slice — XLA performs the update in place (one resident
+    # cache buffer + donated input) instead of allocating a second stacked
+    # cache as scan-ys output.
+    def body(carry, sp_and_idx):
+        x, cstack = carry
+        sp, idx = sp_and_idx
+        c = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+            a, idx, 0, keepdims=False), cstack)
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c_i = _block_prefill(cfg, kind, sp[f"b{i}"], x, positions, c[f"b{i}"])
+            c = {**c, f"b{i}": c_i}
+        cstack = jax.tree.map(lambda a, ci: jax.lax.dynamic_update_index_in_dim(
+            a, ci.astype(a.dtype), idx, 0), cstack, c)
+        return (x, cstack), None
+
+    n_super = cfg.num_superblocks
+    (x, new_layer_cache), _ = jax.lax.scan(
+        body, (x, cache["layers"]),
+        (params["layers"], jnp.arange(n_super, dtype=jnp.int32)))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, -1])
+    new_cache = {"layers": new_layer_cache, "pos": jnp.asarray(s, jnp.int32)}
+    if new_pro:
+        new_cache["prologue"] = new_pro
+    return logits, new_cache
+
+
+def decode_step(cfg, params, cache, token_ids):
+    """token_ids: (B,1) int32; returns (logits (B,V), cache)."""
+    x = embed(params["embed"], token_ids)
+    pos = cache["pos"]
+
+    new_pro = []
+    for p, pc in zip(params.get("prologue", []), cache.get("prologue", [])):
+        x, pc = _block_decode(cfg, "attn", p, x, pos, pc)
+        new_pro.append(pc)
+
+    # see prefill: cache stack in the carry, in-place dynamic-update-slice
+    def body(carry, sp_and_idx):
+        x, cstack = carry
+        sp, idx = sp_and_idx
+        c = jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+            a, idx, 0, keepdims=False), cstack)
+        for i, kind in enumerate(cfg.block_pattern):
+            x, c_i = _block_decode(cfg, kind, sp[f"b{i}"], x, pos, c[f"b{i}"])
+            c = {**c, f"b{i}": c_i}
+        cstack = jax.tree.map(lambda a, ci: jax.lax.dynamic_update_index_in_dim(
+            a, ci.astype(a.dtype), idx, 0), cstack, c)
+        return (x, cstack), None
+
+    n_super = cfg.num_superblocks
+    (x, new_layer_cache), _ = jax.lax.scan(
+        body, (x, cache["layers"]),
+        (params["layers"], jnp.arange(n_super, dtype=jnp.int32)))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, 0])
+    new_cache = {"layers": new_layer_cache, "pos": pos + 1}
+    if new_pro:
+        new_cache["prologue"] = new_pro
+    return logits, new_cache

@@ -1,0 +1,239 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-recurrent) and sLSTM
+(scalar memory, exponential gating, sequential scan). arXiv:2405.04517.
+
+TPU adaptation: the CUDA kernels of the reference are replaced by
+  * mLSTM — chunkwise formulation: intra-chunk is a gated (L x L) matmul
+    (MXU), inter-chunk is a short scan over chunk states; numerically
+    stabilized with the running max-state m (as in the paper).
+  * sLSTM — inherently sequential (recurrent weights); a ``lax.scan`` over
+    time with per-head block-diagonal recurrent matrices.
+
+Decode state is O(1): mLSTM carries (C: (B,H,dk,dv), n: (B,H,dk), m: (B,H));
+sLSTM carries (c,n,h,m): (B,D) each.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import F32, linear, linear_init, rmsnorm, rmsnorm_init
+
+LOG_EPS = -1e30
+
+
+def _heads_dims(cfg):
+    h = cfg.num_heads
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+    d_in -= d_in % (h * 2)
+    dh = d_in // h
+    return h, d_in, dh
+
+
+# =========================================================================
+# mLSTM block (pre-up-projection, as in the paper)
+# =========================================================================
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    h, d_in, dh = _heads_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": linear_init(ks[0], d, 2 * d_in, dtype),         # [cell path | gate path]
+        "wq": linear_init(ks[1], d_in, d_in, dtype),
+        "wk": linear_init(ks[2], d_in, d_in, dtype),
+        "wv": linear_init(ks[3], d_in, d_in, dtype),
+        "w_i": linear_init(ks[4], d_in, h, dtype, bias=True),
+        "w_f": linear_init(ks[5], d_in, h, dtype, bias=True),
+        "norm": rmsnorm_init(d_in),
+        "down": linear_init(ks[6], d_in, d, dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, i_pre, f_pre, state, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,S,H,dh); i_pre,f_pre: (B,S,H) gate preactivations.
+    state: (C (B,H,dk,dv), n (B,H,dk), m (B,H)).
+    Returns (y (B,S,H,dh), new_state).
+    """
+    bb, s, h, dh = q.shape
+    l = min(chunk, s)
+    assert s % l == 0
+    nc = s // l
+    logf = jax.nn.log_sigmoid(f_pre.astype(F32))               # (B,S,H)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+
+    def r(t):
+        return t.reshape(bb, nc, l, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qs, ks_, vs = r(q.astype(F32)), r(k.astype(F32)), r(v.astype(F32))
+    is_, fs = r(i_pre.astype(F32)), r(logf)
+
+    def step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        q_g, k_g, v_g, i_g, f_g = inp                          # (B,l,H,dh), (B,l,H)
+        b_cum = jnp.cumsum(f_g, axis=1)                        # (B,l,H)
+        a_run = jax.lax.cummax(i_g - b_cum, axis=1)            # running max of (i_s - b_s)
+        m_t = b_cum + jnp.maximum(m_prev[:, None, :], a_run)   # (B,l,H)
+        # intra weights W[t,s] = exp(b_t - b_s + i_s - m_t), s<=t
+        seg = (b_cum[:, :, None, :] - b_cum[:, None, :, :]
+               + i_g[:, None, :, :] - m_t[:, :, None, :])      # (B,t,s,H)
+        # mask BEFORE exp (s>t exponents overflow; inf*0 NaNs the backward)
+        w_ts = jnp.exp(jnp.where(mask[None, :, :, None], seg, -1e30))
+        qk = jnp.einsum("bthd,bshd->btsh", q_g, k_g,
+                        preferred_element_type=F32) / np.sqrt(dh)
+        num_intra = jnp.einsum("btsh,bshd->bthd", w_ts * qk, v_g,
+                               preferred_element_type=F32)
+        den_intra = jnp.einsum("btsh->bth", w_ts * qk)
+        # inter: scale exp(m_prev + b_t - m_t)
+        g_t = jnp.exp(m_prev[:, None, :] + b_cum - m_t)        # (B,l,H)
+        # NOTE: c_prev/n_prev already accumulate k/sqrt(dh); q is NOT rescaled
+        num_inter = jnp.einsum("bthd,bhde->bthe", q_g, c_prev,
+                               preferred_element_type=F32) * g_t[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", q_g, n_prev) * g_t
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        m_last = m_t[:, -1]                                    # (B,H)
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to chunk end
+        b_tot = b_cum[:, -1]                                   # (B,H)
+        sc = jnp.exp(m_prev + b_tot - m_last)                  # (B,H)
+        kv_dec = jnp.exp(b_tot[:, None, :] - b_cum + i_g - m_last[:, None, :])  # (B,l,H)
+        c_new = c_prev * sc[..., None, None] + jnp.einsum(
+            "bsh,bshd,bshe->bhde", kv_dec, k_g / np.sqrt(dh), v_g,
+            preferred_element_type=F32)
+        n_new = n_prev * sc[..., None] + jnp.einsum(
+            "bsh,bshd->bhd", kv_dec, k_g / np.sqrt(dh))
+        return (c_new, n_new, m_last), y
+
+    state_f, ys = jax.lax.scan(step, state, (qs, ks_, vs, is_, fs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bb, s, h, dh)
+    return y, state_f
+
+
+def mlstm_state_init(cfg, batch: int):
+    h, d_in, dh = _heads_dims(cfg)
+    return {"C": jnp.zeros((batch, h, dh, dh), F32),
+            "n": jnp.zeros((batch, h, dh), F32),
+            "m": jnp.full((batch, h), -1e30, F32)}
+
+
+def _mlstm_cell_io(cfg, p, x):
+    bb, s, _ = x.shape
+    h, d_in, dh = _heads_dims(cfg)
+    up = linear(p["up"], x)
+    cell_in, gate = up[..., :d_in], up[..., d_in:]
+    q = linear(p["wq"], cell_in).reshape(bb, s, h, dh)
+    k = linear(p["wk"], cell_in).reshape(bb, s, h, dh)
+    v = linear(p["wv"], cell_in).reshape(bb, s, h, dh)
+    i_pre = linear(p["w_i"], cell_in)
+    f_pre = linear(p["w_f"], cell_in)
+    return q, k, v, i_pre, f_pre, gate
+
+
+def mlstm_forward(cfg, p, x, state=None):
+    bb, s, _ = x.shape
+    h, d_in, dh = _heads_dims(cfg)
+    q, k, v, i_pre, f_pre, gate = _mlstm_cell_io(cfg, p, x)
+    if state is None:
+        state = mlstm_state_init(cfg, bb)
+        state = (state["C"], state["n"], state["m"])
+    y, state_f = _mlstm_chunk_scan(q, k, v, i_pre, f_pre, state, cfg.xlstm.chunk)
+    y = y.reshape(bb, s, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(gate.astype(F32)).astype(x.dtype)
+    return linear(p["down"], y), state_f
+
+
+def mlstm_decode(cfg, p, x, state):
+    """x: (B,1,D); state dict as mlstm_state_init."""
+    y, (c, n, m) = _mlstm_chunk_scan_single(cfg, p, x, state)
+    return y, {"C": c, "n": n, "m": m}
+
+
+def _mlstm_chunk_scan_single(cfg, p, x, state):
+    bb = x.shape[0]
+    h, d_in, dh = _heads_dims(cfg)
+    q, k, v, i_pre, f_pre, gate = _mlstm_cell_io(cfg, p, x)
+    st = (state["C"], state["n"], state["m"])
+    y, state_f = _mlstm_chunk_scan(q, k, v, i_pre, f_pre, st, chunk=1)
+    y = y.reshape(bb, 1, d_in).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(gate.astype(F32)).astype(x.dtype)
+    return linear(p["down"], y), state_f
+
+
+# =========================================================================
+# sLSTM block (post-up-projection, per the paper)
+# =========================================================================
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    d_ff = int(d * cfg.xlstm.proj_factor_slstm)
+    ks = jax.random.split(key, 8)
+    # 4 gates (i,f,z,o): input weights (d -> d) and per-head recurrent (h,dh,dh)
+    def rec(k):
+        return (jax.random.normal(k, (h, dh, dh), F32) / np.sqrt(dh)).astype(dtype)
+    return {
+        "w_gates": linear_init(ks[0], d, 4 * d, dtype, bias=True),
+        "r_i": rec(ks[1]), "r_f": rec(ks[2]), "r_z": rec(ks[3]), "r_o": rec(ks[4]),
+        "norm": rmsnorm_init(d),
+        "ffn_up": linear_init(ks[5], d, 2 * d_ff, dtype),
+        "ffn_down": linear_init(ks[6], d_ff, d, dtype),
+    }
+
+
+def slstm_state_init(cfg, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), F32), "n": jnp.zeros((batch, d), F32),
+            "h": jnp.zeros((batch, d), F32), "m": jnp.full((batch, d), -1e30, F32)}
+
+
+def _slstm_step(cfg, p, carry, g_x):
+    """One timestep. carry: (c,n,h,m) each (B,D); g_x: (B,4D) input gate preacts."""
+    c, n, hh, m = carry
+    h_heads = cfg.num_heads
+    d = cfg.d_model
+    dh = d // h_heads
+    hr = hh.reshape(-1, h_heads, dh)
+    def rmul(r):
+        return jnp.einsum("bhd,hde->bhe", hr, r.astype(F32)).reshape(-1, d)
+    gi = g_x[..., :d] + rmul(p["r_i"])
+    gf = g_x[..., d:2 * d] + rmul(p["r_f"])
+    gz = g_x[..., 2 * d:3 * d] + rmul(p["r_z"])
+    go = g_x[..., 3 * d:] + rmul(p["r_o"])
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, gi)
+    c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(gi - m_new) * jnp.tanh(gz)
+    n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(gi - m_new)
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(cfg, p, x, state=None):
+    bb, s, d = x.shape
+    if state is None:
+        st = slstm_state_init(cfg, bb)
+    else:
+        st = state
+    g_all = linear(p["w_gates"], x).astype(F32)               # (B,S,4D)
+
+    def step(carry, g_t):
+        new = _slstm_step(cfg, p, carry, g_t)
+        return new, new[2]
+
+    carry0 = (st["c"], st["n"], st["h"], st["m"])
+    carry_f, hs = jax.lax.scan(step, carry0, g_all.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)                 # (B,S,D)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    up = linear(p["ffn_up"], y)
+    d_ff = up.shape[-1] // 2
+    y = linear(p["ffn_down"], jax.nn.gelu(up[..., :d_ff]) * up[..., d_ff:])
+    new_state = {"c": carry_f[0], "n": carry_f[1], "h": carry_f[2], "m": carry_f[3]}
+    return y, new_state
+
+
+def slstm_decode(cfg, p, x, state):
+    y, st = slstm_forward(cfg, p, x, state)
+    return y, st

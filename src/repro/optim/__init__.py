@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, sgd, adam, lars, get_optimizer)
+from repro.optim.schedules import cosine_decay, constant  # noqa: F401

@@ -1,0 +1,134 @@
+"""Minimal optimizer library (no optax offline): SGD, Adam, LARS.
+
+Interface mirrors optax: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``. All optimizer state is f32; updates are cast back to the
+parameter dtype on apply. The *server* optimizer in federated training
+consumes pseudo-gradients (negative average client deltas), per FedOpt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(F32) + u.astype(F32)).astype(p.dtype),
+                        params, updates)
+
+
+def _sched(lr):
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, F32))
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"]
+        g = jax.tree.map(lambda x: x.astype(F32), grads)
+        if weight_decay and params is not None:
+            g = jax.tree.map(lambda gi, p: gi + weight_decay * p.astype(F32), g, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, gi: momentum * m + gi, state["mu"], g)
+            g = mu
+            new_state = {"step": step + 1, "mu": mu}
+        else:
+            new_state = {"step": step + 1}
+        lr_t = lr_fn(step)
+        updates = jax.tree.map(lambda gi: -lr_t * gi, g)
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = _sched(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, F32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        g = jax.tree.map(lambda x: x.astype(F32), grads)
+        m = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi, state["m"], g)
+        v = jax.tree.map(lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, state["v"], g)
+        bc1 = 1 - b1 ** step.astype(F32)
+        bc2 = 1 - b2 ** step.astype(F32)
+        lr_t = lr_fn(state["step"])
+
+        def upd(mi, vi, p):
+            u = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u + weight_decay * p.astype(F32)
+            return -lr_t * u
+
+        if params is not None:
+            updates = jax.tree.map(upd, m, v, params)
+        else:
+            updates = jax.tree.map(lambda mi, vi: upd(mi, vi, None), m, v)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def lars(lr, momentum: float = 0.9, weight_decay: float = 0.0,
+         trust_coefficient: float = 0.001, eps: float = 1e-8) -> Optimizer:
+    """LARS (You et al. 2017) — the paper's server optimizer for DERM and
+    its linear-probe optimizer."""
+    lr_fn = _sched(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        lr_t = lr_fn(step)
+
+        def upd(g, p, mu):
+            g = g.astype(F32)
+            pf = p.astype(F32)
+            if weight_decay:
+                g = g + weight_decay * pf
+            p_norm = jnp.linalg.norm(pf)
+            g_norm = jnp.linalg.norm(g)
+            trust = jnp.where(
+                (p_norm > 0) & (g_norm > 0),
+                trust_coefficient * p_norm / (g_norm + eps), 1.0)
+            mu_new = momentum * mu + trust * g
+            return -lr_t * mu_new, mu_new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = jax.tree.leaves(params)
+        flat_mu = jax.tree.leaves(state["mu"])
+        outs = [upd(g, p, mu) for g, p, mu in zip(flat_g, flat_p, flat_mu)]
+        updates = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        mu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return updates, {"step": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {"sgd": sgd, "adam": adam, "lars": lars}[name](lr, **kw)

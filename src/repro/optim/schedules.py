@@ -1,0 +1,23 @@
+"""Learning-rate schedules (paper App. B uses cosine decay everywhere)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_decay(base_lr: float, total_steps: int, warmup_steps: int = 0,
+                 final_scale: float = 0.0):
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.where(warmup_steps > 0, step / jnp.maximum(warmup_steps, 1), 1.0)
+        warm = jnp.minimum(warm, 1.0)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * warm * (final_scale + (1.0 - final_scale) * cos)
+    return schedule
+
+
+def constant(base_lr: float):
+    def schedule(step):
+        return jnp.asarray(base_lr, jnp.float32)
+    return schedule

@@ -1,0 +1,2 @@
+from repro.sharding.specs import (  # noqa: F401
+    param_pspecs, batch_pspec, cache_pspecs, named, DATA_AXES)

@@ -1,0 +1,239 @@
+"""Logical-axis sharding rules -> PartitionSpec trees.
+
+Mesh axes: ("pod",)? + ("data", "model"). Batch/client dims shard over
+(pod, data); weight feature dims shard over model (tensor parallel);
+MoE expert dims shard over model (expert parallel). Every rule is
+divisibility-aware: a dim that does not divide by the axis size stays
+replicated rather than failing at compile time (e.g. kv_heads=8 on
+model=16).
+
+Baseline policy (recorded in DESIGN.md/EXPERIMENTS.md): SSM / xLSTM mixer
+weights replicated (their fused in-projections interleave semantic segments,
+so naive column sharding causes resharding collectives); attention + FFN +
+MoE + embedding sharded. The FSDP mode (see param_pspecs) shards everything
+— including the recurrent mixers — by storage, which is how zamba2/xlstm
+shed the replication cost in the §Perf FSDP variant.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA_AXES: Tuple[str, ...] = ("pod", "data")   # present subset used
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def data_axes(mesh: Mesh):
+    axes = tuple(a for a in DATA_AXES if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _maybe(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0 and dim >= size
+
+
+def _spec(ndim: int, shard_dim: int | None, axis: str | None) -> P:
+    if shard_dim is None or axis is None:
+        return P()
+    parts = [None] * ndim
+    parts[shard_dim] = axis
+    return P(*parts)
+
+
+# param-name rules: (substring, which dim of the *unstacked* weight to shard)
+_OUT = ("wq/w", "wk/w", "wv/w", "gate/w", "up/w", "ffn_up/w", "w_uk/w", "w_uv/w")
+_IN = ("wo/w", "down/w", "ffn_down/w", "out_proj/w")
+_REPLICATE = ("router", "norm", "scale", "bias", "A_log", "dt_bias", "conv_w",
+              "conv_b", "r_i", "r_f", "r_z", "r_o", "w_i", "w_f", "w_gates",
+              "in_proj", "w_dkv", "kv_norm")
+
+
+def param_pspecs(params: Any, mesh: Mesh, mode: str = "tp") -> Any:
+    """PartitionSpec tree matching `params` (works on arrays or
+    ShapeDtypeStructs).
+
+    mode="tp"   — tensor parallel: attention-head/FFN/expert dims shard over
+                  `model`; contractions produce per-layer activation
+                  all-reduces. Baseline.
+    mode="fsdp" — fully-sharded data parallel: every >=2D weight shards its
+                  largest divisible dim over `model` purely as STORAGE; the
+                  batch is spread over (pod, data, model) so XLA inserts
+                  per-layer weight all-gathers instead of activation
+                  all-reduces. Wins whenever tokens/device x d_model >>
+                  params/layer (true for train_4k; see EXPERIMENTS §Perf).
+    """
+    if mode == "fsdp":
+        return _fsdp_pspecs(params, mesh)
+    msize = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+
+        if any(s in pstr for s in _REPLICATE):
+            return P()
+        if "experts/" in pstr:
+            # expert weights are 3D (E, d, f)/(E, f, d), 4D when scan-stacked
+            # (paths may carry tower/ or optimizer-state prefixes)
+            e_dim = nd - 3
+            if e_dim >= 0 and _maybe(shape[e_dim], msize):
+                return _spec(nd, e_dim, "model")
+            return P()
+        if "embed/table" in pstr:               # (V, D)
+            return _spec(nd, 0, "model") if _maybe(shape[0], msize) else P()
+        if "unembed/w" in pstr:                 # (D, V)
+            return _spec(nd, 1, "model") if _maybe(shape[1], msize) else P()
+        if any(pstr.endswith(s) or f"/{s}" in pstr for s in _OUT):
+            return _spec(nd, nd - 1, "model") if _maybe(shape[-1], msize) else P()
+        if any(pstr.endswith(s) or f"/{s}" in pstr for s in _IN):
+            return _spec(nd, nd - 2, "model") if _maybe(shape[-2], msize) else P()
+        if pstr.endswith("up/w"):               # mlstm up proj
+            return _spec(nd, nd - 1, "model") if _maybe(shape[-1], msize) else P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def _fsdp_pspecs(params: Any, mesh: Mesh) -> Any:
+    msize = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd < 2 or msize <= 1:
+            return P()
+        pstr = _path_str(path)
+        # NOTE (measured, see EXPERIMENTS §Perf): keeping experts
+        # expert-parallel inside FSDP mode makes things WORSE (31 GiB
+        # resident vs 19) — token sharding over all axes conflicts with the
+        # expert dispatch axes. A true hybrid needs the MoE block to
+        # re-shard tokens to the data axes before dispatch; until then MoE
+        # archs should use the TP/EP baseline, not FSDP.
+        start = 1 if ("layers/" in pstr and nd >= 3) else 0
+        cands = [(shape[i], i) for i in range(start, nd) if _maybe(shape[i], msize)]
+        if not cands:
+            return P()
+        _, dim = max(cands)
+        return _spec(nd, dim, "model")
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def opt_state_pspecs(opt_specs: Any, opt_sds: Any, mesh: Mesh) -> Any:
+    """ZeRO-1: additionally shard optimizer moments over the data axes.
+
+    Starting from the parameter-aligned specs, the largest still-unsharded
+    dim of every >=2D moment leaf is sharded over (pod, data) when
+    divisible. Grads arrive via reduce-scatter instead of all-reduce and
+    the updated params are all-gathered — wired automatically by SPMD once
+    these in/out shardings are pinned.
+    """
+    ax = data_axes(mesh)
+    axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+    dsize = int(np.prod([_axis_size(mesh, a) for a in axes])) if axes else 1
+
+    def rule(spec: P, leaf) -> P:
+        shape = leaf.shape
+        if len(shape) < 2 or dsize <= 1:
+            return spec
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        cands = [(shape[i], i) for i in range(len(shape))
+                 if parts[i] is None and _maybe(shape[i], dsize)]
+        if not cands:
+            return spec
+        _, dim = max(cands)
+        parts[dim] = ax
+        return P(*parts)
+
+    return jax.tree_util.tree_map(rule, opt_specs, opt_sds,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh, ndim: int = 2, batch: int = 0) -> P:
+    """Shard leading (batch/client) dim over (pod, data) when divisible."""
+    ax = data_axes(mesh)
+    if batch:
+        axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        dsize = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if not _maybe(batch, dsize):
+            return P(*([None] * ndim))
+    return P(ax, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache: Any, mesh: Mesh, *, seq_shard: bool = False) -> Any:
+    """Sharding for decode caches.
+
+    Layout conventions (see transformer.init_cache):
+      attn k/v:      (n_super, B, W, kvh, dh)
+      mla latent:    (n_super, B, S, r); k_rope: (n_super, B, S, dr)
+      kv_pos:        (n_super, B, W)
+      mamba conv:    (n_super, B, w-1, conv_dim); ssm: (n_super, B, H, N, P)
+      xlstm C/n/m:   (n_super, B, ...)
+    Batch shards over (pod,data) when divisible; with seq_shard=True (used
+    when batch==1, e.g. long_500k) the seq/window dim shards over data
+    instead (flash-decode style) and kv heads over model when divisible.
+    """
+    ax = data_axes(mesh)
+    dsize = int(np.prod([_axis_size(mesh, a) for a in (ax if isinstance(ax, tuple)
+                                                       else (ax,) if ax else ())]))
+    msize = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if pstr.endswith("pos") and nd == 0:
+            return P()
+        has_super = pstr.startswith("layers/")
+        b_dim = 1 if has_super else 0
+        if nd <= b_dim:
+            return P()
+        parts = [None] * nd
+        if not seq_shard and _maybe(shape[b_dim], dsize):
+            parts[b_dim] = ax
+            # flash-decode: also shard the seq/window dim over `model` so the
+            # cache fits per-chip HBM and attention reduces over seq shards
+            # (small per-head softmax-stat collectives instead of cache
+            # all-gathers).
+            if nd >= b_dim + 2 and _maybe(shape[b_dim + 1], msize) and (
+                    "kv_pos" in pstr or "scale" in pstr or
+                    pstr.rsplit("/", 1)[-1] in ("k", "v") or
+                    "latent" in pstr or "k_rope" in pstr):
+                parts[b_dim + 1] = "model"
+        elif seq_shard:
+            # shard the seq/window dim (dim after batch) over data
+            if "kv_pos" in pstr and nd >= b_dim + 2 and _maybe(shape[b_dim + 1], dsize):
+                parts[b_dim + 1] = ax
+            elif any(k in pstr for k in ("/k", "/v", "latent", "k_rope", "scale")) \
+                    and nd >= b_dim + 2 and _maybe(shape[b_dim + 1], dsize):
+                parts[b_dim + 1] = ax
+            # kv heads over model for attn k/v (dim b+2)
+            if nd >= b_dim + 3 and pstr.rsplit("/", 1)[-1] in ("k", "v") \
+                    and _maybe(shape[b_dim + 2], msize):
+                parts[b_dim + 2] = "model"
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)

@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run sets its own flags in
+# a separate process). Force deterministic, quiet jax.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,135 @@
+"""Attention layer unit tests: blockwise==naive, GQA, sliding-window ring
+buffer decode, MLA (incl. weight-absorbed decode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+
+SET = settings(max_examples=15, deadline=None)
+
+
+def _qkv(key, b, sq, skv, h, kvh, dh):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh))
+    k = jax.random.normal(ks[1], (b, skv, kvh, dh))
+    v = jax.random.normal(ks[2], (b, skv, kvh, dh))
+    qp = jnp.broadcast_to(jnp.arange(skv - sq, skv)[None], (b, sq))
+    kp = jnp.broadcast_to(jnp.arange(skv)[None], (b, skv))
+    return q, k, v, qp, kp
+
+
+class TestBlockwise:
+    @SET
+    @given(sq=st.sampled_from([1, 17, 64]), kvh=st.sampled_from([1, 2, 4]),
+           window=st.sampled_from([0, 24]), kb=st.sampled_from([16, 48]),
+           seed=st.integers(0, 100))
+    def test_matches_naive(self, sq, kvh, window, kb, seed):
+        q, k, v, qp, kp = _qkv(jax.random.PRNGKey(seed), 2, sq, 64, 4, kvh, 16)
+        o1 = attn.naive_attention(q, k, v, qp, kp, window)
+        o2 = attn.blockwise_attention(q, k, v, qp, kp, window, kv_block=kb)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestGqaDecode:
+    def _cfg(self, window=0):
+        return ModelConfig(num_heads=4, num_kv_heads=2, d_model=64, head_dim=16,
+                           sliding_window=window, attn_impl="naive")
+
+    @pytest.mark.parametrize("window", [0, 8])
+    def test_decode_matches_forward(self, window, rng_key):
+        cfg = self._cfg(window)
+        p = attn.gqa_init(rng_key, cfg, jnp.float32)
+        b, s = 2, 12
+        x = jax.random.normal(rng_key, (b, s, cfg.d_model)) * 0.5
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        y_ref = attn.gqa_forward(cfg, p, x, positions)
+        cache = attn.gqa_cache_init(cfg, b, max_len=16, dtype=jnp.float32)
+        ys = []
+        for t in range(s):
+            yt, cache = attn.gqa_decode(cfg, p, x[:, t:t + 1], jnp.asarray(t), cache)
+            ys.append(yt)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                                   np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+    def test_ring_buffer_overwrites_old_entries(self, rng_key):
+        """Sliding-window decode past the window size stays correct: the
+        ring buffer slot reuse must not change results vs a full cache."""
+        cfg_w = self._cfg(window=4)
+        p = attn.gqa_init(rng_key, cfg_w, jnp.float32)
+        b, s = 1, 10
+        x = jax.random.normal(rng_key, (b, s, cfg_w.d_model)) * 0.5
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        y_ref = attn.gqa_forward(cfg_w, p, x, positions)
+        cache = attn.gqa_cache_init(cfg_w, b, max_len=4, dtype=jnp.float32)
+        assert cache["k"].shape[1] == 4  # ring buffer is window-sized
+        ys = []
+        for t in range(s):
+            yt, cache = attn.gqa_decode(cfg_w, p, x[:, t:t + 1], jnp.asarray(t), cache)
+            ys.append(yt)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                                   np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+
+class TestMla:
+    def _cfg(self):
+        return ModelConfig(num_heads=4, d_model=64, use_mla=True,
+                           kv_lora_rank=32, qk_rope_head_dim=8,
+                           qk_nope_head_dim=16, v_head_dim=16,
+                           attn_impl="naive")
+
+    @pytest.mark.parametrize("absorb", [True, False])
+    def test_decode_matches_forward(self, absorb, rng_key):
+        cfg = self._cfg()
+        p = attn.mla_init(rng_key, cfg, jnp.float32)
+        b, s = 2, 10
+        x = jax.random.normal(rng_key, (b, s, cfg.d_model)) * 0.5
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        y_ref = attn.mla_forward(cfg, p, x, positions)
+        cache = attn.mla_cache_init(cfg, b, max_len=12, dtype=jnp.float32)
+        ys = []
+        for t in range(s):
+            yt, cache = attn.mla_decode(cfg, p, x[:, t:t + 1], t, cache,
+                                        absorb=absorb)
+            ys.append(yt)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                                   np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+
+    def test_absorbed_equals_naive_decode(self, rng_key):
+        """The weight-absorption optimization is numerically transparent."""
+        cfg = self._cfg()
+        p = attn.mla_init(rng_key, cfg, jnp.float32)
+        x = jax.random.normal(rng_key, (2, 1, cfg.d_model))
+        c1 = attn.mla_cache_init(cfg, 2, 8, jnp.float32)
+        c2 = attn.mla_cache_init(cfg, 2, 8, jnp.float32)
+        y1, _ = attn.mla_decode(cfg, p, x, 0, c1, absorb=True)
+        y2, _ = attn.mla_decode(cfg, p, x, 0, c2, absorb=False)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_cache_is_compressed(self):
+        """MLA latent cache must be ~(r+dr)/(2*h*dh) the size of full KV."""
+        cfg = self._cfg()
+        c = attn.mla_cache_init(cfg, 1, 100, jnp.float32)
+        latent_bytes = c["latent"].size + c["k_rope"].size
+        full_kv = 2 * 100 * cfg.num_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        assert latent_bytes < full_kv / 3
+
+
+class TestQkNorm:
+    def test_qk_norm_changes_output_and_is_finite(self, rng_key):
+        base = ModelConfig(num_heads=4, num_kv_heads=2, d_model=64, head_dim=16,
+                           attn_impl="naive")
+        x = jax.random.normal(rng_key, (2, 8, 64)) * 3.0
+        positions = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        p = attn.gqa_init(rng_key, base.replace(qk_norm=True), jnp.float32)
+        y = attn.gqa_forward(base.replace(qk_norm=True), p, x, positions)
+        assert not bool(jnp.isnan(y).any())
+        y2 = attn.gqa_forward(base, {k: v for k, v in p.items()
+                                     if k not in ("q_norm", "k_norm")},
+                              x, positions)
+        assert float(jnp.max(jnp.abs(y - y2))) > 1e-4

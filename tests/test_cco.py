@@ -1,0 +1,117 @@
+"""Properties of the CCO loss and the five encoding statistics (paper Eq. 1-3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cco
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def _rand(key, n, d):
+    return jax.random.normal(key, (n, d), jnp.float32)
+
+
+class TestStatsLinearity:
+    """The paper's central insight: batch statistics are exactly weighted
+    averages of per-client statistics (Eq. 3)."""
+
+    @SET
+    @given(clients=st.integers(2, 6), n_per=st.integers(1, 5),
+           d=st.integers(2, 16), seed=st.integers(0, 2**16))
+    def test_aggregate_equals_global(self, clients, n_per, d, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        zf = _rand(k1, clients * n_per, d)
+        zg = _rand(k2, clients * n_per, d)
+        st_global = cco.encoding_stats(zf, zg)
+        st_k = cco.per_client_stats(zf, zg, clients)
+        agg = cco.weighted_average_stats(st_k, jnp.full((clients,), n_per, jnp.float32))
+        for k in cco.STAT_KEYS:
+            np.testing.assert_allclose(agg[k], st_global[k], rtol=2e-5, atol=2e-6)
+
+    @SET
+    @given(seed=st.integers(0, 2**16))
+    def test_variable_sizes(self, seed):
+        """Weighted averaging with unequal N_k == masked global stats."""
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        clients, n_pad, d = 4, 5, 8
+        sizes = jax.random.randint(k3, (clients,), 1, n_pad + 1)
+        zf = _rand(k1, clients * n_pad, d)
+        zg = _rand(k2, clients * n_pad, d)
+        mask = (jnp.arange(n_pad)[None, :] < sizes[:, None]).astype(jnp.float32)
+        st_k = jax.vmap(cco.encoding_stats_masked)(
+            zf.reshape(clients, n_pad, d), zg.reshape(clients, n_pad, d), mask)
+        agg = cco.weighted_average_stats(st_k, sizes.astype(jnp.float32))
+        st_global = cco.encoding_stats_masked(zf, zg, mask.reshape(-1))
+        for k in cco.STAT_KEYS:
+            np.testing.assert_allclose(agg[k], st_global[k], rtol=2e-5, atol=2e-6)
+
+
+class TestCorrelation:
+    def test_bounds(self, rng_key):
+        zf = _rand(rng_key, 64, 12)
+        zg = _rand(jax.random.PRNGKey(9), 64, 12)
+        c = cco.correlation_matrix(cco.encoding_stats(zf, zg))
+        assert jnp.all(jnp.abs(c) <= 1.0 + 1e-4)
+
+    def test_perfect_correlation_zero_on_diagonal_loss(self, rng_key):
+        z = _rand(rng_key, 256, 8)
+        c = cco.correlation_matrix(cco.encoding_stats(z, z))
+        np.testing.assert_allclose(np.diag(np.asarray(c)), 1.0, atol=1e-4)
+
+    def test_loss_minimized_by_identity_correlation(self, rng_key):
+        """Loss ~0 when F == G and dimensions are decorrelated."""
+        n, d = 4096, 4
+        z = _rand(rng_key, n, d)
+        # decorrelate via PCA whitening
+        zc = z - z.mean(0)
+        u, s, vt = jnp.linalg.svd(zc, full_matrices=False)
+        zw = u * jnp.sqrt(n)
+        loss = cco.cco_loss(zw, zw, lam=20.0)
+        assert float(loss) < 1e-2
+
+    def test_collapse_has_high_loss(self):
+        """A constant encoder (collapse) keeps the on-diagonal term ~d."""
+        z = jnp.ones((32, 8)) + 1e-3 * jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+        loss = cco.cco_loss(z, z, lam=20.0)
+        assert float(loss) > 1.0
+
+
+class TestDccoCombine:
+    def test_value_equals_aggregate(self, rng_key):
+        k1, k2 = jax.random.split(rng_key)
+        zf, zg = _rand(k1, 12, 6), _rand(k2, 12, 6)
+        st_k = cco.per_client_stats(zf, zg, 3)
+        agg = cco.weighted_average_stats(st_k, jnp.ones((3,)))
+        local0 = jax.tree.map(lambda x: x[0], st_k)
+        comb = cco.dcco_combine(local0, agg)
+        for k in cco.STAT_KEYS:
+            np.testing.assert_allclose(comb[k], agg[k], rtol=1e-5, atol=1e-7)
+
+    def test_gradient_flows_through_local_only(self, rng_key):
+        """d combined / d local == I; d combined / d agg == 0 (Eq. 4-5)."""
+        local = {"mean_f": jnp.array([1.0, 2.0])}
+        agg = {"mean_f": jnp.array([5.0, 5.0])}
+        g_local = jax.grad(
+            lambda l: cco.dcco_combine(l, agg)["mean_f"].sum())(local)
+        np.testing.assert_allclose(g_local["mean_f"], 1.0)
+        g_agg = jax.grad(
+            lambda a: cco.dcco_combine(local, a)["mean_f"].sum())(agg)
+        np.testing.assert_allclose(g_agg["mean_f"], 0.0)
+
+    def test_lambda_normalization(self, rng_key):
+        """The 1/(d-1) factor keeps off-diag term scale-free in d (footnote 2)."""
+        losses = []
+        for d in (4, 16):
+            zf = _rand(rng_key, 128, d)
+            zg = zf + 0.1 * _rand(jax.random.PRNGKey(d), 128, d)
+            st = cco.encoding_stats(zf, zg)
+            c = cco.correlation_matrix(st)
+            off = (jnp.sum(c * c) - jnp.sum(jnp.diag(c) ** 2)) / (d - 1)
+            losses.append(float(off) / d)
+        # per-dimension off-diagonal penalty should be same order of magnitude
+        assert 0.1 < losses[0] / losses[1] < 10.0

@@ -1,0 +1,167 @@
+"""Appendix-A theorem: one DCCO round (one local step, client lr 1.0)
+== one centralized large-batch step — exactly, for real encoders."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import utils
+from repro.configs.base import get_config, get_dual_encoder_config, DualEncoderConfig
+from repro.core import cco, dcco, fed_sim
+from repro.models import dual_encoder
+from repro.optim import optimizers as opt_lib
+
+LAM = 5.0
+
+
+def _mlp_encoder(key, d_in=10, d=6):
+    params = {"w1": jax.random.normal(key, (d_in, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (16, d)) * 0.3}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    return params, apply
+
+
+def _client_data(key, clients, n, d_in):
+    k1, k2 = jax.random.split(key)
+    return {"v1": jax.random.normal(k1, (clients, n, d_in)),
+            "v2": jax.random.normal(k2, (clients, n, d_in))}
+
+
+class TestAppendixA:
+    @pytest.mark.parametrize("server", ["sgd", "adam", "lars"])
+    def test_round_equals_centralized(self, rng_key, server):
+        params, apply = _mlp_encoder(rng_key)
+        data = _client_data(rng_key, clients=6, n=3, d_in=10)
+        sizes = jnp.full((6,), 3, jnp.int32)
+        opt = opt_lib.get_optimizer(server, 0.05)
+        p1, _, m1 = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                       data, sizes, lam=LAM, client_lr=1.0)
+        union = jax.tree.map(lambda x: x.reshape(18, -1), data)
+        p2, _, m2 = fed_sim.centralized_step(apply, params, opt.init(params),
+                                             opt, union, lam=LAM)
+        assert utils.tree_max_abs_diff(p1, p2) < 1e-5
+        np.testing.assert_allclose(float(m1.loss), float(m2.loss), rtol=1e-5)
+
+    def test_variable_client_sizes(self, rng_key):
+        params, apply = _mlp_encoder(rng_key)
+        data = _client_data(rng_key, clients=5, n=4, d_in=10)
+        sizes = jnp.array([1, 4, 2, 3, 1], jnp.int32)
+        opt = opt_lib.sgd(0.1)
+        p1, _, _ = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                      data, sizes, lam=LAM, client_lr=1.0)
+        union = jax.tree.map(lambda x: x.reshape(20, -1), data)
+        mask = (jnp.arange(4)[None] < sizes[:, None]).reshape(-1).astype(jnp.float32)
+        p2, _, _ = fed_sim.centralized_step(apply, params, opt.init(params),
+                                            opt, union, mask=mask, lam=LAM)
+        assert utils.tree_max_abs_diff(p1, p2) < 1e-5
+
+    def test_single_sample_clients(self, rng_key):
+        """Paper Table 1, 1-sample clients: the setting where FedAvg CCO is
+        impossible but DCCO still works (stats aggregated across clients)."""
+        params, apply = _mlp_encoder(rng_key)
+        data = _client_data(rng_key, clients=16, n=1, d_in=10)
+        sizes = jnp.ones((16,), jnp.int32)
+        opt = opt_lib.sgd(0.1)
+        p1, _, m1 = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                       data, sizes, lam=LAM, client_lr=1.0)
+        assert jnp.isfinite(m1.loss)
+        union = jax.tree.map(lambda x: x.reshape(16, -1), data)
+        p2, _, _ = fed_sim.centralized_step(apply, params, opt.init(params),
+                                            opt, union, lam=LAM)
+        assert utils.tree_max_abs_diff(p1, p2) < 1e-5
+
+    def test_multiple_rounds_track_centralized(self, rng_key):
+        params, apply = _mlp_encoder(rng_key)
+        opt = opt_lib.adam(1e-2)
+        st_f, st_c = opt.init(params), opt.init(params)
+        pf = pc = params
+        for r in range(3):
+            data = _client_data(jax.random.PRNGKey(r), clients=4, n=2, d_in=10)
+            sizes = jnp.full((4,), 2, jnp.int32)
+            pf, st_f, _ = fed_sim.dcco_round(apply, pf, st_f, opt, data, sizes,
+                                             lam=LAM, client_lr=1.0)
+            union = jax.tree.map(lambda x: x.reshape(8, -1), data)
+            pc, st_c, _ = fed_sim.centralized_step(apply, pc, st_c, opt, union,
+                                                   lam=LAM)
+        assert utils.tree_max_abs_diff(pf, pc) < 1e-4
+
+    def test_multi_local_steps_breaks_equivalence(self, rng_key):
+        """With >1 local steps (stale stats / partial gradients — paper Sec 6)
+        the equivalence no longer holds; the round must still be finite."""
+        params, apply = _mlp_encoder(rng_key)
+        data = _client_data(rng_key, clients=4, n=3, d_in=10)
+        sizes = jnp.full((4,), 3, jnp.int32)
+        opt = opt_lib.sgd(0.1)
+        p1, _, m = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                      data, sizes, lam=LAM, client_lr=0.5,
+                                      local_steps=3)
+        assert jnp.isfinite(m.loss)
+        union = jax.tree.map(lambda x: x.reshape(12, -1), data)
+        p2, _, _ = fed_sim.centralized_step(apply, params, opt.init(params),
+                                            opt, union, lam=LAM)
+        assert utils.tree_max_abs_diff(p1, p2) > 1e-6
+
+
+class TestLossPathEquivalence:
+    """fused / per_client / shard_map DCCO losses have identical gradients."""
+
+    def test_fused_vs_per_client(self, rng_key):
+        k1, k2 = jax.random.split(rng_key)
+        zf = jax.random.normal(k1, (12, 6))
+        zg = jax.random.normal(k2, (12, 6))
+        g1 = jax.grad(lambda z: dcco.dcco_loss_fused(z, zg, LAM))(zf)
+        g2 = jax.grad(lambda z: dcco.dcco_loss_per_client(z, zg, LAM, 4))(zf)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_shard_map_path(self, rng_key):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        loss_fn = dcco.make_shard_map_dcco_loss(mesh, LAM, data_axes=("data",))
+        k1, k2 = jax.random.split(rng_key)
+        zf = jax.random.normal(k1, (8, 4))
+        zg = jax.random.normal(k2, (8, 4))
+        l1 = loss_fn(zf, zg)
+        l2 = dcco.dcco_loss_fused(zf, zg, LAM)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+        g1 = jax.grad(lambda z: loss_fn(z, zg))(zf)
+        g2 = jax.grad(lambda z: dcco.dcco_loss_fused(z, zg, LAM))(zf)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-6)
+
+
+class TestResNetEquivalence:
+    """The theorem with the paper's actual encoder family (WS+GN ResNet)."""
+
+    def test_resnet_round(self, rng_key):
+        cfg = get_config("resnet14-cifar", smoke=True)
+        de = DualEncoderConfig(proj_dims=(16, 16), lambda_cco=LAM)
+        params = dual_encoder.init_dual_encoder(rng_key, cfg, de)
+
+        def apply(p, batch):
+            zf, _ = dual_encoder.encode(cfg, de, p, {"images": batch["v1"]})
+            zg, _ = dual_encoder.encode(cfg, de, p, {"images": batch["v2"]})
+            return zf, zg
+
+        k1, k2 = jax.random.split(rng_key)
+        clients, n, hw = 4, 2, cfg.image_size
+        data = {"v1": jax.random.uniform(k1, (clients, n, hw, hw, 3)),
+                "v2": jax.random.uniform(k2, (clients, n, hw, hw, 3))}
+        sizes = jnp.full((clients,), n, jnp.int32)
+        opt = opt_lib.sgd(0.05)
+        p1, _, m1 = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                       data, sizes, lam=LAM, client_lr=1.0)
+        union = jax.tree.map(lambda x: x.reshape(8, hw, hw, 3), data)
+        p2, _, m2 = fed_sim.centralized_step(apply, params, opt.init(params),
+                                             opt, union, lam=LAM)
+        # relative tolerance: weight standardization amplifies stem gradients
+        # ~1e3x, so absolute diffs measure f32 conditioning, not the protocol
+        diff = utils.tree_max_abs_diff(p1, p2)
+        upd = utils.tree_max_abs_diff(p1, params) + 1e-12
+        assert diff / upd < 2e-3, f"relative deviation {diff / upd}"
+        np.testing.assert_allclose(float(m1.loss), float(m2.loss), rtol=1e-4)
+        assert jnp.isfinite(m1.loss)

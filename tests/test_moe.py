@@ -1,0 +1,93 @@
+"""MoE routing: capacity enforcement, combine-weight sanity, shared experts,
+load-balance aux loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.models import moe
+
+
+def _cfg(**kw):
+    base = dict(num_experts=4, num_shared_experts=1, top_k=2, d_ff=16,
+                capacity_factor=1.5, balance_weight=0.01)
+    base.update(kw)
+    return MoEConfig(**base)
+
+
+def _setup(rng_key, cfg, b=2, s=8, d=32):
+    p = moe.moe_init(rng_key, d, cfg, jnp.float32)
+    x = jax.random.normal(rng_key, (b, s, d))
+    return p, x
+
+
+class TestRouting:
+    def test_output_shape_finite(self, rng_key):
+        cfg = _cfg()
+        p, x = _setup(rng_key, cfg)
+        y, aux = moe.moe_forward(p, x, cfg)
+        assert y.shape == x.shape
+        assert bool(jnp.isfinite(y).all())
+        assert float(aux["balance"]) > 0
+
+    def test_shared_expert_always_contributes(self, rng_key):
+        """Zeroing all routed experts must leave the shared-expert output."""
+        cfg = _cfg()
+        p, x = _setup(rng_key, cfg)
+        p_zeroed = dict(p, experts=jax.tree.map(jnp.zeros_like, p["experts"]))
+        y, _ = moe.moe_forward(p_zeroed, x, cfg)
+        from repro.models.common import swiglu
+        np.testing.assert_allclose(np.asarray(y), np.asarray(swiglu(p["shared"], x)),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_no_shared_expert(self, rng_key):
+        cfg = _cfg(num_shared_experts=0)
+        p, x = _setup(rng_key, cfg)
+        assert "shared" not in p
+        y, _ = moe.moe_forward(p, x, cfg)
+        assert bool(jnp.isfinite(y).all())
+
+    def test_capacity_drops_overflow(self, rng_key):
+        """With capacity factor ~0 almost every token must be dropped and the
+        routed output goes to ~zero (shared experts disabled)."""
+        cfg = _cfg(num_shared_experts=0, capacity_factor=1e-6)
+        p, x = _setup(rng_key, cfg, b=1, s=64)
+        y, aux = moe.moe_forward(p, x, cfg)
+        assert float(aux["dropped_frac"]) > 0.5
+
+    def test_single_token_decode_path(self, rng_key):
+        cfg = _cfg()
+        p, x = _setup(rng_key, cfg, b=2, s=1)
+        y, _ = moe.moe_forward(p, x, cfg, group_size=2)
+        assert y.shape == x.shape
+        assert bool(jnp.isfinite(y).all())
+
+    def test_balance_loss_uniform_router_is_one(self, rng_key):
+        """With a zero router (uniform probs) the GShard balance loss == E *
+        sum(me*ce)/k == 1 in expectation."""
+        cfg = _cfg(num_shared_experts=0)
+        p, x = _setup(rng_key, cfg, b=4, s=64)
+        p = dict(p, router={"w": jnp.zeros_like(p["router"]["w"])})
+        _, aux = moe.moe_forward(p, x, cfg)
+        assert 0.8 < float(aux["balance"]) < 1.2
+
+    def test_group_size_invariance_without_drops(self, rng_key):
+        cfg = _cfg(capacity_factor=8.0)
+        p, x = _setup(rng_key, cfg, b=2, s=16)
+        y1, _ = moe.moe_forward(p, x, cfg, group_size=32)
+        y2, _ = moe.moe_forward(p, x, cfg, group_size=8)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_gradients_flow_to_router_and_experts(self, rng_key):
+        cfg = _cfg()
+        p, x = _setup(rng_key, cfg)
+
+        def loss(p_):
+            y, aux = moe.moe_forward(p_, x, cfg)
+            return (y ** 2).mean() + 0.01 * aux["balance"]
+
+        g = jax.grad(loss)(p)
+        assert float(jnp.abs(g["router"]["w"]).max()) > 0
+        assert float(jnp.abs(g["experts"]["gate"]).max()) > 0

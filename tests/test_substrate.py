@@ -1,0 +1,179 @@
+"""Optimizers, schedules, checkpointing, sharding rules, eval probes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import utils
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs.base import get_config, DualEncoderConfig
+from repro.core import eval as eval_lib
+from repro.models import dual_encoder, transformer
+from repro.optim import optimizers as opt_lib, schedules
+from repro.sharding import specs as shard_specs
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name,lr", [("sgd", 0.1), ("adam", 0.05)])
+    def test_minimizes_quadratic(self, name, lr):
+        opt = opt_lib.get_optimizer(name, lr)
+        params = {"x": jnp.array([3.0, -2.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+            upd, state = opt.update(g, state, params)
+            params = opt_lib.apply_updates(params, upd)
+        assert float(jnp.abs(params["x"]).max()) < 0.05
+
+    def test_lars_trust_ratio_descends(self):
+        """LARS steps are |p|-proportional (trust ratio), so assert steady
+        geometric descent rather than convergence-to-zero."""
+        opt = opt_lib.lars(20.0, momentum=0.9)
+        params = {"x": jnp.array([3.0, -2.0])}
+        state = opt.init(params)
+        n0 = float(jnp.linalg.norm(params["x"]))
+        for _ in range(200):
+            g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+            upd, state = opt.update(g, state, params)
+            params = opt_lib.apply_updates(params, upd)
+        n1 = float(jnp.linalg.norm(params["x"]))
+        assert n1 < 0.5 * n0, f"|x| {n0} -> {n1}"
+
+    def test_adam_state_is_f32_for_bf16_params(self):
+        opt = opt_lib.adam(1e-3)
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = opt.init(params)
+        assert state["m"]["w"].dtype == jnp.float32
+        g = {"w": jnp.ones((4,), jnp.bfloat16)}
+        upd, state = opt.update(g, state, params)
+        p2 = opt_lib.apply_updates(params, upd)
+        assert p2["w"].dtype == jnp.bfloat16
+
+    def test_cosine_schedule(self):
+        s = schedules.cosine_decay(1.0, 100, warmup_steps=10)
+        assert float(s(0)) == 0.0
+        assert abs(float(s(10)) - 1.0) < 1e-6
+        assert float(s(100)) < 1e-6
+        assert 0.4 < float(s(55)) < 0.6
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, rng_key):
+        tree = {"a": jax.random.normal(rng_key, (4, 4)),
+                "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                      "d": jnp.ones((2,), jnp.bfloat16)}}
+        path = os.path.join(tmp_path, "ckpt.msgpack")
+        save_checkpoint(path, tree, step=7)
+        restored, step = restore_checkpoint(path, tree)
+        assert step == 7
+        assert utils.tree_allclose(
+            jax.tree.map(lambda x: x.astype(jnp.float32), tree),
+            jax.tree.map(lambda x: x.astype(jnp.float32), restored))
+        assert restored["b"]["d"].dtype == jnp.bfloat16
+
+    def test_model_params_roundtrip(self, tmp_path, rng_key):
+        cfg = get_config("tinyllama-1.1b", smoke=True)
+        params = transformer.init_params(cfg, rng_key)
+        path = os.path.join(tmp_path, "model.msgpack")
+        save_checkpoint(path, params, step=100)
+        restored, step = restore_checkpoint(path, params)
+        assert utils.tree_max_abs_diff(
+            utils.tree_cast(params, jnp.float32),
+            utils.tree_cast(restored, jnp.float32)) == 0.0
+
+
+class TestShardingRules:
+    def _mesh(self):
+        # 1x1 device mesh but with logical axis names; rules only read sizes,
+        # so fabricate a fake 16-way mesh via abstract check below instead.
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_rules_on_abstract_16way(self):
+        """Validate specs against a virtual 16x16 mesh using eval_shape
+        params (no devices needed: we check the returned PartitionSpecs)."""
+        import unittest.mock as mock
+        cfg = get_config("qwen3-8b").replace(dtype="bfloat16")
+        params = jax.eval_shape(
+            lambda k: transformer.init_params(cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            devices = np.empty((16, 16), dtype=object)
+
+        specs = shard_specs.param_pspecs(params, FakeMesh())
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        d = {"/".join(str(getattr(k, "key", k)) for k in path): s
+             for path, s in flat}
+        assert d["embed/table"] == P("model", None)          # 151936 % 16 == 0
+        assert d["layers/b0/attn/wq/w"] == P(None, None, "model")
+        assert d["layers/b0/attn/wo/w"] == P(None, "model", None)
+        assert d["layers/b0/ffn/gate/w"] == P(None, None, "model")
+        assert d["layers/b0/ffn/down/w"] == P(None, "model", None)
+        assert d["layers/b0/ln1/scale"] == P()
+
+    def test_moe_expert_sharding(self):
+        cfg = get_config("deepseek-moe-16b").replace(dtype="bfloat16")
+        params = jax.eval_shape(
+            lambda k: transformer.init_params(cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            devices = np.empty((16, 16), dtype=object)
+
+        specs = shard_specs.param_pspecs(params, FakeMesh())
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        d = {"/".join(str(getattr(k, "key", k)) for k in path): s
+             for path, s in flat}
+        assert d["layers/b0/moe/experts/gate"] == P(None, "model", None, None)
+        assert d["layers/b0/moe/router/w"] == P()
+        # vocab 102400 divisible by 16
+        assert d["embed/table"] == P("model", None)
+
+    def test_indivisible_dims_stay_replicated(self):
+        cfg = get_config("granite-3-8b")  # vocab 49155 (odd)
+        params = jax.eval_shape(
+            lambda k: transformer.init_params(cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            devices = np.empty((16, 16), dtype=object)
+
+        specs = shard_specs.param_pspecs(params, FakeMesh())
+        flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+        d = {"/".join(str(getattr(k, "key", k)) for k in path): s
+             for path, s in flat}
+        assert d["embed/table"] == P()
+
+    def test_batch_pspec_divisibility(self):
+        class FakeMesh:
+            axis_names = ("data", "model")
+            devices = np.empty((16, 16), dtype=object)
+
+        assert shard_specs.batch_pspec(FakeMesh(), 2, 256) == P("data", None)
+        assert shard_specs.batch_pspec(FakeMesh(), 2, 1) == P(None, None)
+
+
+class TestEvalProbes:
+    def test_ridge_probe_learns(self, rng_key):
+        """Gaussian class clusters — exactly separable by a linear probe
+        (argmax-of-random-linear labels are NOT ridge-separable in general)."""
+        k1, k2, k3 = jax.random.split(rng_key, 3)
+        centers = jax.random.normal(k1, (3, 8)) * 4.0
+        y = jax.random.randint(k2, (300,), 0, 3)
+        z = centers[y] + 0.5 * jax.random.normal(k3, (300, 8))
+        acc = eval_lib.ridge_linear_probe(z[:200], y[:200], z[200:], y[200:], 3)
+        assert float(acc) > 0.9
+
+    def test_knn_probe(self, rng_key):
+        k1, k2 = jax.random.split(rng_key)
+        centers = jax.random.normal(k1, (4, 8)) * 3
+        y = jax.random.randint(k2, (200,), 0, 4)
+        z = centers[y] + 0.3 * jax.random.normal(k2, (200, 8))
+        acc = eval_lib.knn_probe(z[:150], y[:150], z[150:], y[150:])
+        assert float(acc) > 0.9

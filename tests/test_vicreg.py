@@ -1,0 +1,118 @@
+"""D-VICReg (paper Sec. 6 future work): the aggregated-statistics strategy
+with VICReg's seven statistics — same linearity, same equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cco, fed_sim, vicreg
+from repro.optim import optimizers as opt_lib
+from repro import utils
+
+SET = settings(max_examples=20, deadline=None)
+
+
+class TestVicregStats:
+    @SET
+    @given(clients=st.integers(2, 5), n_per=st.integers(1, 4),
+           d=st.integers(2, 12), seed=st.integers(0, 2**16))
+    def test_linearity(self, clients, n_per, d, seed):
+        """All seven statistics aggregate exactly (the property that makes
+        the paper's strategy transfer to VICReg)."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        zf = jax.random.normal(k1, (clients * n_per, d))
+        zg = jax.random.normal(k2, (clients * n_per, d))
+        st_global = vicreg.vicreg_stats(zf, zg)
+        st_k = jax.vmap(vicreg.vicreg_stats)(
+            zf.reshape(clients, n_per, d), zg.reshape(clients, n_per, d))
+        agg = cco.weighted_average_stats(st_k, jnp.ones((clients,)) * n_per)
+        for k in vicreg.VICREG_STAT_KEYS:
+            np.testing.assert_allclose(np.asarray(agg[k]),
+                                       np.asarray(st_global[k]),
+                                       rtol=2e-5, atol=2e-6)
+
+    def test_loss_matches_direct_formula(self, rng_key):
+        """Stats-based VICReg == the direct per-sample formulation."""
+        k1, k2 = jax.random.split(rng_key)
+        zf = jax.random.normal(k1, (64, 8))
+        zg = zf + 0.2 * jax.random.normal(k2, (64, 8))
+        via_stats = float(vicreg.vicreg_loss(zf, zg))
+        # direct
+        inv = float(jnp.mean(jnp.sum((zf - zg) ** 2, -1) / 8))
+        def v(z):
+            return float(jnp.mean(jax.nn.relu(
+                1.0 - jnp.sqrt(jnp.var(z, axis=0) + 1e-4))))
+        def c(z):
+            zc = z - z.mean(0)
+            cov = zc.T @ zc / z.shape[0]
+            return float((jnp.sum(cov ** 2) - jnp.sum(jnp.diag(cov) ** 2)) / 8)
+        direct = 25 * inv + 25 * (v(zf) + v(zg)) + (c(zf) + c(zg))
+        np.testing.assert_allclose(via_stats, direct, rtol=1e-4)
+
+    def test_collapse_penalized(self, rng_key):
+        z = jnp.ones((32, 6)) * 0.5
+        healthy = jax.random.normal(rng_key, (32, 6))
+        assert float(vicreg.vicreg_loss(z, z)) > \
+            float(vicreg.vicreg_loss(healthy, healthy))
+
+
+class TestDVicregEquivalence:
+    def test_per_client_equals_fused_gradient(self, rng_key):
+        """Appendix-A transfers: per-client stop-grad D-VICReg gradients ==
+        centralized VICReg gradients."""
+        k1, k2 = jax.random.split(rng_key)
+        zf = jax.random.normal(k1, (12, 6))
+        zg = jax.random.normal(k2, (12, 6))
+        g1 = jax.grad(lambda z: vicreg.vicreg_loss(z, zg))(zf)
+        g2 = jax.grad(lambda z: vicreg.dvicreg_loss_per_client(z, zg, 4))(zf)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_federated_round_equals_centralized(self, rng_key):
+        """Full D-VICReg round through the federated simulator == one
+        centralized VICReg step (theorem holds for any stats-based loss)."""
+        params = {"w": jax.random.normal(rng_key, (10, 6)) * 0.4}
+
+        def apply(p, batch):
+            return jnp.tanh(batch["v1"] @ p["w"]), jnp.tanh(batch["v2"] @ p["w"])
+
+        k1, k2 = jax.random.split(rng_key)
+        data = {"v1": jax.random.normal(k1, (5, 3, 10)),
+                "v2": jax.random.normal(k2, (5, 3, 10))}
+        sizes = jnp.full((5,), 3, jnp.int32)
+        opt = opt_lib.sgd(0.1)
+
+        # D-VICReg round (reusing fed_sim machinery with vicreg stats/loss)
+        masks = (jnp.arange(3)[None] < sizes[:, None]).astype(jnp.float32)
+        st_k = jax.vmap(lambda b1, b2, m: vicreg.vicreg_stats_masked(
+            jnp.tanh(b1 @ params["w"]), jnp.tanh(b2 @ params["w"]), m))(
+            data["v1"], data["v2"], masks)
+        agg = cco.weighted_average_stats(st_k, sizes.astype(jnp.float32))
+
+        def client_update(b1, b2, m):
+            def loss_fn(p):
+                st = vicreg.vicreg_stats_masked(
+                    jnp.tanh(b1 @ p["w"]), jnp.tanh(b2 @ p["w"]), m)
+                return vicreg.vicreg_loss_from_stats(cco.dcco_combine(st, agg))
+            g = jax.grad(loss_fn)(params)
+            return jax.tree.map(lambda x: -1.0 * x, g)  # client lr 1.0 delta
+
+        deltas = jax.vmap(client_update)(data["v1"], data["v2"], masks)
+        w = sizes.astype(jnp.float32) / sizes.sum()
+        avg_delta = jax.tree.map(lambda d_: jnp.tensordot(w, d_, axes=1), deltas)
+        upd, _ = opt.update(utils.tree_scale(avg_delta, -1.0), opt.init(params), params)
+        p_fed = opt_lib.apply_updates(params, upd)
+
+        # centralized VICReg step
+        union1 = data["v1"].reshape(15, 10)
+        union2 = data["v2"].reshape(15, 10)
+
+        def central_loss(p):
+            return vicreg.vicreg_loss(jnp.tanh(union1 @ p["w"]),
+                                      jnp.tanh(union2 @ p["w"]))
+
+        g = jax.grad(central_loss)(params)
+        upd, _ = opt.update(g, opt.init(params), params)
+        p_cent = opt_lib.apply_updates(params, upd)
+        assert utils.tree_max_abs_diff(p_fed, p_cent) < 1e-5
