@@ -240,6 +240,59 @@ def dcco_round_bench():
         emit(f"dcco_round/clients{cpr}", us, f"samples={cpr * 2}")
 
 
+def round_engine_bench(rounds=100, cpr=16):
+    """Scan-compiled engine vs the Python round loop, equal rounds.
+
+    The loop path is the pre-engine driver: host-side cohort sampling +
+    one jitted round per Python dispatch. The engine compiles sampling and
+    all rounds into a single lax.scan program with a donated carry. Measured
+    in the paper's regime — tiny clients (s=2), small dual encoder — where
+    federated training is dispatch/sampling-bound, the regime the engine
+    targets. (A compute-bound body like the smoke ResNet hides dispatch
+    under ~90ms of conv work per round; see docs/architecture.md.)"""
+    from repro.core import fed_sim, round_engine
+    imgs, labels = synthetic.synthetic_labeled_images(400, 5, image_size=16)
+    ds = pipeline.FederatedDataset.build(
+        {"images": imgs}, labels, num_clients=100, samples_per_client=2,
+        alpha=0.0, seed=0)
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (16 * 16 * 3, 128)) * 0.05,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (128, 64)) * 0.1}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x.reshape(x.shape[0], -1) @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    opt = opt_lib.adam(1e-3)
+    round_fn = jax.jit(lambda p, st, b, s: fed_sim.dcco_round(
+        apply, p, st, opt, b, s, lam=5.0))
+    batch, sizes = ds.round_batch(jax.random.PRNGKey(0), cpr)
+    jax.block_until_ready(round_fn(params, opt.init(params), batch, sizes)[2].loss)
+    p, st = params, opt.init(params)
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        batch, sizes = ds.round_batch(jax.random.PRNGKey(1000 + r), cpr)
+        p, st, m = round_fn(p, st, batch, sizes)
+    jax.block_until_ready(m.loss)
+    us_loop = (time.perf_counter() - t0) / rounds * 1e6
+
+    ecfg = round_engine.EngineConfig(algorithm="dcco", lam=5.0,
+                                     chunk_rounds=rounds)
+    eng = round_engine.RoundEngine(apply, opt, ds.make_round_sampler(cpr), ecfg)
+    out = eng.run(params, opt.init(params), jax.random.PRNGKey(7), rounds)
+    jax.block_until_ready(out[2].loss)                       # warmup/compile
+    t0 = time.perf_counter()
+    pe, se, me = eng.run(params, opt.init(params), jax.random.PRNGKey(7), rounds)
+    jax.block_until_ready(me.loss)
+    us_eng = (time.perf_counter() - t0) / rounds * 1e6
+
+    emit("round_engine/python_loop", us_loop, f"rounds={rounds}")
+    emit("round_engine/scan_engine", us_eng,
+         f"rounds={rounds};speedup={us_loop / us_eng:.2f}x;"
+         f"loss={float(me.loss[-1]):.3f}")
+
+
 def fused_step_bench():
     from repro.configs.base import TrainConfig
     from repro.launch import steps as steps_lib
@@ -379,6 +432,7 @@ def main() -> None:
     table2_derm()
     figure3_collapse()
     dcco_round_bench()
+    round_engine_bench()
     fused_step_bench()
     stats_kernel_bench()
     stale_stats_study()

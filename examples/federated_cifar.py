@@ -3,7 +3,9 @@ compare DCCO vs FedAvg variants vs centralized CCO vs supervised-from-scratch
 across decentralized splits (clients x samples/client, IID vs non-IID).
 
 This is the end-to-end training driver example: a few hundred federated
-rounds of a (reduced) ResNet dual encoder per method and split.
+rounds of a (reduced) ResNet dual encoder per method and split, each driven
+by the scan-compiled round engine (repro.core.round_engine) — one XLA
+program per experiment instead of one dispatch per round.
 
 Run: PYTHONPATH=src python examples/federated_cifar.py [--rounds 60]
 """
@@ -13,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DualEncoderConfig, get_config
-from repro.core import eval as eval_lib, fed_sim, losses
+from repro.core import eval as eval_lib, round_engine
 from repro.data import pipeline, synthetic
 from repro.models import dual_encoder, resnet
 from repro.optim import optimizers as opt_lib, schedules
@@ -50,6 +52,9 @@ def main():
     splits = [("non-IID s=1", 0.0, 1, 32), ("non-IID s=4", 0.0, 4, 8),
               ("IID s=4", 1e9, 4, 8)]
     methods = ("dcco", "cco_fedavg", "contrastive_fedavg", "centralized")
+    algo = {"dcco": "dcco", "cco_fedavg": "fedavg_cco",
+            "contrastive_fedavg": "fedavg_contrastive",
+            "centralized": "centralized"}
 
     print(f"{'split':14s} " + " ".join(f"{m:>20s}" for m in methods))
     for split_name, alpha, spc, cpr in splits:
@@ -57,29 +62,20 @@ def main():
             {"images": imgs}, labels,
             num_clients=min(256, args.dataset_size // spc),
             samples_per_client=spc, alpha=alpha, seed=0)
+        sampler = ds.make_round_sampler(cpr)
         row = []
         for method in methods:
             if method == "cco_fedavg" and spc < 2:
                 row.append("FAILED(n<2)")
                 continue
             opt = opt_lib.adam(schedules.cosine_decay(2e-3, args.rounds))
-            state = opt.init(params0)
-            p = params0
-            for r in range(args.rounds):
-                batch, sizes = ds.round_batch(jax.random.PRNGKey(1000 + r), cpr)
-                if method == "dcco":
-                    p, state, _ = fed_sim.dcco_round(apply, p, state, opt,
-                                                     batch, sizes, lam=5.0)
-                elif method == "centralized":
-                    union = jax.tree.map(
-                        lambda x: x.reshape((-1,) + x.shape[2:]), batch)
-                    p, state, _ = fed_sim.centralized_step(
-                        apply, p, state, opt, union, lam=5.0)
-                else:
-                    kind = "cco" if method == "cco_fedavg" else "contrastive"
-                    p, state, _ = fed_sim.fedavg_round(
-                        apply, p, state, opt, batch, sizes, loss_kind=kind,
-                        lam=5.0, client_lr=0.5)
+            ecfg = round_engine.EngineConfig(
+                algorithm=algo[method], lam=5.0,
+                client_lr=0.5 if method.endswith("fedavg") else 1.0,
+                chunk_rounds=min(args.rounds, 30))
+            eng = round_engine.RoundEngine(apply, opt, sampler, ecfg)
+            p, _, _ = eng.run(params0, opt.init(params0),
+                              jax.random.PRNGKey(1000), args.rounds)
             row.append(f"{probe(p):.3f}")
         print(f"{split_name:14s} " + " ".join(f"{v:>20s}" for v in row))
     print(f"{'supervised':14s} {'(limited labels below)':>20s}")

@@ -1,8 +1,9 @@
 """Quickstart: 60 seconds of federated DCCO on synthetic non-IID clients.
 
 Shows the whole public API surface: config -> dual encoder -> federated
-dataset -> DCCO rounds -> linear-probe evaluation, plus the Appendix-A
-equivalence check against a centralized step.
+dataset -> scan-compiled DCCO rounds (repro.core.round_engine) ->
+linear-probe evaluation, plus the Appendix-A equivalence check against a
+centralized step.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +12,7 @@ import jax.numpy as jnp
 
 from repro import utils
 from repro.configs.base import DualEncoderConfig, get_config
-from repro.core import eval as eval_lib, fed_sim
+from repro.core import eval as eval_lib, fed_sim, round_engine
 from repro.data import pipeline, synthetic
 from repro.models import dual_encoder, resnet
 from repro.optim import optimizers as opt_lib
@@ -60,15 +61,20 @@ diff = utils.tree_max_abs_diff(p_fed, p_cent)
 upd = utils.tree_max_abs_diff(p_fed, params)
 print(f"equivalence check: |fed - centralized| / |update| = {diff / upd:.2e}")
 
-# 4. train 30 federated rounds
+# 4. train 30 federated rounds with the scan-compiled engine: client
+#    sampling, augmentation, and all rounds of a segment are ONE jitted
+#    lax.scan program; per-round metrics stream back per 10-round segment
 opt = opt_lib.adam(2e-3)
-state = opt.init(params)
-for r in range(30):
-    batch, sizes = ds.round_batch(jax.random.PRNGKey(100 + r), 16)
-    params, state, m = fed_sim.dcco_round(apply, params, state, opt,
-                                          batch, sizes, lam=5.0)
-    if (r + 1) % 10 == 0:
-        print(f"round {r + 1:3d}  loss={float(m.loss):8.3f}  "
-              f"enc_std={float(m.encoding_std):.3f}")
+ecfg = round_engine.EngineConfig(algorithm="dcco", lam=5.0, chunk_rounds=10)
+engine = round_engine.RoundEngine(apply, opt, ds.make_round_sampler(16), ecfg)
 
+
+def report(round_end, carry, m):
+    print(f"round {round_end:3d}  loss={float(m.loss[-1]):8.3f}  "
+          f"enc_std={float(m.encoding_std[-1]):.3f}")
+
+
+params, state, metrics = engine.run(params, opt.init(params),
+                                    jax.random.PRNGKey(100), 30,
+                                    on_segment=report)
 print(f"post-pretraining probe accuracy: {probe(params):.3f}")

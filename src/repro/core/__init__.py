@@ -10,3 +10,6 @@ from repro.core.dcco import (  # noqa: F401
 from repro.core.losses import (  # noqa: F401
     ntxent_loss, softmax_cross_entropy, byol_predictive_loss, encoding_variance)
 from repro.core import fed_sim  # noqa: F401
+from repro.core.round_engine import (  # noqa: F401
+    ALGORITHMS, EngineCarry, EngineConfig, EngineMetrics, RoundEngine,
+    dcco_round_sharded, make_round_body)

@@ -43,25 +43,61 @@ def _client_masks(client_sizes, n_pad: int):
     return (idx < client_sizes[:, None]).astype(F32)
 
 
+def client_local_steps(loss_fn, params, client_lr: float, local_steps: int):
+    """Run a client's local plain-GD steps (paper: lr 1.0, 1 step).
+
+    Returns (delta in f32, first-step loss). Shared by every round body —
+    fed_sim and the sharded engine path — so the update rule has one home.
+    """
+    p_local = params
+    loss0 = jnp.zeros((), F32)
+    for step in range(local_steps):
+        loss_val, g = jax.value_and_grad(loss_fn)(p_local)
+        if step == 0:
+            loss0 = loss_val
+        p_local = jax.tree.map(
+            lambda p_, g_: (p_.astype(F32)
+                            - client_lr * g_.astype(F32)).astype(p_.dtype),
+            p_local, g)
+    delta = utils.tree_sub(utils.tree_cast(p_local, F32),
+                           utils.tree_cast(params, F32))
+    return delta, loss0
+
+
 # ---------------------------------------------------------------------------
 # DCCO round (paper Sec 3.3, Fig. 2)
 # ---------------------------------------------------------------------------
 
 def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
                client_data, client_sizes, *, lam: float = 20.0,
-               client_lr: float = 1.0, local_steps: int = 1):
-    """One DCCO round. Returns (params, opt_state, metrics)."""
+               client_lr: float = 1.0, local_steps: int = 1,
+               agg_stats_fn: Optional[Callable] = None):
+    """One DCCO round. Returns (params, opt_state, metrics).
+
+    ``agg_stats_fn(zf_flat, zg_flat, mask_flat) -> Stats``, if given, computes
+    the phase-1 *aggregate* statistics in one pass over the flattened cohort
+    encodings. By Eq. 3 (stats are linear in samples) this equals the weighted
+    average of per-client stats exactly — it is how the engine routes phase 1
+    through the fused ``cco_stats_pallas`` kernel. Phase 1 is never
+    differentiated, so a non-differentiable kernel is safe here.
+    """
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
     masks = _client_masks(client_sizes, n_pad)               # (K, n)
     w = client_sizes.astype(F32) / jnp.sum(client_sizes.astype(F32))
 
     # ---- phase 1: clients compute local stats; server aggregates (Eq. 3)
-    def client_stats(batch, mask):
-        zf, zg = encoder_apply(params, batch)
-        return cco.encoding_stats_masked(zf, zg, mask)
+    if agg_stats_fn is None:
+        def client_stats(batch, mask):
+            zf, zg = encoder_apply(params, batch)
+            return cco.encoding_stats_masked(zf, zg, mask)
 
-    st_k = jax.vmap(client_stats)(client_data, masks)
-    agg = cco.weighted_average_stats(st_k, client_sizes.astype(F32))
+        st_k = jax.vmap(client_stats)(client_data, masks)
+        agg = cco.weighted_average_stats(st_k, client_sizes.astype(F32))
+    else:
+        zf_k, zg_k = jax.vmap(lambda b: encoder_apply(params, b))(client_data)
+        agg = agg_stats_fn(zf_k.reshape(-1, zf_k.shape[-1]),
+                           zg_k.reshape(-1, zg_k.shape[-1]),
+                           masks.reshape(-1))
 
     # ---- phase 2: server redistributes agg stats; clients run local steps
     def client_update(batch, mask):
@@ -71,18 +107,7 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
             combined = cco.dcco_combine(local, agg)
             return cco.cco_loss_from_stats(combined, lam)
 
-        p_local = params
-        loss0 = jnp.zeros((), F32)
-        for step in range(local_steps):
-            loss_val, g = jax.value_and_grad(loss_fn)(p_local)
-            if step == 0:
-                loss0 = loss_val
-            # plain GD on the client (paper: lr 1.0)
-            p_local = jax.tree.map(
-                lambda p_, g_: (p_.astype(F32) - client_lr * g_.astype(F32)).astype(p_.dtype),
-                p_local, g)
-        delta = utils.tree_sub(utils.tree_cast(p_local, F32), utils.tree_cast(params, F32))
-        return delta, loss0
+        return client_local_steps(loss_fn, params, client_lr, local_steps)
 
     deltas, losses_k = jax.vmap(client_update)(client_data, masks)
 
@@ -124,17 +149,8 @@ def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
         raise ValueError(loss_kind)
 
     def client_update(batch, mask):
-        p_local = params
-        loss0 = jnp.zeros((), F32)
-        for step in range(local_steps):
-            loss_val, g = jax.value_and_grad(client_loss)(p_local, batch, mask)
-            if step == 0:
-                loss0 = loss_val
-            p_local = jax.tree.map(
-                lambda p_, g_: (p_.astype(F32) - client_lr * g_.astype(F32)).astype(p_.dtype),
-                p_local, g)
-        return utils.tree_sub(utils.tree_cast(p_local, F32),
-                              utils.tree_cast(params, F32)), loss0
+        return client_local_steps(lambda p: client_loss(p, batch, mask),
+                                  params, client_lr, local_steps)
 
     deltas, losses_k = jax.vmap(client_update)(client_data, masks)
     avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)

@@ -1,0 +1,324 @@
+"""Scan-compiled federated round engine.
+
+The paper's runtime is hundreds-to-thousands of rounds over sampled cohorts
+of tiny clients (Fig. 2). Driving :mod:`repro.core.fed_sim` one round at a
+time from Python pays per-round dispatch, host-side cohort sampling, and a
+re-trace whenever shapes wobble. The engine compiles the whole multi-round
+loop into ONE XLA program:
+
+  * ``lax.scan`` over rounds with a donated ``(params, opt_state, rng)``
+    carry — no host round-trips, buffers reused in place;
+  * in-scan client sampling via ``jax.random.fold_in(rng, round_index)``
+    followed by on-device gather + augmentation (the sampler is a traced
+    function, so cohort selection lives inside the scan body);
+  * a pluggable round body: ``dcco`` | ``fedavg_cco`` | ``fedavg_contrastive``
+    | ``fedavg_byol`` | ``centralized`` — all reuse the reference semantics in
+    :mod:`repro.core.fed_sim`, so scan-of-N-rounds == N Python-driven rounds
+    (tested in tests/test_round_engine.py);
+  * a sharded-cohort DCCO path: the (K, n, ...) client axis is laid across
+    the mesh's data axis with ``shard_map``; the phase-1 stats aggregation
+    and the phase-2 delta average become explicit psums — the wire protocol
+    of Fig. 2 at device granularity (same pattern as core/dcco.py);
+  * optional routing of the phase-1 aggregate statistics through the fused
+    one-pass ``cco_stats_pallas`` kernel (exact by Eq. 3 — statistics are
+    linear in samples, so the flattened-cohort stats equal the weighted
+    average of per-client stats);
+  * chunked scan segments: rounds run in segments of ``chunk_rounds`` so
+    per-round metrics (loss, encoding-std collapse probe) stream back to the
+    host between segments, where periodic checkpointing via
+    ``repro.checkpoint`` hooks in.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import utils
+from repro.core import cco, fed_sim
+from repro.core.dcco import shard_map_compat
+from repro.optim import optimizers as opt_lib
+
+F32 = jnp.float32
+
+ALGORITHMS = ("dcco", "fedavg_cco", "fedavg_contrastive", "fedavg_byol",
+              "centralized")
+
+
+class EngineConfig(NamedTuple):
+    """Static configuration of the compiled round loop."""
+    algorithm: str = "dcco"
+    lam: float = 20.0
+    temperature: float = 0.1
+    client_lr: float = 1.0
+    local_steps: int = 1
+    chunk_rounds: int = 20          # rounds per jitted scan segment
+    scan_unroll: int = 0            # 0 = auto: 8 on CPU (XLA:CPU loses
+                                    # inter-op parallelism inside while
+                                    # bodies), 1 on accelerators
+    donate: bool = True             # donate the (params, opt, rng) carry
+    cohort_axis: Optional[str] = None   # mesh axis to shard the K client axis
+    stats_kernel: str = "off"       # "off" | "pallas" | "interpret"
+
+
+class EngineCarry(NamedTuple):
+    params: Any
+    opt_state: Any
+    rng: jnp.ndarray
+
+
+class EngineMetrics(NamedTuple):
+    """Stacked per-round metrics, leading axis = rounds."""
+    loss: jnp.ndarray
+    encoding_std: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# phase-1 aggregate statistics through the fused Pallas kernel
+# ---------------------------------------------------------------------------
+
+def make_kernel_agg_stats(interpret: bool = False) -> Callable:
+    """Aggregate cohort stats in one pass of the fused cco_stats kernel.
+
+    Rows are pre-masked (zeroed) and the normalizer is the true valid-sample
+    count, which is exact for binary masks: (m*f)^2 = m*f^2 and
+    (m*f)(m*g) = m*f*g.
+    """
+    from repro.kernels.cco_stats import cco_stats_pallas
+
+    def agg_stats(zf, zg, mask):
+        m = mask.astype(F32)[:, None]
+        return cco_stats_pallas(zf.astype(F32) * m, zg.astype(F32) * m,
+                                jnp.sum(mask.astype(F32)), interpret=interpret)
+
+    return agg_stats
+
+
+def _resolve_agg_stats_fn(cfg: EngineConfig) -> Optional[Callable]:
+    if cfg.stats_kernel == "off":
+        return None
+    if cfg.stats_kernel == "pallas":
+        # pallas only compiles on accelerator backends; CPU falls back to
+        # the (slow but exact) interpreter so the flag works everywhere
+        return make_kernel_agg_stats(
+            interpret=jax.default_backend() == "cpu")
+    if cfg.stats_kernel == "interpret":
+        return make_kernel_agg_stats(interpret=True)
+    raise ValueError(f"unknown stats_kernel {cfg.stats_kernel!r}")
+
+
+# ---------------------------------------------------------------------------
+# sharded-cohort DCCO round (client axis on the mesh's data axis)
+# ---------------------------------------------------------------------------
+
+def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
+                       client_data, client_sizes, mesh, *, lam: float = 20.0,
+                       client_lr: float = 1.0, local_steps: int = 1,
+                       axis: str = "data"):
+    """One DCCO round with the (K, n, ...) client axis sharded over ``axis``.
+
+    Each shard hosts K/ndev clients; phase-1 aggregation and the phase-2
+    delta average are explicit psums over ``axis`` — exactly the wire
+    collectives of Fig. 2, reusing the psum pattern of core/dcco.py. Output
+    equals the single-device ``fed_sim.dcco_round`` (weights N_k/N are
+    normalized by the psummed global sample count).
+    """
+    n_pad = jax.tree.leaves(client_data)[0].shape[1]
+
+    def local_body(p, batch_l, sizes_l):
+        masks = fed_sim._client_masks(sizes_l, n_pad)
+        n_tot = jax.lax.psum(jnp.sum(sizes_l.astype(F32)), axis)
+        w_l = sizes_l.astype(F32) / n_tot
+
+        def client_stats(batch, mask):
+            zf, zg = encoder_apply(p, batch)
+            return cco.encoding_stats_masked(zf, zg, mask)
+
+        st_k = jax.vmap(client_stats)(batch_l, masks)
+        agg = {k: jax.lax.psum(jnp.tensordot(w_l, v, axes=1), axis)
+               for k, v in st_k.items()}
+
+        def client_update(batch, mask):
+            def loss_fn(pp):
+                zf, zg = encoder_apply(pp, batch)
+                local = cco.encoding_stats_masked(zf, zg, mask)
+                return cco.cco_loss_from_stats(cco.dcco_combine(local, agg), lam)
+
+            return fed_sim.client_local_steps(loss_fn, p, client_lr,
+                                              local_steps)
+
+        deltas, losses_k = jax.vmap(client_update)(batch_l, masks)
+        avg_delta = jax.tree.map(
+            lambda d: jax.lax.psum(jnp.tensordot(w_l, d, axes=1), axis), deltas)
+        loss = jax.lax.psum(jnp.sum(w_l * losses_k), axis)
+        return avg_delta, loss[None], agg
+
+    sharded = shard_map_compat(
+        local_body, mesh,
+        in_specs=(P(), P(axis), P(axis)),
+        out_specs=(P(), P(), P()))
+    avg_delta, loss, agg = sharded(params, client_data, client_sizes)
+
+    pseudo_grad = utils.tree_scale(avg_delta, -1.0)
+    updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
+    params = opt_lib.apply_updates(params, updates)
+    enc_std = jnp.sqrt(jnp.maximum(agg["sq_f"] - agg["mean_f"] ** 2, 0.0)).mean()
+    return params, opt_state, fed_sim.RoundMetrics(loss.reshape(()), enc_std)
+
+
+# ---------------------------------------------------------------------------
+# round bodies
+# ---------------------------------------------------------------------------
+
+def make_round_body(encoder_apply: Callable, server_opt, cfg: EngineConfig,
+                    mesh=None) -> Callable:
+    """Build round_fn(params, opt_state, batch, sizes) for cfg.algorithm."""
+    if cfg.algorithm not in ALGORITHMS:
+        raise ValueError(f"unknown algorithm {cfg.algorithm!r}; "
+                         f"expected one of {ALGORITHMS}")
+    if cfg.cohort_axis is not None and cfg.algorithm != "dcco":
+        raise NotImplementedError(
+            "sharded cohorts are implemented for the dcco body only")
+
+    if cfg.algorithm == "dcco":
+        if cfg.cohort_axis is not None:
+            if mesh is None:
+                raise ValueError("cohort_axis requires a mesh")
+
+            def round_fn(params, opt_state, batch, sizes):
+                return dcco_round_sharded(
+                    encoder_apply, params, opt_state, server_opt, batch, sizes,
+                    mesh, lam=cfg.lam, client_lr=cfg.client_lr,
+                    local_steps=cfg.local_steps, axis=cfg.cohort_axis)
+        else:
+            agg_stats_fn = _resolve_agg_stats_fn(cfg)
+
+            def round_fn(params, opt_state, batch, sizes):
+                return fed_sim.dcco_round(
+                    encoder_apply, params, opt_state, server_opt, batch, sizes,
+                    lam=cfg.lam, client_lr=cfg.client_lr,
+                    local_steps=cfg.local_steps, agg_stats_fn=agg_stats_fn)
+    elif cfg.algorithm.startswith("fedavg_"):
+        kind = {"fedavg_cco": "cco", "fedavg_contrastive": "contrastive",
+                "fedavg_byol": "byol"}[cfg.algorithm]
+
+        def round_fn(params, opt_state, batch, sizes):
+            return fed_sim.fedavg_round(
+                encoder_apply, params, opt_state, server_opt, batch, sizes,
+                loss_kind=kind, lam=cfg.lam, temperature=cfg.temperature,
+                client_lr=cfg.client_lr, local_steps=cfg.local_steps)
+    else:  # centralized: union of the cohort, one large-batch CCO step
+        def round_fn(params, opt_state, batch, sizes):
+            n_pad = jax.tree.leaves(batch)[0].shape[1]
+            union = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
+            mask = fed_sim._client_masks(sizes, n_pad).reshape(-1)
+            return fed_sim.centralized_step(
+                encoder_apply, params, opt_state, server_opt, union,
+                mask=mask, lam=cfg.lam)
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class RoundEngine:
+    """jit + lax.scan federated training driver.
+
+    ``sampler(k_sel, k_aug) -> (batch, sizes)`` must be jax-traceable: it
+    runs INSIDE the scan body (see FederatedDataset.make_round_sampler).
+    A full experiment is ceil(R / chunk_rounds) XLA program invocations
+    instead of R Python dispatches.
+    """
+
+    def __init__(self, encoder_apply: Callable, server_opt,
+                 sampler: Callable, config: EngineConfig = EngineConfig(),
+                 mesh=None):
+        if config.chunk_rounds < 1:
+            raise ValueError(
+                f"chunk_rounds must be >= 1, got {config.chunk_rounds}")
+        self.config = config
+        self.sampler = sampler
+        self.round_fn = make_round_body(encoder_apply, server_opt, config, mesh)
+        donate = (0,) if config.donate else ()
+        self._segment = jax.jit(
+            functools.partial(self._run_segment, config.chunk_rounds),
+            donate_argnums=donate)
+        self._tail_segments = {}   # tail length -> jitted segment
+        self._donate = donate
+
+    # -- one scan segment ---------------------------------------------------
+    def _run_segment(self, num_rounds: int, carry: EngineCarry, start):
+        def body(c, r):
+            rkey = jax.random.fold_in(c.rng, r)
+            k_sel, k_aug = jax.random.split(rkey)
+            batch, sizes = self.sampler(k_sel, k_aug)
+            params, opt_state, m = self.round_fn(c.params, c.opt_state,
+                                                 batch, sizes)
+            return (EngineCarry(params, opt_state, c.rng),
+                    EngineMetrics(m.loss, m.encoding_std))
+
+        unroll = self.config.scan_unroll or (
+            8 if jax.default_backend() == "cpu" else 1)
+        xs = start + jnp.arange(num_rounds)
+        return jax.lax.scan(body, carry, xs,
+                            unroll=min(unroll, num_rounds))
+
+    def _segment_fn(self, num_rounds: int):
+        if num_rounds == self.config.chunk_rounds:
+            return self._segment
+        if num_rounds not in self._tail_segments:
+            self._tail_segments[num_rounds] = jax.jit(
+                functools.partial(self._run_segment, num_rounds),
+                donate_argnums=self._donate)
+        return self._tail_segments[num_rounds]
+
+    # -- full run -----------------------------------------------------------
+    def run(self, params, opt_state, rng, rounds: int, *, start_round: int = 0,
+            on_segment: Optional[Callable] = None, ckpt_dir: Optional[str] = None,
+            ckpt_every: int = 0, ckpt_name: str = "engine"):
+        """Run ``rounds`` rounds; returns (params, opt_state, EngineMetrics).
+
+        Metrics stream back per segment; ``on_segment(round_end, carry,
+        seg_metrics)`` fires after each segment; checkpoints are written at
+        the first segment boundary at or past each ``ckpt_every`` multiple.
+
+        With ``donate=True`` (default) the ``carry`` seen by ``on_segment``
+        is donated to the NEXT segment: read it synchronously inside the
+        callback (evaluate, log, ...) and ``jnp.copy`` anything you keep —
+        retained references raise "Array has been deleted" later. The
+        segment metrics are not donated and are safe to keep.
+        """
+        carry = EngineCarry(params, opt_state, rng)
+        if self._donate:
+            # segments donate their carry; copy once so the CALLER's buffers
+            # survive the run (donation then recycles only engine-internal
+            # buffers from segment to segment).
+            carry = jax.tree.map(jnp.copy, carry)
+        chunk = self.config.chunk_rounds
+        losses, stds = [], []
+        done, last_ckpt = 0, 0
+        while done < rounds:
+            seg = min(chunk, rounds - done)
+            carry, m = self._segment_fn(seg)(
+                carry, jnp.asarray(start_round + done, jnp.int32))
+            done += seg
+            losses.append(m.loss)
+            stds.append(m.encoding_std)
+            round_end = start_round + done
+            if on_segment is not None:
+                on_segment(round_end, carry, m)
+            if ckpt_dir and ckpt_every and (done - last_ckpt) >= ckpt_every:
+                from repro.checkpoint import save_checkpoint
+                path = os.path.join(ckpt_dir, f"{ckpt_name}.msgpack")
+                save_checkpoint(path, {"params": carry.params,
+                                       "opt": carry.opt_state}, round_end)
+                last_ckpt = done
+        metrics = EngineMetrics(jnp.concatenate(losses) if losses else jnp.zeros((0,)),
+                                jnp.concatenate(stds) if stds else jnp.zeros((0,)))
+        return carry.params, carry.opt_state, metrics

@@ -26,6 +26,8 @@ class FederatedDataset:
         self.labels = labels
         self.client_index = client_index
         self.vocab = vocab
+        self._samplers: Dict[int, object] = {}
+        self._staged = None      # device-resident (data, client_index)
 
     @property
     def num_clients(self) -> int:
@@ -48,37 +50,79 @@ class FederatedDataset:
 
     # ------------------------------------------------------------- rounds --
 
+    def _two_views(self, k_aug, gathered, k: int, n: int):
+        """Augment gathered (K*n, ...) raw samples into stacked two-view
+        batches (K, n, ...). The single source of truth for the view
+        pipeline, shared by the host path (round_batch) and the in-scan
+        path (make_round_sampler)."""
+        out = {}
+        if "images" in gathered:
+            keys = jax.random.split(k_aug, k * n)
+            v1, v2 = jax.vmap(augment.two_views_image)(keys, gathered["images"])
+            out["v1"] = v1.reshape(k, n, *v1.shape[1:])
+            out["v2"] = v2.reshape(k, n, *v2.shape[1:])
+        if "tokens" in gathered:
+            keys = jax.random.split(k_aug, k * n)
+            v1, v2 = jax.vmap(
+                lambda kk, tt: augment.two_views_tokens(kk, tt, self.vocab)
+            )(keys, gathered["tokens"])
+            out["v1"] = v1.reshape(k, n, *v1.shape[1:])
+            out["v2"] = v2.reshape(k, n, *v2.shape[1:])
+        return out
+
     def round_batch(self, key, clients_per_round: int):
         """Sample K clients, gather raw samples, build two augmented views.
 
         Returns (client_data pytree (K, n, ...), client_sizes (K,)).
-        """
+        Gathers on the HOST — only the sampled cohort touches the device,
+        so this works for corpora larger than device memory. The engine's
+        in-scan twin is ``make_round_sampler`` (same math, tested equal)."""
         k_sel, k_aug = jax.random.split(key)
-        sel = jax.random.choice(k_sel, self.num_clients, (clients_per_round,),
-                                replace=False)
-        sel = np.asarray(sel)
+        sel = np.asarray(jax.random.choice(
+            k_sel, self.num_clients, (clients_per_round,), replace=False))
         idx = self.client_index[sel]                          # (K, n)
         k, n = idx.shape
-        out = {}
-        if "images" in self.data:
-            imgs = jnp.asarray(self.data["images"][idx.reshape(-1)])
-            keys = jax.random.split(k_aug, imgs.shape[0])
-            v1, v2 = jax.vmap(augment.two_views_image)(keys, imgs)
-            out["v1"] = v1.reshape(k, n, *v1.shape[1:])
-            out["v2"] = v2.reshape(k, n, *v2.shape[1:])
-        if "tokens" in self.data:
-            toks = jnp.asarray(self.data["tokens"][idx.reshape(-1)])
-            keys = jax.random.split(k_aug, toks.shape[0])
-            v1, v2 = jax.vmap(
-                lambda kk, tt: augment.two_views_tokens(kk, tt, self.vocab)
-            )(keys, toks)
-            out["v1"] = v1.reshape(k, n, *v1.shape[1:])
-            out["v2"] = v2.reshape(k, n, *v2.shape[1:])
-        sizes = jnp.full((k,), n, jnp.int32)
-        return out, sizes
+        gathered = {kk: jnp.asarray(v[idx.reshape(-1)])
+                    for kk, v in self.data.items()}
+        return self._two_views(k_aug, gathered, k, n), \
+            jnp.full((k,), n, jnp.int32)
 
     def flat_round_batch(self, key, clients_per_round: int):
         """Same sampling, flattened to (K*n, ...) for the fused pod step."""
         batch, sizes = self.round_batch(key, clients_per_round)
         flat = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
         return flat, sizes
+
+    # ------------------------------------------------- in-scan sampling --
+
+    def make_round_sampler(self, clients_per_round: int):
+        """A jax-traceable ``sampler(k_sel, k_aug) -> (batch, sizes)``.
+
+        The whole dataset and client index are staged onto device once per
+        dataset (cached, shared by all samplers); the returned closure does
+        cohort selection, gather, and the two-view augmentation with pure
+        jax ops, so it can run INSIDE a scan body
+        (repro.core.round_engine). Assumes the dataset fits in device
+        memory — the paper's decentralized corpora are small; for a corpus
+        larger than device memory, use the host-gathering ``round_batch``.
+        """
+        if clients_per_round in self._samplers:
+            return self._samplers[clients_per_round]
+        if self._staged is None:
+            self._staged = ({k: jnp.asarray(v) for k, v in self.data.items()},
+                            jnp.asarray(self.client_index))
+        data, cindex = self._staged
+        num_clients, n = self.num_clients, self.samples_per_client
+        k_round = clients_per_round
+
+        def sampler(k_sel, k_aug):
+            sel = jax.random.choice(k_sel, num_clients, (k_round,),
+                                    replace=False)
+            idx = cindex[sel].reshape(-1)                    # (K*n,)
+            gathered = {kk: v[idx] for kk, v in data.items()}
+            out = self._two_views(k_aug, gathered, k_round, n)
+            sizes = jnp.full((k_round,), n, jnp.int32)
+            return out, sizes
+
+        self._samplers[clients_per_round] = sampler
+        return sampler

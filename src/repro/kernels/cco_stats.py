@@ -63,12 +63,15 @@ def _stats_kernel(zf_ref, zg_ref, inv_n_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
-def cco_stats_pallas(zf, zg, *, block_n: int = 512, block_d: int = 256,
-                     interpret: bool = False):
+def cco_stats_pallas(zf, zg, num_valid=None, *, block_n: int = 512,
+                     block_d: int = 256, interpret: bool = False):
     """zf, zg: (N, d) -> dict of the five statistics (all f32).
 
     N and d are padded to block multiples internally (zero padding is exact
-    for sums; the 1/N scale uses the true N).
+    for sums; the 1/N scale uses the true N). ``num_valid`` (a traced scalar)
+    overrides the normalizer — used with pre-masked encodings (rows zeroed
+    for padding samples) so variable-size cohorts normalize by the true
+    sample count instead of the padded N.
     """
     n, d = zf.shape
     bn = min(block_n, max(n, 8))
@@ -79,7 +82,10 @@ def cco_stats_pallas(zf, zg, *, block_n: int = 512, block_d: int = 256,
         zf = jnp.pad(zf, ((0, n_p - n), (0, d_p - d)))
         zg = jnp.pad(zg, ((0, n_p - n), (0, d_p - d)))
     gi, gj, gk = d_p // bd, d_p // bd, n_p // bn
-    inv_n = jnp.full((1,), 1.0 / n, F32)
+    if num_valid is None:
+        inv_n = jnp.full((1,), 1.0 / n, F32)
+    else:
+        inv_n = (1.0 / jnp.maximum(num_valid, 1.0)).reshape(1).astype(F32)
 
     out_shapes = (
         jax.ShapeDtypeStruct((d_p, d_p), F32),   # cross

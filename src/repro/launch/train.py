@@ -1,12 +1,17 @@
 """Production training driver: federated DCCO pretraining of any assigned
 architecture (``--arch``), runnable end-to-end on CPU with smoke configs.
 
-Two execution modes:
+Three execution modes:
+  * ``--mode engine``    — scan-compiled round engine (default): the whole
+                           multi-round loop (sampling included) is ONE jitted
+                           lax.scan program per metrics segment, with donated
+                           carry and periodic checkpointing.
   * ``--mode fused``     — pod-style fused train step (one jit'd step ==
                            one federated round via the Appendix-A theorem;
                            what the dry-run lowers to the production mesh).
-  * ``--mode protocol``  — the client-level federated simulator
-                           (explicit stats round-trip; reference semantics).
+  * ``--mode protocol``  — the client-level federated simulator, one Python
+                           dispatch per round (reference semantics; also the
+                           baseline the engine is benchmarked against).
 
 Example (CPU, reduced config, a few hundred rounds):
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \\
@@ -26,7 +31,7 @@ import numpy as np
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import (DualEncoderConfig, TrainConfig, get_config,
                                 get_dual_encoder_config)
-from repro.core import eval as eval_lib, fed_sim
+from repro.core import eval as eval_lib, fed_sim, round_engine
 from repro.data import pipeline, synthetic
 from repro.launch import steps as steps_lib
 from repro.models import dual_encoder
@@ -70,7 +75,15 @@ def main():
     ap.add_argument("--arch", default="resnet14-cifar")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--mode", choices=["fused", "protocol"], default="protocol")
+    ap.add_argument("--mode", choices=["engine", "fused", "protocol"],
+                    default="engine")
+    ap.add_argument("--chunk-rounds", type=int, default=0,
+                    help="rounds per scan segment (engine mode; 0=eval-every)")
+    ap.add_argument("--stats-kernel", choices=["off", "pallas", "interpret"],
+                    default="off",
+                    help="route phase-1 aggregate stats through the fused "
+                         "Pallas kernel (engine mode; 'pallas' falls back "
+                         "to the interpreter on CPU)")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients-per-round", type=int, default=16)
     ap.add_argument("--samples-per-client", type=int, default=2)
@@ -134,6 +147,32 @@ def main():
     os.makedirs(args.ckpt_dir, exist_ok=True)
     history = []
     t0 = time.time()
+
+    if args.mode == "engine":
+        chunk = args.chunk_rounds or args.eval_every or 25
+        ecfg = round_engine.EngineConfig(
+            algorithm="dcco", lam=args.lam, client_lr=args.client_lr,
+            chunk_rounds=chunk, stats_kernel=args.stats_kernel)
+        engine = round_engine.RoundEngine(
+            apply, opt, ds.make_round_sampler(args.clients_per_round), ecfg)
+
+        def on_segment(round_end, carry, m):
+            history.extend(float(x) for x in np.asarray(m.loss))
+            acc = evaluate(carry.params)
+            dt = time.time() - t0
+            print(f"round {round_end:5d} loss={history[-1]:9.4f} "
+                  f"enc_std={float(m.encoding_std[-1]):.4f} "
+                  f"probe_acc={acc:.3f} "
+                  f"({dt / (round_end - start_round):.2f}s/round)", flush=True)
+
+        params, opt_state, _ = engine.run(
+            params, opt_state, jax.random.PRNGKey(args.seed),
+            args.rounds - start_round, start_round=start_round,
+            on_segment=on_segment, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, ckpt_name=args.arch)
+        _report(args, history, evaluate, params)
+        return
+
     for r in range(start_round, args.rounds):
         rkey = jax.random.PRNGKey(args.seed * 100003 + r)
         if args.mode == "protocol":
@@ -157,8 +196,17 @@ def main():
         if (r + 1) % args.ckpt_every == 0:
             path = os.path.join(args.ckpt_dir, f"{args.arch}.msgpack")
             save_checkpoint(path, {"params": params, "opt": opt_state}, r + 1)
-    print(f"final loss {history[-1]:.4f}; first {history[0]:.4f}; "
-          f"probe {evaluate(params):.3f}")
+    _report(args, history, evaluate, params)
+
+
+def _report(args, history, evaluate, params):
+    if history:
+        print(f"final loss {history[-1]:.4f}; first {history[0]:.4f}; "
+              f"probe {evaluate(params):.3f}")
+    else:
+        print(f"no rounds to run (resumed at or past --rounds "
+              f"{args.rounds}); probe {evaluate(params):.3f}")
+        return
     with open(os.path.join(args.ckpt_dir, "history.json"), "w") as f:
         json.dump(history, f)
 

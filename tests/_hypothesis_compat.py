@@ -1,0 +1,58 @@
+"""Hypothesis if installed, else minimal stand-ins.
+
+The property-based tests (test_cco, test_vicreg, test_attention) want
+``hypothesis``, which the dev extra provides (``pip install -r
+requirements-dev.txt``). On a bare install this module substitutes
+single-example stand-ins: each ``@given`` property runs ONCE with a fixed,
+deterministic representative drawn from each strategy — so the suite still
+collects and exercises every property, just without the randomized search.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Fixed:
+        """A strategy reduced to one representative example."""
+
+        def __init__(self, value):
+            self.value = value
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=None):
+            if max_value is None:
+                return _Fixed(min_value)
+            return _Fixed((min_value + max_value) // 2)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Fixed(list(elements)[0])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Fixed((min_value + max_value) / 2.0)
+
+        @staticmethod
+        def booleans():
+            return _Fixed(False)
+
+    def settings(*_args, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # no functools.wraps: pytest must see a parameterless signature,
+            # not the property's argument list (it would hunt for fixtures)
+            def wrapper(*args):
+                fixed = {k: s.value for k, s in strategies.items()}
+                return fn(*args, **fixed)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -138,7 +138,10 @@ class TestCostModel:
             return transformer.forward(cfg, p, t).sum()
 
         compiled = jax.jit(fwd).lower(params, toks).compile()
-        xla_flops = compiled.cost_analysis()["flops"]
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+            ca = ca[0]
+        xla_flops = ca["flops"]
         counts = costmodel.param_counts(cfg)
         analytic = (2.0 * (counts["active"] - counts["embed"]) * b * s
                     + costmodel._attn_layers(cfg)

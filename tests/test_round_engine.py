@@ -1,0 +1,258 @@
+"""Scan-compiled round engine (repro.core.round_engine):
+
+  * scan-of-N-rounds == N Python-driven fed_sim rounds (same fold_in keys);
+  * segment chunking is a pure implementation detail (chunk=3 == chunk=7);
+  * all five algorithm bodies run and train;
+  * phase-1 aggregate stats through the Pallas kernel == the jnp path;
+  * in-scan sampler == host-driven FederatedDataset.round_batch;
+  * chunked metrics streaming + periodic checkpointing;
+  * sharded-cohort DCCO == single-device DCCO on a forced 2-device CPU mesh
+    (subprocess, --xla_force_host_platform_device_count).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import utils
+from repro.core import fed_sim, round_engine
+from repro.data import pipeline, synthetic
+from repro.optim import optimizers as opt_lib
+
+LAM = 5.0
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (10, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    pool = {"v1": jax.random.normal(jax.random.PRNGKey(1), (20, 3, 10)),
+            "v2": jax.random.normal(jax.random.PRNGKey(2), (20, 3, 10))}
+
+    def sampler(k_sel, k_aug):
+        sel = jax.random.choice(k_sel, 20, (6,), replace=False)
+        return (jax.tree.map(lambda x: x[sel], pool),
+                jnp.full((6,), 3, jnp.int32))
+
+    return params, apply, sampler
+
+
+def _run_python_loop(params, apply, sampler, opt, rng, rounds, **round_kw):
+    """The reference: one fed_sim round per Python dispatch, keys derived
+    exactly like the engine derives them in-scan."""
+    p, st = params, opt.init(params)
+    losses = []
+    for r in range(rounds):
+        k_sel, k_aug = jax.random.split(jax.random.fold_in(rng, r))
+        batch, sizes = sampler(k_sel, k_aug)
+        p, st, m = fed_sim.dcco_round(apply, p, st, opt, batch, sizes,
+                                      lam=LAM, **round_kw)
+        losses.append(float(m.loss))
+    return p, st, np.asarray(losses)
+
+
+class TestScanEquivalence:
+    def test_scan_equals_python_loop(self, toy):
+        params, apply, sampler = toy
+        opt = opt_lib.adam(1e-2)
+        rng = jax.random.PRNGKey(3)
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=8)
+        eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+        pe, se, me = eng.run(params, opt.init(params), rng, 8)
+        pl, sl, losses = _run_python_loop(params, apply, sampler, opt, rng, 8)
+        assert utils.tree_max_abs_diff(pe, pl) < 1e-6
+        np.testing.assert_allclose(np.asarray(me.loss), losses,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_chunking_is_invisible(self, toy):
+        params, apply, sampler = toy
+        opt = opt_lib.sgd(0.1)
+        rng = jax.random.PRNGKey(5)
+        outs = []
+        for chunk in (3, 7):
+            cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                            chunk_rounds=chunk)
+            eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+            outs.append(eng.run(params, opt.init(params), rng, 7))
+        assert utils.tree_max_abs_diff(outs[0][0], outs[1][0]) < 1e-6
+        np.testing.assert_allclose(np.asarray(outs[0][2].loss),
+                                   np.asarray(outs[1][2].loss),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_start_round_offsets_the_rng_stream(self, toy):
+        """Resume semantics: running [0, 4) then [4, 8) == running [0, 8)."""
+        params, apply, sampler = toy
+        opt = opt_lib.sgd(0.1)
+        rng = jax.random.PRNGKey(9)
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=4)
+        eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+        p1, s1, _ = eng.run(params, opt.init(params), rng, 4)
+        p1, s1, _ = eng.run(p1, s1, rng, 4, start_round=4)
+        p2, s2, _ = eng.run(params, opt.init(params), rng, 8)
+        assert utils.tree_max_abs_diff(p1, p2) < 1e-6
+
+
+class TestAlgorithmBodies:
+    @pytest.mark.parametrize("algorithm", round_engine.ALGORITHMS)
+    def test_runs_and_trains(self, toy, algorithm):
+        params, apply, sampler = toy
+        opt = opt_lib.adam(1e-2)
+        cfg = round_engine.EngineConfig(algorithm=algorithm, lam=LAM,
+                                        chunk_rounds=3)
+        eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+        p, s, m = eng.run(params, opt.init(params), jax.random.PRNGKey(3), 6)
+        assert m.loss.shape == (6,)
+        assert bool(jnp.isfinite(m.loss).all())
+        assert utils.tree_max_abs_diff(p, params) > 0.0
+
+    def test_dcco_equals_centralized_body(self, toy):
+        """Appendix A inside the engine: the dcco and centralized bodies
+        produce the same trajectory at client_lr=1, one local step."""
+        params, apply, sampler = toy
+        opt = opt_lib.sgd(0.05)
+        outs = {}
+        for algorithm in ("dcco", "centralized"):
+            cfg = round_engine.EngineConfig(algorithm=algorithm, lam=LAM,
+                                            client_lr=1.0, chunk_rounds=4)
+            eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+            outs[algorithm] = eng.run(params, opt.init(params),
+                                      jax.random.PRNGKey(3), 4)
+        assert utils.tree_max_abs_diff(outs["dcco"][0],
+                                       outs["centralized"][0]) < 1e-5
+
+    def test_unknown_algorithm_rejected(self, toy):
+        params, apply, sampler = toy
+        with pytest.raises(ValueError):
+            round_engine.make_round_body(
+                apply, opt_lib.sgd(0.1),
+                round_engine.EngineConfig(algorithm="fedprox"))
+
+
+class TestKernelStatsRouting:
+    def test_pallas_agg_stats_matches_jnp(self, toy):
+        params, apply, sampler = toy
+        opt = opt_lib.adam(1e-2)
+        rng = jax.random.PRNGKey(3)
+        outs = {}
+        for kernel in ("off", "interpret"):
+            cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                            chunk_rounds=4,
+                                            stats_kernel=kernel)
+            eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+            outs[kernel] = eng.run(params, opt.init(params), rng, 4)
+        assert utils.tree_max_abs_diff(outs["off"][0],
+                                       outs["interpret"][0]) < 1e-5
+        np.testing.assert_allclose(np.asarray(outs["off"][2].loss),
+                                   np.asarray(outs["interpret"][2].loss),
+                                   rtol=1e-4)
+
+
+class TestInScanSampler:
+    def test_sampler_matches_round_batch(self):
+        imgs, labels = synthetic.synthetic_labeled_images(60, 3, image_size=8,
+                                                          noise=0.5, seed=1)
+        ds = pipeline.FederatedDataset.build(
+            {"images": imgs}, labels, num_clients=20, samples_per_client=2,
+            alpha=0.0, seed=0)
+        sampler = ds.make_round_sampler(5)
+        key = jax.random.PRNGKey(11)
+        ref_batch, ref_sizes = ds.round_batch(key, 5)
+        batch, sizes = jax.jit(sampler)(*jax.random.split(key))
+        assert utils.tree_max_abs_diff(batch, ref_batch) < 1e-6
+        np.testing.assert_array_equal(np.asarray(sizes), np.asarray(ref_sizes))
+
+
+class TestStreamingAndCheckpoint:
+    def test_segments_stream_and_checkpoint(self, toy, tmp_path):
+        from repro.checkpoint import restore_checkpoint
+        params, apply, sampler = toy
+        opt = opt_lib.adam(1e-2)
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=2)
+        eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+        seen = []
+        p, s, m = eng.run(
+            params, opt.init(params), jax.random.PRNGKey(3), 6,
+            on_segment=lambda end, carry, seg: seen.append((end, seg.loss.shape)),
+            ckpt_dir=str(tmp_path), ckpt_every=2, ckpt_name="eng")
+        assert seen == [(2, (2,)), (4, (2,)), (6, (2,))]
+        assert m.loss.shape == (6,) and m.encoding_std.shape == (6,)
+        blob, step = restore_checkpoint(str(tmp_path / "eng.msgpack"),
+                                        {"params": params, "opt": opt.init(params)})
+        assert step == 6
+        assert utils.tree_max_abs_diff(blob["params"], p) < 1e-7
+
+
+_SHARDED_SCRIPT = """
+import jax, jax.numpy as jnp
+assert jax.device_count() == 2, jax.device_count()
+from repro import utils
+from repro.core import fed_sim, round_engine
+from repro.optim import optimizers as opt_lib
+
+key = jax.random.PRNGKey(0)
+params = {"w1": jax.random.normal(key, (10, 16)) * 0.3,
+          "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+def apply(p, batch):
+    enc = lambda x: jnp.tanh(x @ p["w1"]) @ p["w2"]
+    return enc(batch["v1"]), enc(batch["v2"])
+k1, k2 = jax.random.split(key)
+data = {"v1": jax.random.normal(k1, (8, 3, 10)),
+        "v2": jax.random.normal(k2, (8, 3, 10))}
+sizes = jnp.array([3, 1, 2, 3, 3, 2, 1, 3], jnp.int32)
+mesh = jax.make_mesh((2, 1), ("data", "model"))
+opt = opt_lib.adam(1e-2)
+p1, s1, m1 = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                data, sizes, lam=5.0)
+p2, s2, m2 = round_engine.dcco_round_sharded(apply, params, opt.init(params),
+                                             opt, data, sizes, mesh, lam=5.0)
+assert utils.tree_max_abs_diff(p1, p2) < 1e-6
+assert abs(float(m1.loss) - float(m2.loss)) < 1e-5
+assert abs(float(m1.encoding_std) - float(m2.encoding_std)) < 1e-6
+
+# and scan-compiled: the engine with cohort_axis on the 2-device mesh
+def sampler(k_sel, k_aug):
+    return data, sizes
+cfg = round_engine.EngineConfig(algorithm="dcco", lam=5.0, chunk_rounds=3,
+                                cohort_axis="data")
+eng = round_engine.RoundEngine(apply, opt, sampler, cfg, mesh=mesh)
+pe, se, me = eng.run(params, opt.init(params), jax.random.PRNGKey(3), 6)
+cfg1 = round_engine.EngineConfig(algorithm="dcco", lam=5.0, chunk_rounds=3)
+eng1 = round_engine.RoundEngine(apply, opt, sampler, cfg1)
+p1, s1, m1 = eng1.run(params, opt.init(params), jax.random.PRNGKey(3), 6)
+assert utils.tree_max_abs_diff(pe, p1) < 1e-5
+print("SHARDED_OK")
+"""
+
+
+class TestShardedCohort:
+    def test_two_device_mesh_matches_single_device(self):
+        """Runs in a subprocess: the host-platform device count must be
+        forced before jax initializes, which has already happened here."""
+        env = dict(os.environ)
+        env.update({
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": (env.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=2").strip(),
+            "PYTHONPATH": os.pathsep.join(
+                [os.path.join(os.path.dirname(__file__), "..", "src"),
+                 env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+        })
+        out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                             env=env, capture_output=True, text=True,
+                             timeout=420)
+        assert out.returncode == 0, f"stdout={out.stdout}\nstderr={out.stderr}"
+        assert "SHARDED_OK" in out.stdout

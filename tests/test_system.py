@@ -83,7 +83,11 @@ def test_fused_step_matches_per_client_step(rng_key):
         p2, _, m = step(params, opt.init(params), batch)
         outs[impl] = (p2, float(m["loss"]))
     np.testing.assert_allclose(outs["fused"][1], outs["per_client"][1], rtol=1e-5)
-    assert utils.tree_max_abs_diff(outs["fused"][0], outs["per_client"][0]) < 1e-5
+    # relative tolerance: the two paths reorder f32 summations, so absolute
+    # diffs measure conditioning, not the theorem (cf. TestResNetEquivalence)
+    diff = utils.tree_max_abs_diff(outs["fused"][0], outs["per_client"][0])
+    upd = utils.tree_max_abs_diff(outs["fused"][0], params) + 1e-12
+    assert diff / upd < 1e-4, f"relative deviation {diff / upd}"
 
 
 def test_lm_train_step_decreases_loss(rng_key):
