@@ -12,13 +12,25 @@ microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
   dcco_round      — federated round latency vs clients/round.
   fused_step      — pod-style fused DCCO step latency (1-device).
   stats_kernel    — fused cco_stats kernel (interpret) vs jnp ref.
+  comm_sweep      — bytes-on-the-wire vs probe accuracy across the
+                    repro.comm channels (dense / int8 / DP / dropout) on
+                    the synthetic non-IID benchmark.
   roofline        — emits the analytic roofline rows (see roofline.py).
 
 All model-scale numbers are CPU-host timings of reduced configs — relative
 comparisons only; absolute TPU numbers come from the §Roofline analysis.
+
+Besides the printed CSV, every run dumps its rows as machine-readable JSON
+(default ``BENCH.json`` in the working directory; override with the
+``BENCH_JSON`` env var) so the perf trajectory is diffable across PRs.
+Pass benchmark names as argv to run a subset: ``python benchmarks/run.py
+comm_sweep round_engine``.
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import jax
@@ -26,8 +38,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import roofline as roofline_mod
+from repro import comm
 from repro.configs.base import DualEncoderConfig, get_config
-from repro.core import cco, eval as eval_lib, fed_sim, losses
+from repro.core import cco, eval as eval_lib, fed_sim, losses, round_engine
 from repro.data import pipeline, synthetic
 from repro.models import dual_encoder, resnet as resnet_mod
 from repro.optim import optimizers as opt_lib
@@ -36,7 +49,8 @@ ROWS = []
 
 
 def emit(name: str, us_per_call: float, derived: str):
-    ROWS.append((name, us_per_call, derived))
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
@@ -293,6 +307,62 @@ def round_engine_bench(rounds=100, cpr=16):
          f"loss={float(me.loss[-1]):.3f}")
 
 
+def comm_sweep(rounds=25, cpr=16):
+    """Bytes-on-the-wire vs probe accuracy across communication channels.
+
+    Same synthetic non-IID setup as table1 (2-sample single-class clients),
+    trained with the scan-compiled engine; every channel sees the identical
+    round/cohort stream (the channel key is a fold_in off the round key, so
+    selection/augmentation streams match the dense run). The derived column
+    reports per-round phase-1 statistics bytes, total uplink MB, and the
+    compression ratio vs dense — int8 stats compress ~3.97x (4 bytes -> 1
+    byte + one f32 scale per tensor per client).
+    """
+    imgs, labels = synthetic.synthetic_labeled_images(600, 5, image_size=16,
+                                                      noise=0.5, seed=1)
+    cfg, de, params0, apply, embed = _setup()
+    ds = pipeline.FederatedDataset.build(
+        {"images": imgs}, labels, num_clients=128, samples_per_client=2,
+        alpha=0.0, seed=0)
+    sampler = ds.make_round_sampler(cpr)
+    # per-client phase-1 payload: the five stats of a proj_dim=64 encoder
+    stats_tmpl = {"mean_f": jnp.zeros((64,)), "sq_f": jnp.zeros((64,)),
+                  "mean_g": jnp.zeros((64,)), "sq_g": jnp.zeros((64,)),
+                  "cross": jnp.zeros((64, 64))}
+    dense_stats_b = comm.DenseChannel().payload_bytes(stats_tmpl)
+
+    channels = [
+        ("dense", comm.DenseChannel()),
+        ("int8", comm.QuantizedChannel(8)),
+        ("int4", comm.QuantizedChannel(4)),
+        ("dp_s0.3", comm.DPGaussianChannel(0.3, clip_norm=10.0)),
+        ("dropout_0.3", comm.DropoutChannel(0.3)),
+    ]
+    acc_dense = None
+    for name, ch in channels:
+        opt = opt_lib.adam(2e-3)
+        ecfg = round_engine.EngineConfig(algorithm="dcco", lam=5.0,
+                                         chunk_rounds=rounds, channel=ch)
+        eng = round_engine.RoundEngine(apply, opt, sampler, ecfg)
+        t0 = time.perf_counter()
+        p, _, m = eng.run(params0, opt.init(params0),
+                          jax.random.PRNGKey(7), rounds)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        acc = _probe(embed, p, imgs, labels)
+        if acc_dense is None:
+            acc_dense = acc
+        stats_b = ch.payload_bytes(stats_tmpl)
+        total_mb = float(jnp.sum(m.wire_bytes)) / 1e6
+        extras = ""
+        acct = getattr(ch, "accountant", None)
+        if acct is not None:
+            extras = f";eps={acct.epsilon():.1f}"
+        emit(f"comm_sweep/{name}", us,
+             f"acc={acc:.3f};d_acc={acc - acc_dense:+.3f};"
+             f"stats_B={stats_b:.0f};stats_ratio={dense_stats_b / stats_b:.2f}x;"
+             f"uplink_MB={total_mb:.2f}{extras}")
+
+
 def fused_step_bench():
     from repro.configs.base import TrainConfig
     from repro.launch import steps as steps_lib
@@ -426,19 +496,35 @@ def roofline_bench():
          ";".join(f"{k}={v}" for k, v in sorted(doms.items())))
 
 
-def main() -> None:
+BENCHES = {
+    "table1": table1_cifar,
+    "table2": table2_derm,
+    "figure3": figure3_collapse,
+    "dcco_round": dcco_round_bench,
+    "round_engine": round_engine_bench,
+    "comm_sweep": comm_sweep,
+    "fused_step": fused_step_bench,
+    "stats_kernel": stats_kernel_bench,
+    "stale_stats": stale_stats_study,
+    "dvicreg": dvicreg_bench,
+    "roofline": roofline_bench,
+}
+
+
+def main(argv=None) -> None:
+    names = list(sys.argv[1:] if argv is None else argv) or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown benchmarks {unknown}; "
+                         f"available: {list(BENCHES)}")
     print("name,us_per_call,derived")
-    table1_cifar()
-    table2_derm()
-    figure3_collapse()
-    dcco_round_bench()
-    round_engine_bench()
-    fused_step_bench()
-    stats_kernel_bench()
-    stale_stats_study()
-    dvicreg_bench()
-    roofline_bench()
+    for n in names:
+        BENCHES[n]()
     print(f"# {len(ROWS)} benchmark rows")
+    out_path = os.environ.get("BENCH_JSON", "BENCH.json")
+    with open(out_path, "w") as f:
+        json.dump({"benchmarks": names, "rows": ROWS}, f, indent=1)
+    print(f"# wrote {out_path}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,11 @@
+# Federated communication subsystem: every client->server payload (phase-1
+# statistics, phase-2 deltas, FedAvg updates) flows through a Channel —
+# dense / quantized / DP-noised / dropout-robust — with wire-cost
+# accounting. See docs/architecture.md "Communication layer".
+from repro.comm.accountant import (  # noqa: F401
+    GaussianAccountant, gaussian_rho_per_step, zcdp_to_epsilon)
+from repro.comm.channel import (  # noqa: F401
+    CHANNELS, Channel, ChannelContext, DenseChannel, DPGaussianChannel,
+    DropoutChannel, QuantizedChannel, get_channel)
+from repro.comm.quantize import (  # noqa: F401
+    dequantize, quant_dequant, quant_dequant_clients, quantize)

@@ -1,0 +1,100 @@
+"""Stochastic-rounding integer quantization for wire payloads.
+
+The encode/decode pair simulates the uplink of a federated client: a
+payload tensor is mapped to ``bits``-wide signed integers with one f32
+scale per tensor (symmetric, amax-calibrated), shipped, and dequantized
+server-side. Stochastic rounding ``floor(v + u), u ~ U[0,1)`` makes the
+round-trip unbiased — ``E[decode(encode(x))] = x`` — so quantization noise
+averages out across clients and rounds instead of accumulating as bias,
+which is what aggregate-statistics protocols like DCCO need.
+
+Everything here is a jit-compatible pure function of an explicit PRNG key.
+The batched client path (`quant_dequant_clients`) optionally routes the
+fused quantize→dequantize arithmetic through the Pallas kernel in
+:mod:`repro.kernels.quantize` (``impl="pallas" | "interpret"``); the jnp
+and kernel paths use the identical formula and the same uniforms, so they
+are bit-identical (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def qmax_for_bits(bits: int) -> float:
+    """Largest representable magnitude of a signed ``bits``-wide integer."""
+    if not 2 <= bits <= 16:
+        raise ValueError(f"bits must be in [2, 16], got {bits}")
+    return float(2 ** (bits - 1) - 1)
+
+
+def quant_scale(x, bits: int):
+    """Per-tensor symmetric scale: amax / qmax (1/qmax for all-zero x)."""
+    amax = jnp.max(jnp.abs(x.astype(F32)))
+    return jnp.where(amax > 0, amax, 1.0) / qmax_for_bits(bits)
+
+
+def quantize(key, x, bits: int = 8):
+    """Encode: x -> (q, scale) with stochastic rounding.
+
+    q is int8 for bits <= 8 else int32; the wire cost is ``bits`` per
+    element plus one f32 scale per tensor.
+    """
+    qmax = qmax_for_bits(bits)
+    scale = quant_scale(x, bits)
+    u = jax.random.uniform(key, x.shape, F32)
+    q = jnp.clip(jnp.floor(x.astype(F32) / scale + u), -qmax, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32), scale
+
+
+def dequantize(q, scale):
+    """Decode: q * scale, always f32."""
+    return q.astype(F32) * scale
+
+
+def quant_dequant(key, x, bits: int = 8):
+    """The full wire round-trip for one tensor. |out - x| <= scale."""
+    q, scale = quantize(key, x, bits)
+    return dequantize(q, scale)
+
+
+def _qdq_formula(flat, u, scales, qmax: float):
+    """The shared quantize->dequantize arithmetic on (K, n) rows with
+    per-row scales — the single source of truth for the jnp path and the
+    Pallas kernel (bit-identical by construction)."""
+    s = scales[:, None]
+    q = jnp.clip(jnp.floor(flat / s + u), -qmax, qmax)
+    return q * s
+
+
+def quant_dequant_clients(key, xk, bits: int = 8, impl: str = "jnp"):
+    """Wire round-trip for a stacked per-client payload leaf (K, ...).
+
+    Each client row gets its own amax scale (a client only sees its own
+    payload). ``impl``: "jnp" (default), "pallas" (compiled kernel on
+    accelerators), or "interpret" (kernel via the Pallas interpreter —
+    exact, runs anywhere).
+    """
+    qmax = qmax_for_bits(bits)
+    k = xk.shape[0]
+    flat = xk.reshape(k, -1).astype(F32)
+    amax = jnp.max(jnp.abs(flat), axis=1)
+    scales = jnp.where(amax > 0, amax, 1.0) / qmax
+    u = jax.random.uniform(key, flat.shape, F32)
+    if impl == "jnp":
+        out = _qdq_formula(flat, u, scales, qmax)
+    elif impl in ("pallas", "interpret"):
+        from repro.kernels.quantize import quant_dequant_pallas
+        out = quant_dequant_pallas(flat, u, scales, qmax,
+                                   interpret=impl == "interpret")
+    else:
+        raise ValueError(f"unknown quantization impl {impl!r}")
+    return out.reshape(xk.shape)
+
+
+def payload_bytes(num_elements: int, bits: int) -> float:
+    """Wire bytes for one quantized tensor: packed ``bits``-wide codes
+    (sub-byte codes pack on the wire) plus the f32 scale."""
+    return num_elements * bits / 8.0 + 4.0

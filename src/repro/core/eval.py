@@ -30,8 +30,18 @@ def ridge_linear_probe(train_z, train_y, test_z, test_y, num_classes: int,
     return (pred == test_y).mean()
 
 
-def knn_probe(train_z, train_y, test_z, test_y, k: int = 5):
-    """Cosine k-NN accuracy — second, parameter-free probe."""
+def knn_probe(train_z, train_y, test_z, test_y, k: int = 5,
+              num_classes: int = None):
+    """Cosine k-NN accuracy — second, parameter-free probe.
+
+    ``num_classes`` must be passed explicitly when calling under ``jit``:
+    the default derives it from the concrete label array
+    (``int(jnp.max(train_y)) + 1``), which cannot work on tracers since
+    the vote-count shape depends on it.
+    """
+    if num_classes is None:
+        num_classes = int(jnp.max(train_y)) + 1
+
     def norm(z):
         z = z.astype(F32)
         return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), 1e-8)
@@ -39,7 +49,6 @@ def knn_probe(train_z, train_y, test_z, test_y, k: int = 5):
     sim = norm(test_z) @ norm(train_z).T                     # (T, N)
     _, idx = jax.lax.top_k(sim, k)
     votes = train_y[idx]                                     # (T, k)
-    num_classes = int(jnp.max(train_y)) + 1
     counts = jax.vmap(lambda v: jnp.bincount(v, length=num_classes))(votes)
     pred = jnp.argmax(counts, axis=-1)
     return (pred == test_y).mean()

@@ -31,6 +31,8 @@ F32 = jnp.float32
 class RoundMetrics(NamedTuple):
     loss: jnp.ndarray
     encoding_std: jnp.ndarray
+    # uplink bytes this round (0 when no comm channel is modeled)
+    wire_bytes: Any = 0.0
 
 
 def sample_clients(key, num_clients: int, clients_per_round: int):
@@ -71,7 +73,8 @@ def client_local_steps(loss_fn, params, client_lr: float, local_steps: int):
 def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
                client_data, client_sizes, *, lam: float = 20.0,
                client_lr: float = 1.0, local_steps: int = 1,
-               agg_stats_fn: Optional[Callable] = None):
+               agg_stats_fn: Optional[Callable] = None,
+               channel=None, channel_key=None):
     """One DCCO round. Returns (params, opt_state, metrics).
 
     ``agg_stats_fn(zf_flat, zg_flat, mask_flat) -> Stats``, if given, computes
@@ -79,11 +82,30 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
     encodings. By Eq. 3 (stats are linear in samples) this equals the weighted
     average of per-client stats exactly — it is how the engine routes phase 1
     through the fused ``cco_stats_pallas`` kernel. Phase 1 is never
-    differentiated, so a non-differentiable kernel is safe here.
+    differentiated, so a non-differentiable kernel is safe here. The flat
+    path requires a lossless full-participation channel
+    (``channel.supports_flat_stats``) since per-client payloads never
+    materialize.
+
+    ``channel`` (repro.comm) routes both uplinks — phase-1 statistics and
+    phase-2 deltas — through an explicit wire: participation mask and
+    aggregation weights come from ``channel.begin_round(channel_key, ...)``,
+    payloads go through the channel's encode/decode, and
+    ``metrics.wire_bytes`` reports the round's uplink bytes. With
+    ``channel=None`` (default) the legacy lossless path runs unchanged;
+    DenseChannel is bit-identical to it (tested).
     """
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
     masks = _client_masks(client_sizes, n_pad)               # (K, n)
-    w = client_sizes.astype(F32) / jnp.sum(client_sizes.astype(F32))
+    if channel is None:
+        ctx = None
+        w = client_sizes.astype(F32) / jnp.sum(client_sizes.astype(F32))
+    else:
+        if channel_key is None:
+            raise ValueError("channel requires channel_key")
+        ctx = channel.begin_round(channel_key, client_sizes)
+        w = ctx.weights
+    wire = 0.0
 
     # ---- phase 1: clients compute local stats; server aggregates (Eq. 3)
     if agg_stats_fn is None:
@@ -92,12 +114,21 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
             return cco.encoding_stats_masked(zf, zg, mask)
 
         st_k = jax.vmap(client_stats)(client_data, masks)
-        agg = cco.weighted_average_stats(st_k, client_sizes.astype(F32))
+        if ctx is None:
+            agg = cco.weighted_average_stats(st_k, client_sizes.astype(F32))
+        else:
+            agg = channel.aggregate(ctx, st_k, "stats")
     else:
+        if ctx is not None and not channel.supports_flat_stats:
+            raise ValueError(
+                f"agg_stats_fn needs per-client payloads, incompatible "
+                f"with {channel!r}")
         zf_k, zg_k = jax.vmap(lambda b: encoder_apply(params, b))(client_data)
         agg = agg_stats_fn(zf_k.reshape(-1, zf_k.shape[-1]),
                            zg_k.reshape(-1, zg_k.shape[-1]),
                            masks.reshape(-1))
+    if ctx is not None:
+        wire = wire + channel.round_bytes(ctx, agg)
 
     # ---- phase 2: server redistributes agg stats; clients run local steps
     def client_update(batch, mask):
@@ -112,14 +143,19 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
     deltas, losses_k = jax.vmap(client_update)(client_data, masks)
 
     # ---- server: weighted average of deltas -> FedOpt pseudo-gradient
-    avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+    if ctx is None:
+        avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+    else:
+        avg_delta = channel.aggregate(ctx, deltas, "update")
+        wire = wire + channel.round_bytes(ctx, avg_delta)
     pseudo_grad = utils.tree_scale(avg_delta, -1.0)
     updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
     params = opt_lib.apply_updates(params, updates)
 
     # collapse probe on the aggregated stats
     enc_std = jnp.sqrt(jnp.maximum(agg["sq_f"] - agg["mean_f"] ** 2, 0.0)).mean()
-    return params, opt_state, RoundMetrics(jnp.sum(w * losses_k), enc_std)
+    return params, opt_state, RoundMetrics(jnp.sum(w * losses_k), enc_std,
+                                           jnp.asarray(wire, F32))
 
 
 # ---------------------------------------------------------------------------
@@ -129,11 +165,23 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
 def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
                  client_data, client_sizes, *, loss_kind: str = "cco",
                  lam: float = 20.0, temperature: float = 0.1,
-                 client_lr: float = 1.0, local_steps: int = 1):
-    """FedAvg with a within-client loss: 'cco' | 'contrastive' | 'byol'."""
+                 client_lr: float = 1.0, local_steps: int = 1,
+                 channel=None, channel_key=None):
+    """FedAvg with a within-client loss: 'cco' | 'contrastive' | 'byol'.
+
+    ``channel`` routes the single uplink (client deltas) through the wire,
+    same contract as in ``dcco_round``.
+    """
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
     masks = _client_masks(client_sizes, n_pad)
-    w = client_sizes.astype(F32) / jnp.sum(client_sizes.astype(F32))
+    if channel is None:
+        ctx = None
+        w = client_sizes.astype(F32) / jnp.sum(client_sizes.astype(F32))
+    else:
+        if channel_key is None:
+            raise ValueError("channel requires channel_key")
+        ctx = channel.begin_round(channel_key, client_sizes)
+        w = ctx.weights
 
     def client_loss(p, batch, mask):
         zf, zg = encoder_apply(p, batch)
@@ -153,11 +201,18 @@ def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
                                   params, client_lr, local_steps)
 
     deltas, losses_k = jax.vmap(client_update)(client_data, masks)
-    avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+    if ctx is None:
+        avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+        wire = 0.0
+    else:
+        avg_delta = channel.aggregate(ctx, deltas, "update")
+        wire = channel.round_bytes(ctx, avg_delta)
     pseudo_grad = utils.tree_scale(avg_delta, -1.0)
     updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
     params = opt_lib.apply_updates(params, updates)
-    return params, opt_state, RoundMetrics(jnp.sum(w * losses_k), jnp.zeros((), F32))
+    return params, opt_state, RoundMetrics(jnp.sum(w * losses_k),
+                                           jnp.zeros((), F32),
+                                           jnp.asarray(wire, F32))
 
 
 # ---------------------------------------------------------------------------

@@ -24,9 +24,15 @@ loop into ONE XLA program:
     linear in samples, so the flattened-cohort stats equal the weighted
     average of per-client stats);
   * chunked scan segments: rounds run in segments of ``chunk_rounds`` so
-    per-round metrics (loss, encoding-std collapse probe) stream back to the
-    host between segments, where periodic checkpointing via
-    ``repro.checkpoint`` hooks in.
+    per-round metrics (loss, encoding-std collapse probe, wire bytes)
+    stream back to the host between segments, where periodic checkpointing
+    via ``repro.checkpoint`` hooks in;
+  * a pluggable communication channel (``EngineConfig.channel``,
+    :mod:`repro.comm`): every client->server payload — phase-1 statistics
+    and phase-2 deltas — is routed through the channel's encode/decode and
+    participation-weighted aggregation INSIDE the scan body (dispatch is
+    trace-time, so lossy wires cost no extra Python per round), with
+    per-round bytes-on-the-wire in ``EngineMetrics.wire_bytes``.
 """
 from __future__ import annotations
 
@@ -48,6 +54,8 @@ F32 = jnp.float32
 ALGORITHMS = ("dcco", "fedavg_cco", "fedavg_contrastive", "fedavg_byol",
               "centralized")
 
+_CHANNEL_SALT = 0xC0                 # fold_in salt for the per-round comm key
+
 
 class EngineConfig(NamedTuple):
     """Static configuration of the compiled round loop."""
@@ -63,6 +71,7 @@ class EngineConfig(NamedTuple):
     donate: bool = True             # donate the (params, opt, rng) carry
     cohort_axis: Optional[str] = None   # mesh axis to shard the K client axis
     stats_kernel: str = "off"       # "off" | "pallas" | "interpret"
+    channel: Any = None             # repro.comm Channel; None = ideal wire
 
 
 class EngineCarry(NamedTuple):
@@ -75,6 +84,7 @@ class EngineMetrics(NamedTuple):
     """Stacked per-round metrics, leading axis = rounds."""
     loss: jnp.ndarray
     encoding_std: jnp.ndarray
+    wire_bytes: jnp.ndarray = 0.0   # uplink bytes/round (0: ideal wire)
 
 
 # ---------------------------------------------------------------------------
@@ -118,7 +128,7 @@ def _resolve_agg_stats_fn(cfg: EngineConfig) -> Optional[Callable]:
 def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
                        client_data, client_sizes, mesh, *, lam: float = 20.0,
                        client_lr: float = 1.0, local_steps: int = 1,
-                       axis: str = "data"):
+                       axis: str = "data", channel=None, channel_key=None):
     """One DCCO round with the (K, n, ...) client axis sharded over ``axis``.
 
     Each shard hosts K/ndev clients; phase-1 aggregation and the phase-2
@@ -126,21 +136,51 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
     collectives of Fig. 2, reusing the psum pattern of core/dcco.py. Output
     equals the single-device ``fed_sim.dcco_round`` (weights N_k/N are
     normalized by the psummed global sample count).
+
+    With a ``channel`` (repro.comm) the collectives model a real wire:
+    participation and the mask-renormalized weights come from
+    ``channel.begin_round`` on the full cohort (sharded alongside sizes, so
+    no psum renormalization is needed — the weights already sum to 1
+    globally); each shard runs the per-client encode/decode locally with a
+    shard-folded key; server-side post-processing (DP noise) uses the
+    replicated round key, so every shard adds the *same* noise and the
+    aggregate stays replicated.
     """
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
+    if channel is not None:
+        if channel_key is None:
+            raise ValueError("channel requires channel_key")
+        ctx = channel.begin_round(channel_key, client_sizes)
+    else:
+        ctx = None
 
-    def local_body(p, batch_l, sizes_l):
+    def local_body(p, batch_l, sizes_l, *chan_args):
         masks = fed_sim._client_masks(sizes_l, n_pad)
-        n_tot = jax.lax.psum(jnp.sum(sizes_l.astype(F32)), axis)
-        w_l = sizes_l.astype(F32) / n_tot
+        if channel is None:
+            n_tot = jax.lax.psum(jnp.sum(sizes_l.astype(F32)), axis)
+            w_l = sizes_l.astype(F32) / n_tot
+            ctx_l = None
+        else:
+            from repro.comm.channel import ChannelContext
+            # local view of the round context: payload randomness differs
+            # per shard (fold in the shard index), server-side randomness
+            # (post_aggregate) uses the replicated round key
+            w_l, mask_l, ckey, num_part = chan_args
+            shard_key = jax.random.fold_in(ckey, jax.lax.axis_index(axis))
+            ctx_l = ChannelContext(shard_key, mask_l, w_l, num_part)
 
         def client_stats(batch, mask):
             zf, zg = encoder_apply(p, batch)
             return cco.encoding_stats_masked(zf, zg, mask)
 
         st_k = jax.vmap(client_stats)(batch_l, masks)
+        if ctx_l is not None:
+            st_k = channel.encode_decode(ctx_l, st_k, "stats")
         agg = {k: jax.lax.psum(jnp.tensordot(w_l, v, axes=1), axis)
                for k, v in st_k.items()}
+        if ctx_l is not None:
+            agg = channel.post_aggregate(
+                ctx_l._replace(key=ckey), agg, "stats")
 
         def client_update(batch, mask):
             def loss_fn(pp):
@@ -152,22 +192,40 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
                                               local_steps)
 
         deltas, losses_k = jax.vmap(client_update)(batch_l, masks)
+        if ctx_l is not None:
+            deltas = channel.encode_decode(ctx_l, deltas, "update")
         avg_delta = jax.tree.map(
             lambda d: jax.lax.psum(jnp.tensordot(w_l, d, axes=1), axis), deltas)
+        if ctx_l is not None:
+            avg_delta = channel.post_aggregate(
+                ctx_l._replace(key=ckey), avg_delta, "update")
         loss = jax.lax.psum(jnp.sum(w_l * losses_k), axis)
         return avg_delta, loss[None], agg
 
+    if channel is None:
+        extra_args, extra_specs = (), ()
+    else:
+        # weights/mask shard with the client axis; the round key and the
+        # participant count are replicated
+        extra_args = (ctx.weights, ctx.mask, ctx.key, ctx.num_participants)
+        extra_specs = (P(axis), P(axis), P(), P())
     sharded = shard_map_compat(
         local_body, mesh,
-        in_specs=(P(), P(axis), P(axis)),
+        in_specs=(P(), P(axis), P(axis)) + extra_specs,
         out_specs=(P(), P(), P()))
-    avg_delta, loss, agg = sharded(params, client_data, client_sizes)
+    avg_delta, loss, agg = sharded(params, client_data, client_sizes,
+                                   *extra_args)
 
     pseudo_grad = utils.tree_scale(avg_delta, -1.0)
     updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
     params = opt_lib.apply_updates(params, updates)
     enc_std = jnp.sqrt(jnp.maximum(agg["sq_f"] - agg["mean_f"] ** 2, 0.0)).mean()
-    return params, opt_state, fed_sim.RoundMetrics(loss.reshape(()), enc_std)
+    wire = 0.0
+    if channel is not None:
+        wire = channel.round_bytes(ctx, agg) + \
+            channel.round_bytes(ctx, avg_delta)
+    return params, opt_state, fed_sim.RoundMetrics(loss.reshape(()), enc_std,
+                                                   jnp.asarray(wire, F32))
 
 
 # ---------------------------------------------------------------------------
@@ -176,43 +234,70 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
 
 def make_round_body(encoder_apply: Callable, server_opt, cfg: EngineConfig,
                     mesh=None) -> Callable:
-    """Build round_fn(params, opt_state, batch, sizes) for cfg.algorithm."""
+    """Build round_fn(params, opt_state, batch, sizes, key) for
+    cfg.algorithm. ``key`` is the per-round channel key (ignored by bodies
+    without a communication channel)."""
     if cfg.algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {cfg.algorithm!r}; "
                          f"expected one of {ALGORITHMS}")
     if cfg.cohort_axis is not None and cfg.algorithm != "dcco":
         raise NotImplementedError(
             "sharded cohorts are implemented for the dcco body only")
+    channel = cfg.channel
+    if channel is not None:
+        if cfg.algorithm == "centralized":
+            raise ValueError(
+                "the centralized body has no client->server wire; "
+                "channel is not applicable")
+        if cfg.stats_kernel != "off" and not channel.supports_flat_stats:
+            raise ValueError(
+                f"stats_kernel={cfg.stats_kernel!r} aggregates phase-1 "
+                f"stats from the flattened cohort, which is incompatible "
+                f"with {channel!r} (needs per-client payloads)")
+        noise_phases = getattr(channel, "noise_phases", None)
+        if (noise_phases is not None
+                and cfg.algorithm.startswith("fedavg_")
+                and "update" not in noise_phases):
+            # fedavg has no stats uplink: a stats-only DP channel would add
+            # zero noise while the accountant still reports a finite epsilon
+            raise ValueError(
+                f"{channel!r} noises only {noise_phases}, but "
+                f"{cfg.algorithm!r} ships client updates only — construct "
+                f"it with noise_phases=('update',) to noise the aggregate "
+                f"it actually releases")
 
     if cfg.algorithm == "dcco":
         if cfg.cohort_axis is not None:
             if mesh is None:
                 raise ValueError("cohort_axis requires a mesh")
 
-            def round_fn(params, opt_state, batch, sizes):
+            def round_fn(params, opt_state, batch, sizes, key):
                 return dcco_round_sharded(
                     encoder_apply, params, opt_state, server_opt, batch, sizes,
                     mesh, lam=cfg.lam, client_lr=cfg.client_lr,
-                    local_steps=cfg.local_steps, axis=cfg.cohort_axis)
+                    local_steps=cfg.local_steps, axis=cfg.cohort_axis,
+                    channel=channel, channel_key=key)
         else:
             agg_stats_fn = _resolve_agg_stats_fn(cfg)
 
-            def round_fn(params, opt_state, batch, sizes):
+            def round_fn(params, opt_state, batch, sizes, key):
                 return fed_sim.dcco_round(
                     encoder_apply, params, opt_state, server_opt, batch, sizes,
                     lam=cfg.lam, client_lr=cfg.client_lr,
-                    local_steps=cfg.local_steps, agg_stats_fn=agg_stats_fn)
+                    local_steps=cfg.local_steps, agg_stats_fn=agg_stats_fn,
+                    channel=channel, channel_key=key)
     elif cfg.algorithm.startswith("fedavg_"):
         kind = {"fedavg_cco": "cco", "fedavg_contrastive": "contrastive",
                 "fedavg_byol": "byol"}[cfg.algorithm]
 
-        def round_fn(params, opt_state, batch, sizes):
+        def round_fn(params, opt_state, batch, sizes, key):
             return fed_sim.fedavg_round(
                 encoder_apply, params, opt_state, server_opt, batch, sizes,
                 loss_kind=kind, lam=cfg.lam, temperature=cfg.temperature,
-                client_lr=cfg.client_lr, local_steps=cfg.local_steps)
+                client_lr=cfg.client_lr, local_steps=cfg.local_steps,
+                channel=channel, channel_key=key)
     else:  # centralized: union of the cohort, one large-batch CCO step
-        def round_fn(params, opt_state, batch, sizes):
+        def round_fn(params, opt_state, batch, sizes, key):
             n_pad = jax.tree.leaves(batch)[0].shape[1]
             union = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
             mask = fed_sim._client_masks(sizes, n_pad).reshape(-1)
@@ -257,11 +342,16 @@ class RoundEngine:
         def body(c, r):
             rkey = jax.random.fold_in(c.rng, r)
             k_sel, k_aug = jax.random.split(rkey)
+            # channel randomness comes from a fold_in (not a 3-way split)
+            # so the selection/augmentation streams are unchanged vs the
+            # channel-less engine — resume and regression baselines hold
+            k_ch = jax.random.fold_in(rkey, _CHANNEL_SALT)
             batch, sizes = self.sampler(k_sel, k_aug)
             params, opt_state, m = self.round_fn(c.params, c.opt_state,
-                                                 batch, sizes)
+                                                 batch, sizes, k_ch)
             return (EngineCarry(params, opt_state, c.rng),
-                    EngineMetrics(m.loss, m.encoding_std))
+                    EngineMetrics(m.loss, m.encoding_std,
+                                  jnp.asarray(m.wire_bytes, F32)))
 
         unroll = self.config.scan_unroll or (
             8 if jax.default_backend() == "cpu" else 1)
@@ -301,7 +391,7 @@ class RoundEngine:
             # buffers from segment to segment).
             carry = jax.tree.map(jnp.copy, carry)
         chunk = self.config.chunk_rounds
-        losses, stds = [], []
+        losses, stds, wires = [], [], []
         done, last_ckpt = 0, 0
         while done < rounds:
             seg = min(chunk, rounds - done)
@@ -310,6 +400,7 @@ class RoundEngine:
             done += seg
             losses.append(m.loss)
             stds.append(m.encoding_std)
+            wires.append(m.wire_bytes)
             round_end = start_round + done
             if on_segment is not None:
                 on_segment(round_end, carry, m)
@@ -319,6 +410,10 @@ class RoundEngine:
                 save_checkpoint(path, {"params": carry.params,
                                        "opt": carry.opt_state}, round_end)
                 last_ckpt = done
+        if self.config.channel is not None:
+            # host-side bookkeeping (e.g. the DP epsilon accountant)
+            self.config.channel.finalize_rounds(done)
         metrics = EngineMetrics(jnp.concatenate(losses) if losses else jnp.zeros((0,)),
-                                jnp.concatenate(stds) if stds else jnp.zeros((0,)))
+                                jnp.concatenate(stds) if stds else jnp.zeros((0,)),
+                                jnp.concatenate(wires) if wires else jnp.zeros((0,)))
         return carry.params, carry.opt_state, metrics

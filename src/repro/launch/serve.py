@@ -1,8 +1,14 @@
 """Serving driver: batched prefill + autoregressive decode for any assigned
 architecture, runnable on CPU with smoke configs.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \\
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \\
       --batch 2 --prompt-len 16 --gen 8
+
+(``--arch tinyllama-1.1b`` is the default; any transformer config in
+``src/repro/configs`` works, e.g. ``--arch qwen3-1.7b``.) To serve a
+pretrained tower, pass ``--ckpt /path/to/<arch>.msgpack`` — a checkpoint
+written by ``launch/train.py`` / the round engine's segment checkpointing;
+it is restored via ``repro.checkpoint.restore_checkpoint`` before prefill.
 """
 from __future__ import annotations
 

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import (DualEncoderConfig, TrainConfig, get_config,
                                 get_dual_encoder_config)
@@ -84,6 +85,30 @@ def main():
                     help="route phase-1 aggregate stats through the fused "
                          "Pallas kernel (engine mode; 'pallas' falls back "
                          "to the interpreter on CPU)")
+    ap.add_argument("--channel", default="none",
+                    choices=["none", "dense", "int8", "quant", "dp",
+                             "dropout"],
+                    help="client->server communication channel "
+                         "(repro.comm): 'none' = ideal lossless wire; "
+                         "'int8' = 8-bit stochastic-rounding quantization; "
+                         "'quant' = --quant-bits quantization; 'dp' = "
+                         "clipped + Gaussian-noised aggregation; "
+                         "'dropout' = Bernoulli client dropout")
+    ap.add_argument("--quant-bits", type=int, default=8,
+                    help="wire width for --channel quant")
+    ap.add_argument("--quant-kernel", choices=["off", "pallas", "interpret"],
+                    default="off",
+                    help="route quantize->dequantize through the fused "
+                         "Pallas kernel (kernels/quantize.py)")
+    ap.add_argument("--dp-sigma", type=float, default=1.0,
+                    help="DP noise multiplier (--channel dp)")
+    ap.add_argument("--dp-clip", type=float, default=1.0,
+                    help="per-client L2 clip norm (--channel dp)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="target delta for the epsilon accountant")
+    ap.add_argument("--dropout-p", type=float, default=0.1,
+                    help="per-round client dropout probability "
+                         "(--channel dropout)")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients-per-round", type=int, default=16)
     ap.add_argument("--samples-per-client", type=int, default=2)
@@ -144,6 +169,17 @@ def main():
             z[:cut], jnp.asarray(labels[:cut]), z[cut:],
             jnp.asarray(labels[cut:]), args.num_classes))
 
+    channel = comm.get_channel(
+        args.channel, quant_bits=args.quant_bits,
+        quant_kernel=args.quant_kernel, dp_sigma=args.dp_sigma,
+        dp_clip=args.dp_clip, dp_delta=args.dp_delta,
+        dropout_p=args.dropout_p)
+    if channel is not None and args.mode == "fused":
+        raise SystemExit("--channel models the client uplink; the fused "
+                         "pod step has no per-client wire — use --mode "
+                         "engine or protocol")
+    wire_total = [0.0]
+
     os.makedirs(args.ckpt_dir, exist_ok=True)
     history = []
     t0 = time.time()
@@ -152,12 +188,14 @@ def main():
         chunk = args.chunk_rounds or args.eval_every or 25
         ecfg = round_engine.EngineConfig(
             algorithm="dcco", lam=args.lam, client_lr=args.client_lr,
-            chunk_rounds=chunk, stats_kernel=args.stats_kernel)
+            chunk_rounds=chunk, stats_kernel=args.stats_kernel,
+            channel=channel)
         engine = round_engine.RoundEngine(
             apply, opt, ds.make_round_sampler(args.clients_per_round), ecfg)
 
         def on_segment(round_end, carry, m):
             history.extend(float(x) for x in np.asarray(m.loss))
+            wire_total[0] += float(np.sum(np.asarray(m.wire_bytes)))
             acc = evaluate(carry.params)
             dt = time.time() - t0
             print(f"round {round_end:5d} loss={history[-1]:9.4f} "
@@ -170,7 +208,7 @@ def main():
             args.rounds - start_round, start_round=start_round,
             on_segment=on_segment, ckpt_dir=args.ckpt_dir,
             ckpt_every=args.ckpt_every, ckpt_name=args.arch)
-        _report(args, history, evaluate, params)
+        _report(args, history, evaluate, params, channel, wire_total[0])
         return
 
     for r in range(start_round, args.rounds):
@@ -179,7 +217,13 @@ def main():
             batch, sizes = ds.round_batch(rkey, args.clients_per_round)
             params, opt_state, m = fed_sim.dcco_round(
                 apply, params, opt_state, opt, batch, sizes,
-                lam=args.lam, client_lr=args.client_lr)
+                lam=args.lam, client_lr=args.client_lr,
+                channel=channel,
+                channel_key=jax.random.fold_in(
+                    rkey, round_engine._CHANNEL_SALT))
+            if channel is not None:
+                channel.finalize_rounds(1)
+                wire_total[0] += float(m.wire_bytes)
             loss = float(m.loss)
         else:
             flat, _ = ds.flat_round_batch(rkey, args.clients_per_round)
@@ -196,10 +240,10 @@ def main():
         if (r + 1) % args.ckpt_every == 0:
             path = os.path.join(args.ckpt_dir, f"{args.arch}.msgpack")
             save_checkpoint(path, {"params": params, "opt": opt_state}, r + 1)
-    _report(args, history, evaluate, params)
+    _report(args, history, evaluate, params, channel, wire_total[0])
 
 
-def _report(args, history, evaluate, params):
+def _report(args, history, evaluate, params, channel=None, wire_bytes=0.0):
     if history:
         print(f"final loss {history[-1]:.4f}; first {history[0]:.4f}; "
               f"probe {evaluate(params):.3f}")
@@ -207,6 +251,13 @@ def _report(args, history, evaluate, params):
         print(f"no rounds to run (resumed at or past --rounds "
               f"{args.rounds}); probe {evaluate(params):.3f}")
         return
+    if channel is not None:
+        line = f"channel {channel!r}: uplink {wire_bytes / 1e6:.3f} MB total"
+        acct = getattr(channel, "accountant", None)
+        if acct is not None:
+            line += (f"; DP epsilon={acct.epsilon():.2f} "
+                     f"@ delta={acct.delta:g}")
+        print(line)
     with open(os.path.join(args.ckpt_dir, "history.json"), "w") as f:
         json.dump(history, f)
 

@@ -1,0 +1,321 @@
+"""Communication subsystem (repro.comm):
+
+  * quantize->dequantize round-trip error is bounded by one quantization
+    step and the encoding is ``bits``-wide (property test);
+  * the Pallas quantize-dequantize kernel is bit-identical to the jnp
+    formula given the same uniforms;
+  * DenseChannel and DropoutChannel(p=0) are bit-identical to the existing
+    un-channeled ``dcco_round`` — eagerly and through the scan-compiled
+    engine;
+  * DropoutChannel renormalizes aggregation weights over survivors only;
+  * DPGaussianChannel clips per-client payloads, noises the stats
+    aggregate, and its zCDP accountant composes across rounds;
+  * wire-bytes accounting matches the static payload sizes;
+  * engine guards: channel + flat-stats kernel, channel + centralized.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm, utils
+from repro.comm.quantize import qmax_for_bits
+from repro.core import cco, fed_sim, round_engine
+from repro.optim import optimizers as opt_lib
+
+from tests._hypothesis_compat import given, settings, st
+
+LAM = 5.0
+F32 = jnp.float32
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (10, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    k1, k2 = jax.random.split(key)
+    data = {"v1": jax.random.normal(k1, (8, 3, 10)),
+            "v2": jax.random.normal(k2, (8, 3, 10))}
+    sizes = jnp.array([3, 1, 2, 3, 3, 2, 1, 3], jnp.int32)
+    return params, apply, data, sizes
+
+
+def _sampler_from(data, sizes):
+    def sampler(k_sel, k_aug):
+        return data, sizes
+    return sampler
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+class TestQuantize:
+    @settings(deadline=None, max_examples=25)
+    @given(n=st.integers(1, 48), d=st.integers(1, 24),
+           bits=st.sampled_from([8, 4, 6]), seed=st.integers(0, 2 ** 20),
+           magnitude=st.floats(min_value=0.01, max_value=100.0))
+    def test_roundtrip_error_within_one_step(self, n, d, bits, seed,
+                                             magnitude):
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (n, d)) * magnitude
+        q, scale = comm.quantize(jax.random.fold_in(key, 1), x, bits)
+        err = jnp.max(jnp.abs(comm.dequantize(q, scale) - x))
+        # stochastic rounding moves a value by < 1 code; clipping at the
+        # amax-calibrated edges cannot exceed that
+        assert float(err) <= float(scale) * (1 + 1e-5)
+        qmax = qmax_for_bits(bits)
+        assert float(jnp.max(jnp.abs(q.astype(F32)))) <= qmax
+
+    def test_int8_dtype_and_zero_payload(self):
+        key = jax.random.PRNGKey(0)
+        q, scale = comm.quantize(key, jnp.ones((4, 4)), 8)
+        assert q.dtype == jnp.int8
+        q0, s0 = comm.quantize(key, jnp.zeros((4, 4)), 8)
+        np.testing.assert_array_equal(np.asarray(q0), 0)
+        assert np.isfinite(float(s0))
+
+    def test_kernel_matches_jnp_bitwise(self):
+        xk = jax.random.normal(jax.random.PRNGKey(3), (5, 3, 7)) * 2.0
+        key = jax.random.PRNGKey(4)
+        ref = comm.quant_dequant_clients(key, xk, 8, impl="jnp")
+        ker = comm.quant_dequant_clients(key, xk, 8, impl="interpret")
+        assert utils.tree_max_abs_diff(ref, ker) == 0.0
+
+    def test_stochastic_rounding_is_unbiased(self):
+        x = jnp.full((2000,), 0.3)
+        outs = jnp.stack([comm.quant_dequant(jax.random.PRNGKey(i), x, 8)
+                          for i in range(4)])
+        # mean over many draws converges to x (floor(v+u) is unbiased)
+        assert float(jnp.abs(outs.mean() - 0.3)) < 2e-3
+
+    def test_bad_bits_rejected(self):
+        with pytest.raises(ValueError):
+            comm.QuantizedChannel(bits=1)
+        with pytest.raises(ValueError):
+            comm.QuantizedChannel(bits=8, kernel="nope")
+
+
+# ---------------------------------------------------------------------------
+# channel semantics
+# ---------------------------------------------------------------------------
+
+class TestChannelAggregation:
+    def test_dense_and_dropout0_bit_identical_to_unchanneled(self, toy):
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+        p0, s0, m0 = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                        data, sizes, lam=LAM)
+        for ch in (comm.DenseChannel(), comm.DropoutChannel(0.0)):
+            p1, s1, m1 = fed_sim.dcco_round(
+                apply, params, opt.init(params), opt, data, sizes, lam=LAM,
+                channel=ch, channel_key=jax.random.PRNGKey(42))
+            assert utils.tree_max_abs_diff(p0, p1) == 0.0
+            assert float(m0.loss) == float(m1.loss)
+            assert float(m0.encoding_std) == float(m1.encoding_std)
+
+    def test_dense_aggregate_equals_weighted_average_stats(self, toy):
+        _, _, _, sizes = toy
+        st_k = {"a": jax.random.normal(jax.random.PRNGKey(0), (8, 5)),
+                "b": jax.random.normal(jax.random.PRNGKey(1), (8, 3, 3))}
+        ch = comm.DenseChannel()
+        ctx = ch.begin_round(jax.random.PRNGKey(2), sizes)
+        agg = ch.aggregate(ctx, st_k, "stats")
+        ref = cco.weighted_average_stats(st_k, sizes.astype(F32))
+        assert utils.tree_max_abs_diff(agg, ref) == 0.0
+
+    def test_dropout_renormalizes_over_survivors(self, toy):
+        _, _, _, sizes = toy
+        ch = comm.DropoutChannel(0.5)
+        ctx = ch.begin_round(jax.random.PRNGKey(5), sizes)
+        mask = np.asarray(ctx.mask)
+        assert 0 < mask.sum() < len(mask)          # some but not all dropped
+        st_k = {"a": jax.random.normal(jax.random.PRNGKey(0), (8, 5))}
+        agg = ch.aggregate(ctx, st_k, "stats")
+        s = np.asarray(sizes, np.float32) * mask
+        ref = (s / s.sum()) @ np.asarray(st_k["a"])
+        np.testing.assert_allclose(np.asarray(agg["a"]), ref, rtol=1e-6)
+        # weights of dropped clients are exactly zero
+        assert np.all(np.asarray(ctx.weights)[mask == 0] == 0.0)
+
+    def test_dp_clips_and_noises_stats_only(self, toy):
+        _, _, _, sizes = toy
+        # sigma=0: pure clipped uniform mean, deterministic
+        ch = comm.DPGaussianChannel(0.0, clip_norm=1e9)
+        ctx = ch.begin_round(jax.random.PRNGKey(0), sizes)
+        st_k = {"a": jax.random.normal(jax.random.PRNGKey(1), (8, 5))}
+        agg = ch.aggregate(ctx, st_k, "stats")
+        np.testing.assert_allclose(np.asarray(agg["a"]),
+                                   np.asarray(st_k["a"]).mean(0), rtol=1e-5)
+        # tight clip bounds every client's joint payload norm
+        tight = comm.DPGaussianChannel(0.0, clip_norm=0.1)
+        clipped = tight.encode_decode(ctx, st_k, "stats")
+        norms = np.linalg.norm(
+            np.asarray(clipped["a"]).reshape(8, -1), axis=1)
+        assert np.all(norms <= 0.1 * (1 + 1e-5))
+        # noise hits the stats phase, not the update phase
+        noisy = comm.DPGaussianChannel(1.0, clip_norm=1.0)
+        nctx = noisy.begin_round(jax.random.PRNGKey(2), sizes)
+        zeros = {"a": jnp.zeros((8, 5))}
+        agg_stats = noisy.aggregate(nctx, zeros, "stats")
+        agg_upd = noisy.aggregate(nctx, zeros, "update")
+        assert float(jnp.max(jnp.abs(agg_stats["a"]))) > 0.0
+        assert float(jnp.max(jnp.abs(agg_upd["a"]))) == 0.0
+
+    def test_dp_accountant_composition(self):
+        acct = comm.GaussianAccountant(noise_multiplier=1.0, delta=1e-5)
+        assert acct.epsilon() == 0.0
+        acct.step(100)
+        rho = 100 / 2.0
+        assert acct.rho == pytest.approx(rho)
+        assert acct.epsilon() == pytest.approx(
+            rho + 2 * np.sqrt(rho * np.log(1e5)))
+        eps_100 = acct.epsilon()
+        acct.step(100)
+        assert acct.epsilon() > eps_100       # epsilon grows with rounds
+        assert comm.GaussianAccountant(0.0).epsilon() == np.inf
+
+    def test_wire_bytes_accounting(self, toy):
+        _, _, _, sizes = toy
+        tmpl = {"v": jnp.zeros((6,)), "c": jnp.zeros((6, 6))}
+        dense = comm.DenseChannel()
+        assert dense.payload_bytes(tmpl) == 42 * 4
+        q8 = comm.QuantizedChannel(8)
+        assert q8.payload_bytes(tmpl) == 42 + 2 * 4
+        q4 = comm.QuantizedChannel(4)
+        assert q4.payload_bytes(tmpl) == 21 + 2 * 4
+        ctx = dense.begin_round(jax.random.PRNGKey(0), sizes)
+        assert float(dense.round_bytes(ctx, tmpl)) == 8 * 42 * 4
+
+    def test_get_channel_factory(self):
+        assert comm.get_channel("none") is None
+        assert isinstance(comm.get_channel("dense"), comm.DenseChannel)
+        ch = comm.get_channel("quant", quant_bits=4)
+        assert ch.bits == 4
+        assert isinstance(comm.get_channel("dp", dp_sigma=0.5),
+                          comm.DPGaussianChannel)
+        assert comm.get_channel("dropout", dropout_p=0.25).p == 0.25
+        with pytest.raises(ValueError):
+            comm.get_channel("carrier-pigeon")
+
+
+# ---------------------------------------------------------------------------
+# engine integration: channel dispatch inside the scanned round
+# ---------------------------------------------------------------------------
+
+class TestEngineChannel:
+    def test_dense_channel_engine_bit_identical(self, toy):
+        params, apply, data, sizes = toy
+        sampler = _sampler_from(data, sizes)
+        opt = opt_lib.adam(1e-2)
+        rng = jax.random.PRNGKey(3)
+        cfg0 = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                         chunk_rounds=3)
+        e0 = round_engine.RoundEngine(apply, opt, sampler, cfg0)
+        p0, s0, m0 = e0.run(params, opt.init(params), rng, 6)
+        e1 = round_engine.RoundEngine(
+            apply, opt, sampler, cfg0._replace(channel=comm.DenseChannel()))
+        p1, s1, m1 = e1.run(params, opt.init(params), rng, 6)
+        assert utils.tree_max_abs_diff(p0, p1) == 0.0
+        np.testing.assert_array_equal(np.asarray(m0.loss),
+                                      np.asarray(m1.loss))
+        # un-channeled metrics report zero wire cost; dense reports K*payload
+        np.testing.assert_array_equal(np.asarray(m0.wire_bytes), 0.0)
+        assert m1.wire_bytes.shape == (6,)
+        assert float(m1.wire_bytes[0]) > 0
+
+    @pytest.mark.parametrize("channel", [
+        comm.QuantizedChannel(8), comm.QuantizedChannel(8, kernel="interpret"),
+        comm.DPGaussianChannel(0.3, clip_norm=10.0), comm.DropoutChannel(0.4),
+    ])
+    def test_lossy_channels_train_in_scan(self, toy, channel):
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=3, channel=channel)
+        eng = round_engine.RoundEngine(apply, opt, _sampler_from(data, sizes),
+                                       cfg)
+        p, s, m = eng.run(params, opt.init(params), jax.random.PRNGKey(3), 6)
+        assert bool(jnp.isfinite(m.loss).all())
+        assert m.wire_bytes.shape == (6,)
+        assert utils.tree_max_abs_diff(p, params) > 0.0
+
+    def test_dp_accountant_advances_with_engine_rounds(self, toy):
+        params, apply, data, sizes = toy
+        ch = comm.DPGaussianChannel(1.0, clip_norm=1.0)
+        opt = opt_lib.adam(1e-2)
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=3, channel=ch)
+        eng = round_engine.RoundEngine(apply, opt, _sampler_from(data, sizes),
+                                       cfg)
+        eng.run(params, opt.init(params), jax.random.PRNGKey(3), 6)
+        assert ch.accountant.steps == 6
+        assert ch.accountant.epsilon() > 0
+
+    def test_fedavg_body_routes_through_channel(self, toy):
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+        cfg = round_engine.EngineConfig(algorithm="fedavg_cco", lam=LAM,
+                                        chunk_rounds=2,
+                                        channel=comm.DropoutChannel(0.3))
+        eng = round_engine.RoundEngine(apply, opt, _sampler_from(data, sizes),
+                                       cfg)
+        p, s, m = eng.run(params, opt.init(params), jax.random.PRNGKey(3), 4)
+        assert bool(jnp.isfinite(m.loss).all())
+        # dropout rounds ship fewer client updates than the full cohort
+        per_client = comm.DenseChannel().payload_bytes(params)
+        assert float(jnp.max(m.wire_bytes)) <= 8 * per_client
+
+    def test_channel_guards(self, toy):
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+        with pytest.raises(ValueError, match="stats_kernel"):
+            round_engine.make_round_body(
+                apply, opt, round_engine.EngineConfig(
+                    stats_kernel="interpret",
+                    channel=comm.QuantizedChannel(8)))
+        with pytest.raises(ValueError, match="centralized"):
+            round_engine.make_round_body(
+                apply, opt, round_engine.EngineConfig(
+                    algorithm="centralized", channel=comm.DenseChannel()))
+        with pytest.raises(ValueError, match="channel_key"):
+            fed_sim.dcco_round(apply, params, opt_lib.sgd(0.1).init(params),
+                               opt_lib.sgd(0.1), data, sizes,
+                               channel=comm.DenseChannel())
+        # a stats-only DP channel on fedavg would add no noise while the
+        # accountant still reports epsilon — rejected at build time
+        with pytest.raises(ValueError, match="noise_phases"):
+            round_engine.make_round_body(
+                apply, opt, round_engine.EngineConfig(
+                    algorithm="fedavg_cco",
+                    channel=comm.DPGaussianChannel(1.0)))
+        round_engine.make_round_body(
+            apply, opt, round_engine.EngineConfig(
+                algorithm="fedavg_cco",
+                channel=comm.DPGaussianChannel(
+                    1.0, noise_phases=("update",))))
+        with pytest.raises(ValueError, match="noise_phases"):
+            comm.DPGaussianChannel(1.0, noise_phases=("stats", "weights"))
+        # dense + flat kernel stats is allowed (lossless, size-weighted)
+        round_engine.make_round_body(
+            apply, opt, round_engine.EngineConfig(
+                stats_kernel="interpret", channel=comm.DenseChannel()))
+
+    def test_quant_pallas_kernel_falls_back_on_cpu(self, toy):
+        """kernel='pallas' must work everywhere, like stats_kernel='pallas':
+        on CPU it routes through the interpreter (bit-identical anyway)."""
+        assert jax.default_backend() == "cpu"
+        xk = jax.random.normal(jax.random.PRNGKey(0), (4, 9))
+        ch = comm.QuantizedChannel(8, kernel="pallas")
+        ctx = ch.begin_round(jax.random.PRNGKey(1), jnp.full((4,), 2))
+        out = ch.encode_decode(ctx, {"a": xk}, "stats")
+        ref = comm.QuantizedChannel(8, kernel="interpret").encode_decode(
+            ctx, {"a": xk}, "stats")
+        assert utils.tree_max_abs_diff(out, ref) == 0.0

@@ -223,6 +223,25 @@ assert utils.tree_max_abs_diff(p1, p2) < 1e-6
 assert abs(float(m1.loss) - float(m2.loss)) < 1e-5
 assert abs(float(m1.encoding_std) - float(m2.encoding_std)) < 1e-6
 
+# channels through the sharded psum body (repro.comm): dense == legacy,
+# dropout(p=0) == dense bitwise, int8 runs and accounts bytes
+from repro import comm
+ck = jax.random.PRNGKey(42)
+pd, sd, md = round_engine.dcco_round_sharded(
+    apply, params, opt.init(params), opt, data, sizes, mesh, lam=5.0,
+    channel=comm.DenseChannel(), channel_key=ck)
+assert utils.tree_max_abs_diff(p2, pd) < 1e-6
+assert float(md.wire_bytes) > 0
+p0d, s0d, m0d = round_engine.dcco_round_sharded(
+    apply, params, opt.init(params), opt, data, sizes, mesh, lam=5.0,
+    channel=comm.DropoutChannel(0.0), channel_key=ck)
+assert utils.tree_max_abs_diff(pd, p0d) == 0.0
+pq, sq, mq = round_engine.dcco_round_sharded(
+    apply, params, opt.init(params), opt, data, sizes, mesh, lam=5.0,
+    channel=comm.QuantizedChannel(8), channel_key=ck)
+assert float(mq.wire_bytes) < float(md.wire_bytes) / 3
+assert abs(float(mq.loss) - float(m1.loss)) < 0.5
+
 # and scan-compiled: the engine with cohort_axis on the 2-device mesh
 def sampler(k_sel, k_aug):
     return data, sizes
@@ -234,6 +253,15 @@ cfg1 = round_engine.EngineConfig(algorithm="dcco", lam=5.0, chunk_rounds=3)
 eng1 = round_engine.RoundEngine(apply, opt, sampler, cfg1)
 p1, s1, m1 = eng1.run(params, opt.init(params), jax.random.PRNGKey(3), 6)
 assert utils.tree_max_abs_diff(pe, p1) < 1e-5
+
+# sharded engine with a dropout channel: compiles, trains, accounts bytes
+cfg2 = round_engine.EngineConfig(algorithm="dcco", lam=5.0, chunk_rounds=3,
+                                 cohort_axis="data",
+                                 channel=comm.DropoutChannel(0.3))
+eng2 = round_engine.RoundEngine(apply, opt, sampler, cfg2, mesh=mesh)
+pc, sc, mc = eng2.run(params, opt.init(params), jax.random.PRNGKey(3), 6)
+assert mc.wire_bytes.shape == (6,)
+assert bool(jnp.isfinite(mc.loss).all())
 print("SHARDED_OK")
 """
 

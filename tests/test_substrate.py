@@ -177,3 +177,17 @@ class TestEvalProbes:
         z = centers[y] + 0.3 * jax.random.normal(k2, (200, 8))
         acc = eval_lib.knn_probe(z[:150], y[:150], z[150:], y[150:])
         assert float(acc) > 0.9
+
+    def test_knn_probe_under_jit(self, rng_key):
+        """With an explicit num_classes the probe traces (the default path
+        derives it from the concrete labels and cannot run on tracers)."""
+        import functools
+        k1, k2 = jax.random.split(rng_key)
+        centers = jax.random.normal(k1, (4, 8)) * 3
+        y = jax.random.randint(k2, (200,), 0, 4)
+        z = centers[y] + 0.3 * jax.random.normal(k2, (200, 8))
+        jitted = jax.jit(functools.partial(eval_lib.knn_probe, k=5,
+                                           num_classes=4))
+        acc_jit = jitted(z[:150], y[:150], z[150:], y[150:])
+        acc_ref = eval_lib.knn_probe(z[:150], y[:150], z[150:], y[150:])
+        assert float(acc_jit) == float(acc_ref)
