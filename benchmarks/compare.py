@@ -1,0 +1,87 @@
+"""Bench-regression gate: compare a fresh BENCH.json against the checked-in
+baseline (benchmarks/baseline.json) and fail on round_engine regressions.
+
+Usage:
+    python benchmarks/compare.py BENCH.json benchmarks/baseline.json \
+        [--max-regress 0.30]
+
+Gate semantics — machine-portable on purpose: CI runners (and laptops)
+differ wildly in absolute speed, so gating raw microseconds against a
+baseline recorded on a different machine is pure noise. The engine's
+headline metric is the *speedup ratio* of the scan-compiled engine over the
+Python round loop (``round_engine/python_loop`` us / ``round_engine/
+scan_engine`` us): both sides are measured in the same process on the same
+machine, so the ratio cancels machine speed and isolates what this repo
+controls (dispatch removal, scan compilation, unroll policy). The gate
+fails when that ratio drops more than ``--max-regress`` (default 30%)
+below the baseline's ratio.
+
+Raw per-row timings for every name present in both files are printed as an
+informational table (with the new/baseline ratio) so absolute drifts stay
+visible in the CI log without flaking the build.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows_by_name(blob: dict) -> dict:
+    return {r["name"]: r for r in blob["rows"]}
+
+
+def engine_speedup(rows: dict) -> float:
+    try:
+        loop = float(rows["round_engine/python_loop"]["us_per_call"])
+        scan = float(rows["round_engine/scan_engine"]["us_per_call"])
+    except KeyError as e:
+        raise SystemExit(f"missing round_engine row {e} — run "
+                         f"`python benchmarks/run.py round_engine` first")
+    if scan <= 0:
+        raise SystemExit(f"bad scan_engine timing {scan}")
+    return loop / scan
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="fresh BENCH.json")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--max-regress", type=float, default=0.30,
+                    help="maximum tolerated fractional drop of the "
+                         "round_engine speedup ratio (default 0.30)")
+    args = ap.parse_args(argv)
+
+    with open(args.new) as f:
+        new = _rows_by_name(json.load(f))
+    with open(args.baseline) as f:
+        base = _rows_by_name(json.load(f))
+
+    shared = [n for n in new if n in base]
+    if shared:
+        print(f"{'name':44s} {'base_us':>12s} {'new_us':>12s} {'ratio':>7s}")
+        for n in shared:
+            b, w = float(base[n]["us_per_call"]), float(new[n]["us_per_call"])
+            ratio = f"{w / b:7.2f}" if b > 0 else "      -"
+            print(f"{n:44s} {b:12.1f} {w:12.1f} {ratio}")
+
+    sp_new, sp_base = engine_speedup(new), engine_speedup(base)
+    floor = sp_base * (1.0 - args.max_regress)
+    print(f"\nround_engine speedup: baseline {sp_base:.2f}x, "
+          f"new {sp_new:.2f}x, floor {floor:.2f}x "
+          f"(max regress {args.max_regress:.0%})")
+    if sp_new < floor:
+        print("FAIL: scan-engine speedup regressed past the gate")
+        print("If this is a runner-environment shift rather than a code "
+              "change (the ratio cancels machine speed but not scheduler/"
+              "core-count effects on XLA:CPU's scan unrolling), refresh "
+              "the baseline: download the BENCH.json artifact from a "
+              "known-good run of this job and check it in as "
+              "benchmarks/baseline.json.")
+        return 1
+    print("OK: within gate")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

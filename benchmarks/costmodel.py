@@ -21,7 +21,6 @@ ideal of 3 — the MODEL_FLOPS/HLO ratio surfaces exactly this.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict
 
 from repro.configs.base import ModelConfig
@@ -177,7 +176,6 @@ def _params_dev_bytes(cfg, counts, model_par=16):
     rec = sum(_recurrent_layers(cfg, k) for k in ("mamba2", "mlstm", "slstm"))
     rec_frac = 0.0
     if rec:
-        per = counts["total"] - counts["embed"]
         rec_frac = min(0.9, rec / max(cfg.num_layers, 1))
     sharded = (total * (1 - rec_frac)) / model_par
     replicated = total * rec_frac

@@ -15,7 +15,15 @@ microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
   comm_sweep      — bytes-on-the-wire vs probe accuracy across the
                     repro.comm channels (dense / int8 / DP / dropout) on
                     the synthetic non-IID benchmark.
+  server_opt_sweep— non-IID severity (label-sharded vs IID) x server
+                    update strategy (fedavg_sgd / fedavgm / fedadam /
+                    fedyogi / fedadam+scaffold), probe accuracy per cell
+                    (repro.server).
   roofline        — emits the analytic roofline rows (see roofline.py).
+
+Set ``BENCH_SMOKE=1`` to shrink the timed sweeps to CI-smoke sizes (the
+bench-regression gate in CI runs ``round_engine`` + ``comm_sweep`` this
+way and compares against benchmarks/baseline.json via compare.py).
 
 All model-scale numbers are CPU-host timings of reduced configs — relative
 comparisons only; absolute TPU numbers come from the §Roofline analysis.
@@ -363,6 +371,60 @@ def comm_sweep(rounds=25, cpr=16):
              f"uplink_MB={total_mb:.2f}{extras}")
 
 
+def server_opt_sweep(rounds=25, cpr=16):
+    """Non-IID severity x server-update strategy -> probe accuracy.
+
+    The paper's degradation axis (Table 1): label-sharded single-class
+    2-sample clients (alpha=0, the hard setting) vs IID splits of the same
+    data. Each cell trains the same DCCO engine run, differing only in the
+    repro.server ServerUpdate strategy (and drift correction for the
+    scaffold row) — the sweep that motivates server adaptivity on small
+    non-IID cohorts. Rows emit probe accuracy and the per-round latency,
+    so BENCH.json records both the quality and the cost trajectory.
+    """
+    from repro.server import get_server_update
+    imgs, labels = synthetic.synthetic_labeled_images(600, 5, image_size=16,
+                                                      noise=1.0, seed=1)
+    cfg, de, params0, apply, embed = _setup()
+    strategies = [
+        ("fedavg_sgd", lambda: get_server_update("fedavg_sgd", server_lr=1.0),
+         {}),
+        ("fedavgm", lambda: get_server_update("fedavgm", server_lr=0.3), {}),
+        ("fedadam", lambda: get_server_update("fedadam", server_lr=1e-2), {}),
+        ("fedyogi", lambda: get_server_update("fedyogi", server_lr=1e-2), {}),
+        # scaffold at one local step: under cohort sampling the slot
+        # variates still reshape the update (slot != client), and the
+        # 2-sample clients' local stats make multi-step local training
+        # diverge regardless of strategy (degenerate within-client
+        # variance), so L=1 is the stable comparison point here
+        ("fedadam_scaffold",
+         lambda: get_server_update("fedadam", server_lr=1e-2),
+         {"scaffold": True}),
+    ]
+    for split_name, alpha in (("noniid", 0.0), ("iid", 1e9)):
+        ds = pipeline.FederatedDataset.build(
+            {"images": imgs}, labels, num_clients=300, samples_per_client=2,
+            alpha=alpha, seed=0)
+        sampler = ds.make_round_sampler(cpr)
+        acc_base = None
+        for name, make_su, extra in strategies:
+            su = make_su()
+            ecfg = round_engine.EngineConfig(
+                algorithm="dcco", lam=5.0, chunk_rounds=rounds,
+                server_update=su, **extra)
+            eng = round_engine.RoundEngine(apply, su, sampler, ecfg)
+            t0 = time.perf_counter()
+            p, _, m = eng.run(params0, su.init(params0),
+                              jax.random.PRNGKey(7), rounds)
+            us = (time.perf_counter() - t0) / rounds * 1e6
+            acc = _probe(embed, p, imgs, labels)
+            if acc_base is None:
+                acc_base = acc
+            emit(f"server_opt_sweep/{split_name}/{name}", us,
+                 f"acc={acc:.3f};d_acc={acc - acc_base:+.3f};"
+                 f"loss={float(m.loss[-1]):.3f}")
+
+
 def fused_step_bench():
     from repro.configs.base import TrainConfig
     from repro.launch import steps as steps_lib
@@ -503,11 +565,23 @@ BENCHES = {
     "dcco_round": dcco_round_bench,
     "round_engine": round_engine_bench,
     "comm_sweep": comm_sweep,
+    "server_opt_sweep": server_opt_sweep,
     "fused_step": fused_step_bench,
     "stats_kernel": stats_kernel_bench,
     "stale_stats": stale_stats_study,
     "dvicreg": dvicreg_bench,
     "roofline": roofline_bench,
+}
+
+# reduced sizes for the CI bench-smoke gate (BENCH_SMOKE=1): enough rounds
+# for the engine-vs-loop speedup ratio to stabilize, small enough for a
+# shared CPU runner
+SMOKE_KW = {
+    "round_engine": {"rounds": 40},
+    "comm_sweep": {"rounds": 8},
+    "server_opt_sweep": {"rounds": 8},
+    "table1": {"rounds": 8},
+    "table2": {"rounds": 8},
 }
 
 
@@ -517,9 +591,10 @@ def main(argv=None) -> None:
     if unknown:
         raise SystemExit(f"unknown benchmarks {unknown}; "
                          f"available: {list(BENCHES)}")
+    smoke = bool(os.environ.get("BENCH_SMOKE"))
     print("name,us_per_call,derived")
     for n in names:
-        BENCHES[n]()
+        BENCHES[n](**(SMOKE_KW.get(n, {}) if smoke else {}))
     print(f"# {len(ROWS)} benchmark rows")
     out_path = os.environ.get("BENCH_JSON", "BENCH.json")
     with open(out_path, "w") as f:

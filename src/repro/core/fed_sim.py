@@ -15,7 +15,6 @@ model: batch is one client's (n, ...) slice holding both views.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -24,6 +23,8 @@ import jax.numpy as jnp
 from repro.core import cco, losses
 from repro import utils
 from repro.optim import optimizers as opt_lib
+from repro.server import drift as drift_lib
+from repro.server import update as server_update_lib
 
 F32 = jnp.float32
 
@@ -45,11 +46,20 @@ def _client_masks(client_sizes, n_pad: int):
     return (idx < client_sizes[:, None]).astype(F32)
 
 
-def client_local_steps(loss_fn, params, client_lr: float, local_steps: int):
+def client_local_steps(loss_fn, params, client_lr: float, local_steps: int,
+                       *, prox_mu: float = 0.0, correction=None):
     """Run a client's local plain-GD steps (paper: lr 1.0, 1 step).
 
     Returns (delta in f32, first-step loss). Shared by every round body —
     fed_sim and the sharded engine path — so the update rule has one home.
+
+    Drift correction hooks (repro.server.drift):
+      ``prox_mu``    — FedProx: the proximal gradient
+                       ``mu * (p_local - p_broadcast)`` is added analytically
+                       each step. ``prox_mu = 0`` (static) skips the term
+                       entirely — bit-identical to the plain step (tested).
+      ``correction`` — SCAFFOLD: a params-shaped pytree (``c - c_k``) added
+                       to every local gradient; ``None`` skips it.
     """
     p_local = params
     loss0 = jnp.zeros((), F32)
@@ -57,6 +67,13 @@ def client_local_steps(loss_fn, params, client_lr: float, local_steps: int):
         loss_val, g = jax.value_and_grad(loss_fn)(p_local)
         if step == 0:
             loss0 = loss_val
+        if prox_mu:
+            g = jax.tree.map(
+                lambda g_, p_, p0: g_.astype(F32) + prox_mu * (
+                    p_.astype(F32) - p0.astype(F32)), g, p_local, params)
+        if correction is not None:
+            g = jax.tree.map(lambda g_, c_: g_.astype(F32) + c_,
+                             g, correction)
         p_local = jax.tree.map(
             lambda p_, g_: (p_.astype(F32)
                             - client_lr * g_.astype(F32)).astype(p_.dtype),
@@ -64,6 +81,43 @@ def client_local_steps(loss_fn, params, client_lr: float, local_steps: int):
     delta = utils.tree_sub(utils.tree_cast(p_local, F32),
                            utils.tree_cast(params, F32))
     return delta, loss0
+
+
+def check_variate_noise(channel) -> None:
+    """A noising channel (DP) that does not noise the ``"variate"`` phase
+    would release the aggregated SCAFFOLD variate delta — a deterministic
+    clipped function of every client's raw update — un-noised while the
+    accountant still reports a finite epsilon. Refuse the combination
+    loudly (same contract as the engine's fedavg+stats-only guard)."""
+    noise_phases = getattr(channel, "noise_phases", None)
+    if noise_phases is not None and "variate" not in noise_phases:
+        raise ValueError(
+            f"{channel!r} noises only {noise_phases}, but SCAFFOLD ships "
+            f"per-client variate deltas too — construct it with "
+            f"noise_phases including 'variate' so the epsilon it reports "
+            f"covers everything it releases")
+
+
+def _scaffold_round_tail(scaffold_state, deltas, client_lr, local_steps,
+                         w, ctx, channel):
+    """Shared SCAFFOLD round tail: refresh slot variates from the *raw*
+    client deltas (the refresh is client-side — it never crosses the wire),
+    ship the variate deltas through the channel's ``"variate"`` phase, and
+    fold the aggregate into the carried state.
+
+    Returns (new ScaffoldState, extra uplink bytes)."""
+    c_slots_new = drift_lib.scaffold_new_slot_variates(
+        scaffold_state, deltas, client_lr, local_steps)
+    dc = jax.tree.map(lambda new, old: new - old,
+                      c_slots_new, scaffold_state.c_slots)
+    if ctx is None:
+        agg_dc = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), dc)
+        extra, pmask = 0.0, None
+    else:
+        agg_dc = channel.aggregate(ctx, dc, "variate")
+        extra, pmask = channel.round_bytes(ctx, agg_dc), ctx.mask
+    return drift_lib.scaffold_apply_round(
+        scaffold_state, c_slots_new, agg_dc, pmask), extra
 
 
 # ---------------------------------------------------------------------------
@@ -74,7 +128,8 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
                client_data, client_sizes, *, lam: float = 20.0,
                client_lr: float = 1.0, local_steps: int = 1,
                agg_stats_fn: Optional[Callable] = None,
-               channel=None, channel_key=None):
+               channel=None, channel_key=None,
+               prox_mu: float = 0.0, scaffold_state=None):
     """One DCCO round. Returns (params, opt_state, metrics).
 
     ``agg_stats_fn(zf_flat, zg_flat, mask_flat) -> Stats``, if given, computes
@@ -94,7 +149,22 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
     ``metrics.wire_bytes`` reports the round's uplink bytes. With
     ``channel=None`` (default) the legacy lossless path runs unchanged;
     DenseChannel is bit-identical to it (tested).
+
+    ``server_opt`` may be a :class:`repro.optim.Optimizer` (wrapped as the
+    bit-identical ``fedavg_sgd`` delegate) or any
+    :class:`repro.server.ServerUpdate` strategy (FedAvgM / FedAdam / ...).
+
+    Drift correction: ``prox_mu`` adds the FedProx proximal term to every
+    local step (``0.0`` = statically off, bit-identical). Passing a
+    ``scaffold_state`` (:class:`repro.server.ScaffoldState`) enables
+    SCAFFOLD control variates; the round then returns a **4-tuple**
+    ``(params, opt_state, new_scaffold_state, metrics)`` instead of the
+    usual 3-tuple, and the per-slot variate deltas ride the channel's
+    ``"variate"`` phase (accounted in ``metrics.wire_bytes``).
     """
+    server_update = server_update_lib.as_server_update(server_opt)
+    if scaffold_state is not None and channel is not None:
+        check_variate_noise(channel)
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
     masks = _client_masks(client_sizes, n_pad)               # (K, n)
     if channel is None:
@@ -131,16 +201,21 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
         wire = wire + channel.round_bytes(ctx, agg)
 
     # ---- phase 2: server redistributes agg stats; clients run local steps
-    def client_update(batch, mask):
+    def client_update(batch, mask, corr=None):
         def loss_fn(p):
             zf, zg = encoder_apply(p, batch)
             local = cco.encoding_stats_masked(zf, zg, mask)
             combined = cco.dcco_combine(local, agg)
             return cco.cco_loss_from_stats(combined, lam)
 
-        return client_local_steps(loss_fn, params, client_lr, local_steps)
+        return client_local_steps(loss_fn, params, client_lr, local_steps,
+                                  prox_mu=prox_mu, correction=corr)
 
-    deltas, losses_k = jax.vmap(client_update)(client_data, masks)
+    if scaffold_state is None:
+        deltas, losses_k = jax.vmap(client_update)(client_data, masks)
+    else:
+        deltas, losses_k = jax.vmap(client_update)(
+            client_data, masks, drift_lib.scaffold_corrections(scaffold_state))
 
     # ---- server: weighted average of deltas -> FedOpt pseudo-gradient
     if ctx is None:
@@ -148,12 +223,16 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
     else:
         avg_delta = channel.aggregate(ctx, deltas, "update")
         wire = wire + channel.round_bytes(ctx, avg_delta)
-    pseudo_grad = utils.tree_scale(avg_delta, -1.0)
-    updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
-    params = opt_lib.apply_updates(params, updates)
+    params, opt_state = server_update.step(params, opt_state, avg_delta)
 
     # collapse probe on the aggregated stats
     enc_std = jnp.sqrt(jnp.maximum(agg["sq_f"] - agg["mean_f"] ** 2, 0.0)).mean()
+    if scaffold_state is not None:
+        new_scaffold, extra = _scaffold_round_tail(
+            scaffold_state, deltas, client_lr, local_steps, w, ctx, channel)
+        metrics = RoundMetrics(jnp.sum(w * losses_k), enc_std,
+                               jnp.asarray(wire + extra, F32))
+        return params, opt_state, new_scaffold, metrics
     return params, opt_state, RoundMetrics(jnp.sum(w * losses_k), enc_std,
                                            jnp.asarray(wire, F32))
 
@@ -166,12 +245,18 @@ def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
                  client_data, client_sizes, *, loss_kind: str = "cco",
                  lam: float = 20.0, temperature: float = 0.1,
                  client_lr: float = 1.0, local_steps: int = 1,
-                 channel=None, channel_key=None):
+                 channel=None, channel_key=None,
+                 prox_mu: float = 0.0, scaffold_state=None):
     """FedAvg with a within-client loss: 'cco' | 'contrastive' | 'byol'.
 
     ``channel`` routes the single uplink (client deltas) through the wire,
-    same contract as in ``dcco_round``.
+    same contract as in ``dcco_round`` — as are ``server_opt`` (Optimizer
+    or ServerUpdate), ``prox_mu``, and ``scaffold_state`` (which again
+    turns the return into a 4-tuple carrying the new variates).
     """
+    server_update = server_update_lib.as_server_update(server_opt)
+    if scaffold_state is not None and channel is not None:
+        check_variate_noise(channel)
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
     masks = _client_masks(client_sizes, n_pad)
     if channel is None:
@@ -196,20 +281,29 @@ def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
             return losses.byol_predictive_loss(zf, zg)
         raise ValueError(loss_kind)
 
-    def client_update(batch, mask):
+    def client_update(batch, mask, corr=None):
         return client_local_steps(lambda p: client_loss(p, batch, mask),
-                                  params, client_lr, local_steps)
+                                  params, client_lr, local_steps,
+                                  prox_mu=prox_mu, correction=corr)
 
-    deltas, losses_k = jax.vmap(client_update)(client_data, masks)
+    if scaffold_state is None:
+        deltas, losses_k = jax.vmap(client_update)(client_data, masks)
+    else:
+        deltas, losses_k = jax.vmap(client_update)(
+            client_data, masks, drift_lib.scaffold_corrections(scaffold_state))
     if ctx is None:
         avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
         wire = 0.0
     else:
         avg_delta = channel.aggregate(ctx, deltas, "update")
         wire = channel.round_bytes(ctx, avg_delta)
-    pseudo_grad = utils.tree_scale(avg_delta, -1.0)
-    updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
-    params = opt_lib.apply_updates(params, updates)
+    params, opt_state = server_update.step(params, opt_state, avg_delta)
+    if scaffold_state is not None:
+        new_scaffold, extra = _scaffold_round_tail(
+            scaffold_state, deltas, client_lr, local_steps, w, ctx, channel)
+        metrics = RoundMetrics(jnp.sum(w * losses_k), jnp.zeros((), F32),
+                               jnp.asarray(wire + extra, F32))
+        return params, opt_state, new_scaffold, metrics
     return params, opt_state, RoundMetrics(jnp.sum(w * losses_k),
                                            jnp.zeros((), F32),
                                            jnp.asarray(wire, F32))
@@ -221,7 +315,13 @@ def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
 
 def centralized_step(encoder_apply: Callable, params, opt_state, server_opt,
                      batch, mask=None, *, lam: float = 20.0):
-    """One centralized large-batch CCO step. batch leaves: (N, ...)."""
+    """One centralized large-batch CCO step. batch leaves: (N, ...).
+
+    ``server_opt`` may be an Optimizer or a ServerUpdate; the raw gradient
+    goes straight to the wrapped optimizer (there is no client delta here,
+    so drift corrections do not apply)."""
+    server_opt = server_update_lib.as_server_update(server_opt).opt
+
     def loss_fn(p):
         zf, zg = encoder_apply(p, batch)
         if mask is not None:

@@ -27,6 +27,14 @@ loop into ONE XLA program:
     per-round metrics (loss, encoding-std collapse probe, wire bytes)
     stream back to the host between segments, where periodic checkpointing
     via ``repro.checkpoint`` hooks in;
+  * a pluggable server-update strategy and client-drift correction
+    (``EngineConfig.server_update`` / ``prox_mu`` / ``scaffold``,
+    :mod:`repro.server`): the server step is any FedOpt-family
+    ``ServerUpdate`` (plain delegate, FedAvgM, FedAdagrad/FedAdam/FedYogi),
+    FedProx adds a proximal term to every local step, and SCAFFOLD control
+    variates ride the scan carry as an extra pytree (server variate +
+    per-cohort-slot client variates) whose uplink flows through the same
+    channel as every other payload;
   * a pluggable communication channel (``EngineConfig.channel``,
     :mod:`repro.comm`): every client->server payload — phase-1 statistics
     and phase-2 deltas — is routed through the channel's encode/decode and
@@ -44,10 +52,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import utils
 from repro.core import cco, fed_sim
 from repro.core.dcco import shard_map_compat
-from repro.optim import optimizers as opt_lib
+from repro.server import drift as drift_lib
+from repro.server import update as server_update_lib
 
 F32 = jnp.float32
 
@@ -72,12 +80,22 @@ class EngineConfig(NamedTuple):
     cohort_axis: Optional[str] = None   # mesh axis to shard the K client axis
     stats_kernel: str = "off"       # "off" | "pallas" | "interpret"
     channel: Any = None             # repro.comm Channel; None = ideal wire
+    # --- server-optimization & client-drift subsystem (repro.server) ---
+    server_update: Any = None       # repro.server ServerUpdate strategy;
+                                    # None = wrap the engine's server_opt
+                                    # argument as the bit-identical
+                                    # fedavg_sgd delegate
+    prox_mu: float = 0.0            # FedProx proximal coefficient (0 = off)
+    scaffold: bool = False          # SCAFFOLD control variates: adds a
+                                    # (c, c_slots) pytree to the scan carry
 
 
 class EngineCarry(NamedTuple):
     params: Any
     opt_state: Any
     rng: jnp.ndarray
+    drift: Any = ()                 # drift-correction state (ScaffoldState
+                                    # when EngineConfig.scaffold, else empty)
 
 
 class EngineMetrics(NamedTuple):
@@ -128,7 +146,8 @@ def _resolve_agg_stats_fn(cfg: EngineConfig) -> Optional[Callable]:
 def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
                        client_data, client_sizes, mesh, *, lam: float = 20.0,
                        client_lr: float = 1.0, local_steps: int = 1,
-                       axis: str = "data", channel=None, channel_key=None):
+                       axis: str = "data", channel=None, channel_key=None,
+                       prox_mu: float = 0.0, scaffold_state=None):
     """One DCCO round with the (K, n, ...) client axis sharded over ``axis``.
 
     Each shard hosts K/ndev clients; phase-1 aggregation and the phase-2
@@ -145,7 +164,17 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
     shard-folded key; server-side post-processing (DP noise) uses the
     replicated round key, so every shard adds the *same* noise and the
     aggregate stays replicated.
+
+    Drift correction mirrors ``fed_sim.dcco_round``: ``prox_mu`` is
+    client-local (no collective); SCAFFOLD slot variates shard with the
+    client axis (each device refreshes its own slots) while the server
+    variate stays replicated — the variate-delta average is one more psum,
+    channel-routed under the ``"variate"`` phase. With a ``scaffold_state``
+    the round returns ``(params, opt_state, new_state, metrics)``.
     """
+    server_update = server_update_lib.as_server_update(server_opt)
+    if scaffold_state is not None and channel is not None:
+        fed_sim.check_variate_noise(channel)
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
     if channel is not None:
         if channel_key is None:
@@ -154,20 +183,25 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
     else:
         ctx = None
 
-    def local_body(p, batch_l, sizes_l, *chan_args):
+    def local_body(p, batch_l, sizes_l, *extra):
+        extra = list(extra)
         masks = fed_sim._client_masks(sizes_l, n_pad)
         if channel is None:
             n_tot = jax.lax.psum(jnp.sum(sizes_l.astype(F32)), axis)
             w_l = sizes_l.astype(F32) / n_tot
-            ctx_l = None
+            ctx_l, ckey = None, None
         else:
             from repro.comm.channel import ChannelContext
             # local view of the round context: payload randomness differs
             # per shard (fold in the shard index), server-side randomness
             # (post_aggregate) uses the replicated round key
-            w_l, mask_l, ckey, num_part = chan_args
+            w_l, mask_l, ckey, num_part = extra[:4]
+            del extra[:4]
             shard_key = jax.random.fold_in(ckey, jax.lax.axis_index(axis))
             ctx_l = ChannelContext(shard_key, mask_l, w_l, num_part)
+        if scaffold_state is not None:
+            # replicated server variate + this shard's slice of the slots
+            state_l = drift_lib.ScaffoldState(*extra)
 
         def client_stats(batch, mask):
             zf, zg = encoder_apply(p, batch)
@@ -182,16 +216,22 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
             agg = channel.post_aggregate(
                 ctx_l._replace(key=ckey), agg, "stats")
 
-        def client_update(batch, mask):
+        def client_update(batch, mask, corr=None):
             def loss_fn(pp):
                 zf, zg = encoder_apply(pp, batch)
                 local = cco.encoding_stats_masked(zf, zg, mask)
                 return cco.cco_loss_from_stats(cco.dcco_combine(local, agg), lam)
 
             return fed_sim.client_local_steps(loss_fn, p, client_lr,
-                                              local_steps)
+                                              local_steps, prox_mu=prox_mu,
+                                              correction=corr)
 
-        deltas, losses_k = jax.vmap(client_update)(batch_l, masks)
+        if scaffold_state is None:
+            deltas, losses_k = jax.vmap(client_update)(batch_l, masks)
+        else:
+            deltas, losses_k = jax.vmap(client_update)(
+                batch_l, masks, drift_lib.scaffold_corrections(state_l))
+        raw_deltas = deltas
         if ctx_l is not None:
             deltas = channel.encode_decode(ctx_l, deltas, "update")
         avg_delta = jax.tree.map(
@@ -200,30 +240,61 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
             avg_delta = channel.post_aggregate(
                 ctx_l._replace(key=ckey), avg_delta, "update")
         loss = jax.lax.psum(jnp.sum(w_l * losses_k), axis)
-        return avg_delta, loss[None], agg
+        outs = (avg_delta, loss[None], agg)
+        if scaffold_state is not None:
+            # option-II refresh on this shard's slots from its raw deltas;
+            # the variate-delta average is one more channel-routed psum
+            ck_new = drift_lib.scaffold_new_slot_variates(
+                state_l, raw_deltas, client_lr, local_steps)
+            dc = jax.tree.map(lambda new, old: new - old,
+                              ck_new, state_l.c_slots)
+            if ctx_l is not None:
+                dc = channel.encode_decode(ctx_l, dc, "variate")
+            agg_dc = jax.tree.map(
+                lambda d: jax.lax.psum(jnp.tensordot(w_l, d, axes=1), axis), dc)
+            if ctx_l is not None:
+                agg_dc = channel.post_aggregate(
+                    ctx_l._replace(key=ckey), agg_dc, "variate")
+            # ck_new leaves the shard unmasked; the dropped-slot blend and
+            # the server-variate fold happen once, outside the shard_map,
+            # via drift_lib.scaffold_apply_round on the gathered outputs
+            outs = outs + (ck_new, agg_dc)
+        return outs
 
-    if channel is None:
-        extra_args, extra_specs = (), ()
-    else:
+    extra_args, extra_specs = (), ()
+    out_specs = (P(), P(), P())
+    if channel is not None:
         # weights/mask shard with the client axis; the round key and the
         # participant count are replicated
-        extra_args = (ctx.weights, ctx.mask, ctx.key, ctx.num_participants)
-        extra_specs = (P(axis), P(axis), P(), P())
+        extra_args += (ctx.weights, ctx.mask, ctx.key, ctx.num_participants)
+        extra_specs += (P(axis), P(axis), P(), P())
+    if scaffold_state is not None:
+        extra_args += (scaffold_state.c, scaffold_state.c_slots)
+        extra_specs += (P(), P(axis))
+        out_specs += (P(axis), P())       # slot variates sharded, agg_dc
+                                          # replicated like any aggregate
     sharded = shard_map_compat(
         local_body, mesh,
         in_specs=(P(), P(axis), P(axis)) + extra_specs,
-        out_specs=(P(), P(), P()))
-    avg_delta, loss, agg = sharded(params, client_data, client_sizes,
-                                   *extra_args)
+        out_specs=out_specs)
+    outs = sharded(params, client_data, client_sizes, *extra_args)
+    avg_delta, loss, agg = outs[:3]
 
-    pseudo_grad = utils.tree_scale(avg_delta, -1.0)
-    updates, opt_state = server_opt.update(pseudo_grad, opt_state, params)
-    params = opt_lib.apply_updates(params, updates)
+    params, opt_state = server_update.step(params, opt_state, avg_delta)
     enc_std = jnp.sqrt(jnp.maximum(agg["sq_f"] - agg["mean_f"] ** 2, 0.0)).mean()
     wire = 0.0
     if channel is not None:
         wire = channel.round_bytes(ctx, agg) + \
             channel.round_bytes(ctx, avg_delta)
+    if scaffold_state is not None:
+        ck_new, agg_dc = outs[3:]
+        if channel is not None:
+            wire = wire + channel.round_bytes(ctx, agg_dc)
+        new_state = drift_lib.scaffold_apply_round(
+            scaffold_state, ck_new, agg_dc,
+            None if ctx is None else ctx.mask)
+        return params, opt_state, new_state, fed_sim.RoundMetrics(
+            loss.reshape(()), enc_std, jnp.asarray(wire, F32))
     return params, opt_state, fed_sim.RoundMetrics(loss.reshape(()), enc_std,
                                                    jnp.asarray(wire, F32))
 
@@ -234,17 +305,28 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
 
 def make_round_body(encoder_apply: Callable, server_opt, cfg: EngineConfig,
                     mesh=None) -> Callable:
-    """Build round_fn(params, opt_state, batch, sizes, key) for
-    cfg.algorithm. ``key`` is the per-round channel key (ignored by bodies
-    without a communication channel)."""
+    """Build round_fn(params, opt_state, drift, batch, sizes, key) for
+    cfg.algorithm, returning (params, opt_state, drift, metrics). ``key``
+    is the per-round channel key (ignored by bodies without a communication
+    channel); ``drift`` is the drift-correction carry (a ScaffoldState when
+    cfg.scaffold, otherwise passed through untouched)."""
     if cfg.algorithm not in ALGORITHMS:
         raise ValueError(f"unknown algorithm {cfg.algorithm!r}; "
                          f"expected one of {ALGORITHMS}")
     if cfg.cohort_axis is not None and cfg.algorithm != "dcco":
         raise NotImplementedError(
             "sharded cohorts are implemented for the dcco body only")
+    if cfg.algorithm == "centralized" and (cfg.scaffold or cfg.prox_mu):
+        raise ValueError(
+            "the centralized body has no local client training, so "
+            "drift correction (scaffold / prox_mu) does not apply")
+    server_update = server_update_lib.as_server_update(
+        cfg.server_update if cfg.server_update is not None else server_opt)
     channel = cfg.channel
     if channel is not None:
+        if cfg.scaffold:
+            # build-time twin of the trace-time check in the round bodies
+            fed_sim.check_variate_noise(channel)
         if cfg.algorithm == "centralized":
             raise ValueError(
                 "the centralized body has no client->server wire; "
@@ -266,44 +348,63 @@ def make_round_body(encoder_apply: Callable, server_opt, cfg: EngineConfig,
                 f"it with noise_phases=('update',) to noise the aggregate "
                 f"it actually releases")
 
+    def _with_drift(inner):
+        """Adapt a fed_sim-style round call to the uniform
+        (params, opt_state, drift, batch, sizes, key) body signature:
+        with cfg.scaffold the inner round already returns the 4-tuple;
+        otherwise the drift carry passes through untouched."""
+        def round_fn(params, opt_state, drift, batch, sizes, key):
+            if cfg.scaffold:
+                return inner(params, opt_state, batch, sizes, key,
+                             scaffold_state=drift)
+            p, o, m = inner(params, opt_state, batch, sizes, key)
+            return p, o, drift, m
+        return round_fn
+
     if cfg.algorithm == "dcco":
         if cfg.cohort_axis is not None:
             if mesh is None:
                 raise ValueError("cohort_axis requires a mesh")
 
-            def round_fn(params, opt_state, batch, sizes, key):
+            def inner(params, opt_state, batch, sizes, key, **drift_kw):
                 return dcco_round_sharded(
-                    encoder_apply, params, opt_state, server_opt, batch, sizes,
-                    mesh, lam=cfg.lam, client_lr=cfg.client_lr,
+                    encoder_apply, params, opt_state, server_update, batch,
+                    sizes, mesh, lam=cfg.lam, client_lr=cfg.client_lr,
                     local_steps=cfg.local_steps, axis=cfg.cohort_axis,
-                    channel=channel, channel_key=key)
+                    channel=channel, channel_key=key, prox_mu=cfg.prox_mu,
+                    **drift_kw)
         else:
             agg_stats_fn = _resolve_agg_stats_fn(cfg)
 
-            def round_fn(params, opt_state, batch, sizes, key):
+            def inner(params, opt_state, batch, sizes, key, **drift_kw):
                 return fed_sim.dcco_round(
-                    encoder_apply, params, opt_state, server_opt, batch, sizes,
-                    lam=cfg.lam, client_lr=cfg.client_lr,
+                    encoder_apply, params, opt_state, server_update, batch,
+                    sizes, lam=cfg.lam, client_lr=cfg.client_lr,
                     local_steps=cfg.local_steps, agg_stats_fn=agg_stats_fn,
-                    channel=channel, channel_key=key)
+                    channel=channel, channel_key=key, prox_mu=cfg.prox_mu,
+                    **drift_kw)
+        round_fn = _with_drift(inner)
     elif cfg.algorithm.startswith("fedavg_"):
         kind = {"fedavg_cco": "cco", "fedavg_contrastive": "contrastive",
                 "fedavg_byol": "byol"}[cfg.algorithm]
 
-        def round_fn(params, opt_state, batch, sizes, key):
+        def inner(params, opt_state, batch, sizes, key, **drift_kw):
             return fed_sim.fedavg_round(
-                encoder_apply, params, opt_state, server_opt, batch, sizes,
+                encoder_apply, params, opt_state, server_update, batch, sizes,
                 loss_kind=kind, lam=cfg.lam, temperature=cfg.temperature,
                 client_lr=cfg.client_lr, local_steps=cfg.local_steps,
-                channel=channel, channel_key=key)
+                channel=channel, channel_key=key, prox_mu=cfg.prox_mu,
+                **drift_kw)
+        round_fn = _with_drift(inner)
     else:  # centralized: union of the cohort, one large-batch CCO step
-        def round_fn(params, opt_state, batch, sizes, key):
+        def round_fn(params, opt_state, drift, batch, sizes, key):
             n_pad = jax.tree.leaves(batch)[0].shape[1]
             union = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
             mask = fed_sim._client_masks(sizes, n_pad).reshape(-1)
-            return fed_sim.centralized_step(
-                encoder_apply, params, opt_state, server_opt, union,
+            p, o, m = fed_sim.centralized_step(
+                encoder_apply, params, opt_state, server_update, union,
                 mask=mask, lam=cfg.lam)
+            return p, o, drift, m
 
     return round_fn
 
@@ -329,6 +430,7 @@ class RoundEngine:
                 f"chunk_rounds must be >= 1, got {config.chunk_rounds}")
         self.config = config
         self.sampler = sampler
+        self.drift_state = None      # final drift carry of the last run()
         self.round_fn = make_round_body(encoder_apply, server_opt, config, mesh)
         donate = (0,) if config.donate else ()
         self._segment = jax.jit(
@@ -347,9 +449,9 @@ class RoundEngine:
             # channel-less engine — resume and regression baselines hold
             k_ch = jax.random.fold_in(rkey, _CHANNEL_SALT)
             batch, sizes = self.sampler(k_sel, k_aug)
-            params, opt_state, m = self.round_fn(c.params, c.opt_state,
-                                                 batch, sizes, k_ch)
-            return (EngineCarry(params, opt_state, c.rng),
+            params, opt_state, drift, m = self.round_fn(
+                c.params, c.opt_state, c.drift, batch, sizes, k_ch)
+            return (EngineCarry(params, opt_state, c.rng, drift),
                     EngineMetrics(m.loss, m.encoding_std,
                                   jnp.asarray(m.wire_bytes, F32)))
 
@@ -371,12 +473,20 @@ class RoundEngine:
     # -- full run -----------------------------------------------------------
     def run(self, params, opt_state, rng, rounds: int, *, start_round: int = 0,
             on_segment: Optional[Callable] = None, ckpt_dir: Optional[str] = None,
-            ckpt_every: int = 0, ckpt_name: str = "engine"):
+            ckpt_every: int = 0, ckpt_name: str = "engine",
+            drift_state=None):
         """Run ``rounds`` rounds; returns (params, opt_state, EngineMetrics).
 
         Metrics stream back per segment; ``on_segment(round_end, carry,
         seg_metrics)`` fires after each segment; checkpoints are written at
         the first segment boundary at or past each ``ckpt_every`` multiple.
+
+        With ``EngineConfig.scaffold``, the control variates ride the scan
+        carry: pass ``drift_state=`` to resume from saved variates (zeros
+        otherwise — the cohort size is inferred from the sampler via
+        ``jax.eval_shape``), and read the final state from
+        ``self.drift_state`` after the run (it is part of the returned
+        carry, so it is safe to keep).
 
         With ``donate=True`` (default) the ``carry`` seen by ``on_segment``
         is donated to the NEXT segment: read it synchronously inside the
@@ -384,7 +494,12 @@ class RoundEngine:
         retained references raise "Array has been deleted" later. The
         segment metrics are not donated and are safe to keep.
         """
-        carry = EngineCarry(params, opt_state, rng)
+        drift = () if drift_state is None else drift_state
+        if self.config.scaffold and drift_state is None:
+            _, sizes_shape = jax.eval_shape(
+                self.sampler, jax.random.PRNGKey(0), jax.random.PRNGKey(0))
+            drift = drift_lib.scaffold_init(params, sizes_shape.shape[0])
+        carry = EngineCarry(params, opt_state, rng, drift)
         if self._donate:
             # segments donate their carry; copy once so the CALLER's buffers
             # survive the run (donation then recycles only engine-internal
@@ -407,9 +522,12 @@ class RoundEngine:
             if ckpt_dir and ckpt_every and (done - last_ckpt) >= ckpt_every:
                 from repro.checkpoint import save_checkpoint
                 path = os.path.join(ckpt_dir, f"{ckpt_name}.msgpack")
-                save_checkpoint(path, {"params": carry.params,
-                                       "opt": carry.opt_state}, round_end)
+                blob = {"params": carry.params, "opt": carry.opt_state}
+                if self.config.scaffold:
+                    blob["drift"] = carry.drift
+                save_checkpoint(path, blob, round_end)
                 last_ckpt = done
+        self.drift_state = carry.drift if self.config.scaffold else None
         if self.config.channel is not None:
             # host-side bookkeeping (e.g. the DP epsilon accountant)
             self.config.channel.finalize_rounds(done)

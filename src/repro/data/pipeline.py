@@ -4,7 +4,7 @@ flat (N, ...) layout expected by the pod-scale fused step.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,6 @@ def _stats_kernel(zf_ref, zg_ref, inv_n_ref,
     i = pl.program_id(0)
     j = pl.program_id(1)
     kb = pl.program_id(2)
-    nk = pl.num_programs(2)
     inv_n = inv_n_ref[0]
 
     zf = zf_ref[...].astype(F32)          # (bn, bdi)

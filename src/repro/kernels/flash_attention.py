@@ -80,7 +80,6 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
     """q: (B,H,Sq,Dh); k, v: (B,KVH,Skv,Dh) -> (B,H,Sq,Dh)."""
     b, h, sq, dh = q.shape
     kvh, skv = k.shape[1], k.shape[2]
-    g = h // kvh
     scale = scale if scale is not None else 1.0 / np.sqrt(dh)
     bq = min(block_q, sq)
     bkv = min(block_kv, skv)

@@ -6,7 +6,6 @@ falls back to the pure-jnp reference (the path the XLA dry-run lowers).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 

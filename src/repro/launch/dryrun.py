@@ -159,7 +159,6 @@ def build_case(arch: str, shape_name: str, mesh, *, dcco_impl: str = "fused",
                                    kv_cache_dtype="int8" if kv_int8 else "model")
     cfg = inp.arch_variant_for_shape(cfg, shape)
     de_cfg = get_dual_encoder_config(arch)
-    ax = shard_specs.data_axes(mesh)
 
     if shape.kind == "train":
         tcfg = TrainConfig(seq_len=shape.seq_len, global_batch=shape.global_batch,

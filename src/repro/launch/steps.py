@@ -4,8 +4,6 @@ the dry-run can lower them AOT against ShapeDtypeStructs.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -37,6 +37,8 @@ from repro.data import pipeline, synthetic
 from repro.launch import steps as steps_lib
 from repro.models import dual_encoder
 from repro.optim import optimizers as opt_lib, schedules
+from repro.server import drift as drift_lib
+from repro.server import update as server_update_lib
 
 
 def build_dataset(cfg, args):
@@ -59,9 +61,65 @@ def build_dataset(cfg, args):
         seed=args.seed, vocab=vocab), labels
 
 
+def _forbid_ignored_flags(ap, args, attrs, why: str) -> None:
+    """Exit loudly when a flag was set but the selected mode/channel would
+    silently ignore it (e.g. --quant-bits without --channel quant)."""
+    flagged = ["--" + a.replace("_", "-") for a in attrs
+               if getattr(args, a) != ap.get_default(a)]
+    if flagged:
+        raise SystemExit(f"{', '.join(flagged)} would be silently ignored: "
+                         f"{why}")
+
+
+def validate_flags(ap, args) -> None:
+    if args.channel != "quant":
+        _forbid_ignored_flags(
+            ap, args, ["quant_bits"],
+            f"--quant-bits only applies to --channel quant "
+            f"(got --channel {args.channel})")
+    if args.channel not in ("quant", "int8"):
+        _forbid_ignored_flags(
+            ap, args, ["quant_kernel"],
+            f"--quant-kernel only applies to the quantized channels "
+            f"(got --channel {args.channel})")
+    if args.channel != "dp":
+        _forbid_ignored_flags(
+            ap, args, ["dp_sigma", "dp_clip", "dp_delta"],
+            f"DP flags only apply to --channel dp (got --channel "
+            f"{args.channel})")
+    if args.channel != "dropout":
+        _forbid_ignored_flags(
+            ap, args, ["dropout_p"],
+            f"--dropout-p only applies to --channel dropout (got "
+            f"--channel {args.channel})")
+    if args.mode != "engine":
+        _forbid_ignored_flags(
+            ap, args, ["stats_kernel", "chunk_rounds"],
+            f"--mode {args.mode} does not run the scan engine")
+    if args.mode == "fused":
+        if args.channel != "none":
+            raise SystemExit(
+                "--channel models the client uplink; the fused pod step "
+                "has no per-client wire — use --mode engine or protocol")
+        _forbid_ignored_flags(
+            ap, args, ["server_opt", "fedprox_mu", "scaffold", "local_steps"],
+            "the fused pod step hardcodes the FedOpt delegate with one "
+            "local step — use --mode engine or protocol for server/drift "
+            "strategies")
+    if args.server_opt != "fedavg_sgd":
+        _forbid_ignored_flags(
+            ap, args, ["server_optimizer"],
+            f"--server-opt {args.server_opt} builds its own server "
+            f"optimizer; the base --server-optimizer is unused")
+    if args.server_opt in ("fedavg_sgd", "fedavgm"):
+        _forbid_ignored_flags(
+            ap, args, ["server_tau"],
+            "--server-tau only applies to the adaptive --server-opt "
+            "strategies (fedadagrad / fedadam / fedyogi)")
+
+
 def make_apply(cfg, de_cfg):
     def apply(p, batch):
-        key_f = "images" if "images" in jax.tree.leaves(batch, is_leaf=lambda x: isinstance(x, dict)) else None
         if isinstance(batch, dict) and "v1" in batch:
             leaf = "images" if batch["v1"].ndim >= 4 else "tokens"
             zf, _ = dual_encoder.encode(cfg, de_cfg, p, {leaf: batch["v1"]})
@@ -116,7 +174,32 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--dataset-size", type=int, default=600)
     ap.add_argument("--num-classes", type=int, default=5)
-    ap.add_argument("--server-optimizer", default="adam")
+    ap.add_argument("--server-optimizer", default="adam",
+                    choices=["sgd", "adam", "lars"],
+                    help="base repro.optim optimizer consumed by the "
+                         "fedavg_sgd server strategy (ignored — and "
+                         "rejected if set — for adaptive --server-opt)")
+    ap.add_argument("--server-opt", default="fedavg_sgd",
+                    choices=list(server_update_lib.SERVER_UPDATES),
+                    help="server update strategy (repro.server): "
+                         "'fedavg_sgd' = the FedOpt delegate to "
+                         "--server-optimizer (pre-existing behavior); "
+                         "'fedavgm' = server momentum; 'fedadagrad' / "
+                         "'fedadam' / 'fedyogi' = Reddi-style adaptive "
+                         "server optimizers with --server-tau adaptivity")
+    ap.add_argument("--server-tau", type=float, default=1e-3,
+                    help="adaptivity epsilon tau of the adaptive server "
+                         "optimizers")
+    ap.add_argument("--fedprox-mu", type=float, default=0.0,
+                    help="FedProx proximal coefficient mu on the client "
+                         "local loss (0 = off; only bites at "
+                         "--local-steps > 1)")
+    ap.add_argument("--scaffold", action="store_true",
+                    help="SCAFFOLD control variates (per-cohort-slot) for "
+                         "client-drift correction; the variate uplink is "
+                         "routed through --channel")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="client local GD steps per round")
     ap.add_argument("--server-lr", type=float, default=2e-3)
     ap.add_argument("--client-lr", type=float, default=1.0)
     ap.add_argument("--lam", type=float, default=5.0)
@@ -127,6 +210,7 @@ def main():
     ap.add_argument("--resume", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    validate_flags(ap, args)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     de_cfg = DualEncoderConfig(
@@ -136,13 +220,26 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     params = dual_encoder.init_dual_encoder(key, cfg, de_cfg)
     sched = schedules.cosine_decay(args.server_lr, args.rounds)
-    opt = opt_lib.get_optimizer(args.server_optimizer, sched)
+    if args.server_opt == "fedavg_sgd":
+        # pre-existing behavior: delegate to the configured base optimizer
+        opt = server_update_lib.get_server_update(
+            "fedavg_sgd",
+            base_opt=opt_lib.get_optimizer(args.server_optimizer, sched))
+    else:
+        opt = server_update_lib.get_server_update(
+            args.server_opt, server_lr=sched, tau=args.server_tau)
     opt_state = opt.init(params)
     start_round = 0
+    drift_state = (drift_lib.scaffold_init(params, args.clients_per_round)
+                   if args.scaffold else None)
     if args.resume:
-        blob, start_round = restore_checkpoint(
-            args.resume, {"params": params, "opt": opt_state})
+        tmpl = {"params": params, "opt": opt_state}
+        if args.scaffold:
+            tmpl["drift"] = drift_state
+        blob, start_round = restore_checkpoint(args.resume, tmpl)
         params, opt_state = blob["params"], blob["opt"]
+        if args.scaffold:
+            drift_state = blob["drift"]
         print(f"resumed from {args.resume} @ round {start_round}")
 
     ds, labels = build_dataset(cfg, args)
@@ -155,7 +252,7 @@ def main():
                            samples_per_client=args.samples_per_client,
                            dcco_impl="fused")
         fused_step = jax.jit(steps_lib.make_dcco_train_step(
-            cfg, de_cfg, tcfg, opt, num_microbatches=args.micro))
+            cfg, de_cfg, tcfg, opt.opt, num_microbatches=args.micro))
 
     def evaluate(p):
         if cfg.family != "resnet":
@@ -174,10 +271,6 @@ def main():
         quant_kernel=args.quant_kernel, dp_sigma=args.dp_sigma,
         dp_clip=args.dp_clip, dp_delta=args.dp_delta,
         dropout_p=args.dropout_p)
-    if channel is not None and args.mode == "fused":
-        raise SystemExit("--channel models the client uplink; the fused "
-                         "pod step has no per-client wire — use --mode "
-                         "engine or protocol")
     wire_total = [0.0]
 
     os.makedirs(args.ckpt_dir, exist_ok=True)
@@ -188,8 +281,10 @@ def main():
         chunk = args.chunk_rounds or args.eval_every or 25
         ecfg = round_engine.EngineConfig(
             algorithm="dcco", lam=args.lam, client_lr=args.client_lr,
-            chunk_rounds=chunk, stats_kernel=args.stats_kernel,
-            channel=channel)
+            local_steps=args.local_steps, chunk_rounds=chunk,
+            stats_kernel=args.stats_kernel, channel=channel,
+            server_update=opt, prox_mu=args.fedprox_mu,
+            scaffold=args.scaffold)
         engine = round_engine.RoundEngine(
             apply, opt, ds.make_round_sampler(args.clients_per_round), ecfg)
 
@@ -207,7 +302,8 @@ def main():
             params, opt_state, jax.random.PRNGKey(args.seed),
             args.rounds - start_round, start_round=start_round,
             on_segment=on_segment, ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every, ckpt_name=args.arch)
+            ckpt_every=args.ckpt_every, ckpt_name=args.arch,
+            drift_state=drift_state)
         _report(args, history, evaluate, params, channel, wire_total[0])
         return
 
@@ -215,12 +311,17 @@ def main():
         rkey = jax.random.PRNGKey(args.seed * 100003 + r)
         if args.mode == "protocol":
             batch, sizes = ds.round_batch(rkey, args.clients_per_round)
-            params, opt_state, m = fed_sim.dcco_round(
+            out = fed_sim.dcco_round(
                 apply, params, opt_state, opt, batch, sizes,
                 lam=args.lam, client_lr=args.client_lr,
-                channel=channel,
+                local_steps=args.local_steps, prox_mu=args.fedprox_mu,
+                scaffold_state=drift_state, channel=channel,
                 channel_key=jax.random.fold_in(
                     rkey, round_engine._CHANNEL_SALT))
+            if args.scaffold:
+                params, opt_state, drift_state, m = out
+            else:
+                params, opt_state, m = out
             if channel is not None:
                 channel.finalize_rounds(1)
                 wire_total[0] += float(m.wire_bytes)
@@ -239,7 +340,10 @@ def main():
                   f"({dt / (r - start_round + 1):.2f}s/round)", flush=True)
         if (r + 1) % args.ckpt_every == 0:
             path = os.path.join(args.ckpt_dir, f"{args.arch}.msgpack")
-            save_checkpoint(path, {"params": params, "opt": opt_state}, r + 1)
+            blob = {"params": params, "opt": opt_state}
+            if args.scaffold:
+                blob["drift"] = drift_state
+            save_checkpoint(path, blob, r + 1)
     _report(args, history, evaluate, params, channel, wire_total[0])
 
 

@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import common
 from repro.models.common import F32, linear, linear_init, rmsnorm, rmsnorm_init, apply_rope
 
 NEG_INF = -1e30
@@ -332,7 +331,6 @@ def mla_cache_init(cfg, batch: int, max_len: int, dtype):
 def mla_prefill(cfg, p, x, positions, cache):
     out = mla_forward(cfg, p, x, positions)
     latent, k_rope = _mla_latent(cfg, p, x, positions)
-    s = x.shape[1]
     cache = {
         "latent": jax.lax.dynamic_update_slice_in_dim(cache["latent"], latent, 0, axis=1),
         "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope[:, :, 0, :], 0, axis=1),

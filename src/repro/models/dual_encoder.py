@@ -10,7 +10,7 @@ dimensionality before the CCO loss and is discarded downstream.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

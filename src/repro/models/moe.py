@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import F32, linear, linear_init, swiglu, swiglu_init
+from repro.models.common import F32, swiglu, swiglu_init
 
 
 def moe_init(key, d_model: int, moe_cfg, dtype):

@@ -9,7 +9,7 @@ consumes pseudo-gradients (negative average client deltas), per FedOpt.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,11 @@
+# Server-optimization & client-drift subsystem: pluggable ServerUpdate
+# strategies (FedAvg delegate / FedAvgM / FedAdagrad / FedAdam / FedYogi)
+# and drift-corrected local training (FedProx, SCAFFOLD control variates).
+# See docs/architecture.md "Server optimization & client drift".
+from repro.server.drift import (  # noqa: F401
+    ScaffoldState, scaffold_apply_round, scaffold_corrections, scaffold_init,
+    scaffold_new_slot_variates)
+from repro.server.optimizers import (  # noqa: F401
+    fedadagrad, fedadam, fedavgm, fedyogi)
+from repro.server.update import (  # noqa: F401
+    SERVER_UPDATES, ServerUpdate, as_server_update, get_server_update)

@@ -1,0 +1,95 @@
+"""Adaptive federated *server* optimizers (FedOpt family, Reddi et al. 2021).
+
+In FedOpt the server treats the negated weighted-average client delta as a
+pseudo-gradient and feeds it to a first-order optimizer. Plain FedAvg is
+SGD(lr=1) on that pseudo-gradient; this module adds the adaptive family —
+FedAvgM / FedAdagrad / FedAdam / FedYogi — built on the existing
+:class:`repro.optim.Optimizer` contract (``init``/``update`` returning
+additive updates applied by ``apply_updates``), so every round body and the
+scan engine consume them exactly like the optimizers they already take.
+
+Why they matter here: on small non-IID clients the per-round pseudo-
+gradients are noisy and badly scaled across parameters (client drift), and
+a fixed server average inherits all of it. The adaptive rules keep
+per-parameter second-moment preconditioners ``v`` on the server — where
+state is cheap and persistent, unlike the paper's stateless tiny clients —
+and damp the update by ``1/(sqrt(v) + tau)``. ``tau`` is Reddi et al.'s
+adaptivity knob (their ``τ``), playing the role Adam's ``eps`` plays but
+typically orders of magnitude larger (1e-3..1e-1): it bounds how aggressive
+the preconditioning may get under federated noise.
+
+Following the reference FedOpt formulation there is **no bias correction**:
+``m``/``v`` start at zero and warm up over the first rounds.
+
+All state is f32. Sign convention matches the rest of the repo: these
+optimizers consume *pseudo-gradients* ``g = -avg_delta`` and return
+additive updates ``-lr * precond(m)``, so the applied step is
+``x += lr * precond(avg_delta-momentum)`` — exactly Reddi et al.'s server
+update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import optimizers as opt_lib
+from repro.optim.optimizers import Optimizer
+
+F32 = jnp.float32
+
+
+def fedavgm(lr, momentum: float = 0.9) -> Optimizer:
+    """FedAvgM (Hsu et al. 2019): heavy-ball momentum on the server.
+
+    Exactly ``repro.optim.sgd(lr, momentum)`` — re-exported under its
+    federated name so ``get_server_update('fedavgm')`` reads like the
+    literature.
+    """
+    return opt_lib.sgd(lr, momentum=momentum)
+
+
+def _sched(lr):
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, F32))
+
+
+def _fedopt(lr, b1: float, tau: float, v_update) -> Optimizer:
+    """Shared scaffolding of the adaptive family: server momentum ``m``,
+    a per-variant second moment ``v`` (``v_update(v, g2) -> v``), and the
+    ``m / (sqrt(v) + tau)`` preconditioned step."""
+    lr_fn = _sched(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, F32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params=None):
+        g = jax.tree.map(lambda x: x.astype(F32), grads)
+        m = jax.tree.map(lambda mi, gi: b1 * mi + (1 - b1) * gi,
+                         state["m"], g)
+        v = jax.tree.map(lambda vi, gi: v_update(vi, gi * gi), state["v"], g)
+        lr_t = lr_fn(state["step"])
+        updates = jax.tree.map(
+            lambda mi, vi: -lr_t * mi / (jnp.sqrt(vi) + tau), m, v)
+        return updates, {"step": state["step"] + 1, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def fedadagrad(lr, b1: float = 0.0, tau: float = 1e-3) -> Optimizer:
+    """FedAdagrad: ``v += g^2`` (monotone preconditioner)."""
+    return _fedopt(lr, b1, tau, lambda v, g2: v + g2)
+
+
+def fedadam(lr, b1: float = 0.9, b2: float = 0.99, tau: float = 1e-3) -> Optimizer:
+    """FedAdam: EMA second moment ``v = b2*v + (1-b2)*g^2``."""
+    return _fedopt(lr, b1, tau, lambda v, g2: b2 * v + (1 - b2) * g2)
+
+
+def fedyogi(lr, b1: float = 0.9, b2: float = 0.99, tau: float = 1e-3) -> Optimizer:
+    """FedYogi: additive-only second moment
+    ``v = v - (1-b2) * g^2 * sign(v - g^2)`` — moves ``v`` toward ``g^2``
+    at a rate independent of its magnitude, which Reddi et al. found more
+    stable than FedAdam under heavy-tailed federated pseudo-gradients."""
+    return _fedopt(lr, b1, tau,
+                   lambda v, g2: v - (1 - b2) * g2 * jnp.sign(v - g2))

@@ -108,6 +108,7 @@ class TestQuantize:
 # ---------------------------------------------------------------------------
 
 class TestChannelAggregation:
+    @pytest.mark.slow
     def test_dense_and_dropout0_bit_identical_to_unchanneled(self, toy):
         params, apply, data, sizes = toy
         opt = opt_lib.adam(1e-2)

@@ -3,7 +3,6 @@ stateless two-view augmentations, federated pipeline layouts."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import augment, partition, pipeline, synthetic
 

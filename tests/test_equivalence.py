@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro import utils
-from repro.configs.base import get_config, get_dual_encoder_config, DualEncoderConfig
-from repro.core import cco, dcco, fed_sim
+from repro.configs.base import get_config, DualEncoderConfig
+from repro.core import dcco, fed_sim
 from repro.models import dual_encoder
 from repro.optim import optimizers as opt_lib
 

@@ -3,7 +3,6 @@ load-balance aux loss."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import MoEConfig
 from repro.models import moe

@@ -1,6 +1,5 @@
 """Beyond-paper performance features: int8 KV cache, parallel block,
 FSDP sharding rules, exact microbatching, analytic cost model validation."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,430 @@
+"""Server-optimization & client-drift subsystem (repro.server):
+
+  * ``fedavg_sgd`` ServerUpdate is BIT-IDENTICAL (==) to the pre-existing
+    hardcoded server step, for every base optimizer;
+  * the adaptive FedOpt rules (fedadagrad / fedadam / fedyogi) match their
+    hand-computed Reddi-style update on a toy pseudo-gradient;
+  * FedProx with mu=0 is bit-identical to the plain local step; mu>0
+    shrinks multi-step client drift and matches the analytic proximal
+    gradient on a quadratic;
+  * SCAFFOLD: the aggregated slot variates sum to ~0 around the server
+    variate (sum_k w_k c_k == c), the corrected training converges to the
+    true optimum of a heterogeneous quadratic federation where plain
+    FedAvg stalls at a biased fixed point, DenseChannel is bit-identical
+    to the channel-less path, and the variate uplink is accounted;
+  * the engine carries drift state through the scan: scan-of-N == N
+    Python-driven scaffold rounds, and resume via drift_state= continues
+    the same trajectory.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm, utils
+from repro.core import fed_sim, round_engine
+from repro.optim import optimizers as opt_lib
+from repro.server import (ScaffoldState, as_server_update,
+                          drift as drift_lib, get_server_update,
+                          optimizers as srv_opt, scaffold_init)
+
+LAM = 5.0
+F32 = jnp.float32
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (10, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    k1, k2 = jax.random.split(key)
+    data = {"v1": jax.random.normal(k1, (8, 3, 10)),
+            "v2": jax.random.normal(k2, (8, 3, 10))}
+    sizes = jnp.full((8,), 3, jnp.int32)
+    return params, apply, data, sizes
+
+
+class TestServerUpdateExact:
+    @pytest.mark.parametrize("make_opt", [
+        lambda: opt_lib.sgd(0.1, momentum=0.9),
+        lambda: opt_lib.adam(1e-2),
+        lambda: opt_lib.lars(0.1),
+    ], ids=["sgd", "adam", "lars"])
+    def test_fedavg_sgd_bit_identical_to_hardcoded_path(self, toy, make_opt):
+        """ServerUpdate('fedavg_sgd').step == the literal three lines every
+        round body used to inline (exact equality, not allclose)."""
+        params, _, data, _ = toy
+        opt = make_opt()
+        avg_delta = jax.tree.map(lambda p: 0.01 * jnp.ones_like(p), params)
+        state = opt.init(params)
+        # the pre-abstraction hardcoded path
+        pseudo_grad = utils.tree_scale(avg_delta, -1.0)
+        updates, s_ref = opt.update(pseudo_grad, state, params)
+        p_ref = opt_lib.apply_updates(params, updates)
+        # the abstraction
+        p_new, s_new = as_server_update(opt).step(params, opt.init(params),
+                                                  avg_delta)
+        assert utils.tree_max_abs_diff(p_ref, p_new) == 0.0
+        assert utils.tree_max_abs_diff(s_ref, s_new) == 0.0
+
+    def test_round_accepts_optimizer_or_serverupdate_identically(self, toy):
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+        p1, s1, m1 = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                        data, sizes, lam=LAM)
+        p2, s2, m2 = fed_sim.dcco_round(apply, params, opt.init(params),
+                                        as_server_update(opt), data, sizes,
+                                        lam=LAM)
+        assert utils.tree_max_abs_diff(p1, p2) == 0.0
+        assert float(m1.loss) == float(m2.loss)
+
+    def test_as_server_update_is_idempotent_and_typed(self):
+        su = get_server_update("fedavg_sgd", server_lr=0.1)
+        assert as_server_update(su) is su
+        with pytest.raises(TypeError):
+            as_server_update(object())
+        with pytest.raises(ValueError):
+            get_server_update("fedprox")   # drift correction, not a server opt
+        with pytest.raises(ValueError):
+            get_server_update("fedadam")   # needs server_lr
+
+
+class TestAdaptiveServerOptimizers:
+    def _pseudo_grad(self, params):
+        return jax.tree.map(
+            lambda p: 0.1 * jnp.arange(p.size, dtype=F32).reshape(p.shape)
+            / p.size - 0.05, params)
+
+    @pytest.mark.parametrize("name", ["fedadagrad", "fedadam", "fedyogi"])
+    def test_matches_hand_computed_reddi_update(self, name):
+        lr, b1, b2, tau = 0.05, 0.9, 0.99, 1e-3
+        params = {"w": jnp.ones((4,))}
+        g = {"w": jnp.array([0.2, -0.1, 0.05, 0.0])}
+        if name == "fedadagrad":
+            opt = srv_opt.fedadagrad(lr, tau=tau)
+            b1_eff = 0.0
+        else:
+            opt = {"fedadam": srv_opt.fedadam,
+                   "fedyogi": srv_opt.fedyogi}[name](lr, b1=b1, b2=b2, tau=tau)
+            b1_eff = b1
+        state = opt.init(params)
+        # two steps so the v-recursions differ between the variants
+        for _ in range(2):
+            updates, state = opt.update(g, state, params)
+        gv = np.asarray(g["w"])
+        m = np.zeros(4)
+        v = np.zeros(4)
+        for _ in range(2):
+            m = b1_eff * m + (1 - b1_eff) * gv
+            g2 = gv * gv
+            if name == "fedadagrad":
+                v = v + g2
+            elif name == "fedadam":
+                v = b2 * v + (1 - b2) * g2
+            else:
+                v = v - (1 - b2) * g2 * np.sign(v - g2)
+            ref = -lr * m / (np.sqrt(v) + tau)
+        np.testing.assert_allclose(np.asarray(updates["w"]), ref, rtol=1e-6)
+
+    def test_fedavgm_is_server_momentum_sgd(self):
+        params = {"w": jnp.ones((3,))}
+        g = {"w": jnp.array([1.0, -2.0, 0.5])}
+        a, b = srv_opt.fedavgm(0.1, momentum=0.9), opt_lib.sgd(0.1, momentum=0.9)
+        ua, _ = a.update(g, a.init(params), params)
+        ub, _ = b.update(g, b.init(params), params)
+        assert utils.tree_max_abs_diff(ua, ub) == 0.0
+
+    @pytest.mark.parametrize("name", ["fedavgm", "fedadagrad", "fedadam",
+                                      "fedyogi"])
+    def test_engine_trains_with_strategy(self, toy, name):
+        params, apply, data, sizes = toy
+        su = get_server_update(name, server_lr=0.05)
+
+        def sampler(k_sel, k_aug):
+            return data, sizes
+
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=3, server_update=su)
+        eng = round_engine.RoundEngine(apply, su, sampler, cfg)
+        p, s, m = eng.run(params, su.init(params), jax.random.PRNGKey(3), 3)
+        assert bool(jnp.isfinite(m.loss).all())
+        assert utils.tree_max_abs_diff(p, params) > 0.0
+
+
+class TestFedProx:
+    def test_mu0_bit_identical_to_plain_local_step(self, toy):
+        params, apply, data, sizes = toy
+
+        def loss_fn(p):
+            zf, zg = apply(p, jax.tree.map(lambda x: x[0], data))
+            return jnp.sum(zf * zg) * 1e-2
+
+        d0, l0 = fed_sim.client_local_steps(loss_fn, params, 0.1, 3)
+        d1, l1 = fed_sim.client_local_steps(loss_fn, params, 0.1, 3,
+                                            prox_mu=0.0)
+        assert utils.tree_max_abs_diff(d0, d1) == 0.0
+        assert float(l0) == float(l1)
+        opt = opt_lib.adam(1e-2)
+        p0, s0, m0 = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                        data, sizes, lam=LAM, local_steps=2,
+                                        client_lr=0.1)
+        p1, s1, m1 = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                        data, sizes, lam=LAM, local_steps=2,
+                                        client_lr=0.1, prox_mu=0.0)
+        assert utils.tree_max_abs_diff(p0, p1) == 0.0
+
+    def test_matches_analytic_proximal_gradient_on_quadratic(self):
+        """f(w) = 0.5||w - t||^2 with proximal pull toward w0 = 0:
+        step s: w <- w - lr * ((w - t) + mu * w)."""
+        t = jnp.array([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros((3,))}
+        lr, mu, L = 0.1, 0.7, 4
+
+        def loss_fn(p):
+            return 0.5 * jnp.sum((p["w"] - t) ** 2)
+
+        delta, _ = fed_sim.client_local_steps(loss_fn, params, lr, L,
+                                              prox_mu=mu)
+        w = np.zeros(3)
+        for _ in range(L):
+            w = w - lr * ((w - np.asarray(t)) + mu * w)
+        np.testing.assert_allclose(np.asarray(delta["w"]), w, rtol=1e-6)
+
+    def test_prox_shrinks_client_drift(self, toy):
+        params, apply, data, sizes = toy
+
+        def one_client_delta(mu):
+            def loss_fn(p):
+                zf, zg = apply(p, jax.tree.map(lambda x: x[0], data))
+                st = fed_sim.cco.encoding_stats_masked(
+                    zf, zg, jnp.ones(zf.shape[0]))
+                return fed_sim.cco.cco_loss_from_stats(st, LAM)
+            d, _ = fed_sim.client_local_steps(loss_fn, params, 0.1, 5,
+                                              prox_mu=mu)
+            return float(utils.tree_norm(d))
+
+        assert one_client_delta(5.0) < one_client_delta(0.0)
+
+
+class TestScaffold:
+    def test_variates_sum_to_zero_after_aggregation(self, toy):
+        """Invariant: with constant round weights, sum_k w_k c_k == c, i.e.
+        the aggregated (c_k - c) corrections cancel — client variates are a
+        zero-mean decomposition of the server variate."""
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+        st = opt.init(params)
+        p, d = params, scaffold_init(params, 8)
+        for _ in range(4):
+            p, st, d, m = fed_sim.dcco_round(
+                apply, p, st, opt, data, sizes, lam=LAM, client_lr=0.05,
+                local_steps=2, scaffold_state=d)
+        w = sizes.astype(F32) / jnp.sum(sizes.astype(F32))
+        resid = jax.tree.map(
+            lambda ck, c: jnp.tensordot(w, ck, axes=1) - c, d.c_slots, d.c)
+        assert float(utils.tree_norm(resid)) < 1e-4 * max(
+            1.0, float(utils.tree_norm(d.c)))
+
+    def test_scaffold_fixes_fedavg_bias_on_heterogeneous_quadratics(self):
+        """The canonical SCAFFOLD result: K clients minimizing
+        0.5||A_k w - b_k||^2 with heterogeneous A_k and many local steps.
+        FedAvg's fixed point is biased away from the global optimum;
+        SCAFFOLD converges to it."""
+        K, d = 8, 6
+        rng = np.random.RandomState(0)
+        A = np.stack([np.diag(rng.uniform(0.2, 3.0, d)) for _ in range(K)])
+        b = np.stack([rng.randn(d) for _ in range(K)])
+        H = sum(a.T @ a for a in A)
+        w_star = np.linalg.solve(H / K, sum(a.T @ bb for a, bb
+                                            in zip(A, b)) / K)
+        A_s, b_s = jnp.asarray(A), jnp.asarray(b)
+        params = {"w": jnp.zeros((d,))}
+        opt = opt_lib.sgd(1.0)        # server applies the avg delta directly
+        su = as_server_update(opt)
+        L, clr = 10, 0.05
+        w_agg = jnp.full((K,), 1.0 / K)
+
+        def run(scaffold: bool):
+            p, st = params, opt.init(params)
+            dstate = scaffold_init(params, K) if scaffold else None
+            for _ in range(150):
+                def client_update(ak, bk, corr=None):
+                    def loss_fn(pp):
+                        e = ak @ pp["w"] - bk
+                        return 0.5 * jnp.dot(e, e)
+                    return fed_sim.client_local_steps(loss_fn, p, clr, L,
+                                                      correction=corr)
+                if scaffold:
+                    corr = drift_lib.scaffold_corrections(dstate)
+                    deltas, _ = jax.vmap(client_update)(A_s, b_s, corr)
+                else:
+                    deltas, _ = jax.vmap(client_update)(A_s, b_s)
+                avg = jax.tree.map(lambda x: jnp.tensordot(w_agg, x, axes=1),
+                                   deltas)
+                p, st = su.step(p, st, avg)
+                if scaffold:
+                    dstate, _ = fed_sim._scaffold_round_tail(
+                        dstate, deltas, clr, L, w_agg, None, None)
+            return np.asarray(p["w"])
+
+        err_fedavg = np.linalg.norm(run(False) - w_star)
+        err_scaffold = np.linalg.norm(run(True) - w_star)
+        assert err_fedavg > 1e-2          # the bias is real
+        assert err_scaffold < 1e-5        # and scaffold removes it
+
+    def test_dense_channel_bit_identical_and_variate_bytes_accounted(self, toy):
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+        d0 = scaffold_init(params, 8)
+        p1, s1, d1, m1 = fed_sim.dcco_round(
+            apply, params, opt.init(params), opt, data, sizes, lam=LAM,
+            client_lr=0.05, local_steps=2, scaffold_state=d0)
+        p2, s2, d2, m2 = fed_sim.dcco_round(
+            apply, params, opt.init(params), opt, data, sizes, lam=LAM,
+            client_lr=0.05, local_steps=2, scaffold_state=d0,
+            channel=comm.DenseChannel(), channel_key=jax.random.PRNGKey(42))
+        assert utils.tree_max_abs_diff(p1, p2) == 0.0
+        assert utils.tree_max_abs_diff(d1.c, d2.c) == 0.0
+        assert utils.tree_max_abs_diff(d1.c_slots, d2.c_slots) == 0.0
+        # without scaffold, the same channeled round ships fewer bytes:
+        # the "variate" phase adds one params-sized payload per client
+        p3, s3, m3 = fed_sim.dcco_round(
+            apply, params, opt.init(params), opt, data, sizes, lam=LAM,
+            client_lr=0.05, local_steps=2,
+            channel=comm.DenseChannel(), channel_key=jax.random.PRNGKey(42))
+        assert float(m2.wire_bytes) > float(m3.wire_bytes)
+
+    def test_dropped_slots_keep_their_variates(self, toy):
+        """Under client dropout, a slot that did not report keeps its old
+        control variate (it cannot have refreshed it)."""
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+        d0 = scaffold_init(params, 8)
+        # one warm round so variates are non-zero, then a dropout round
+        p, st, d1, _ = fed_sim.dcco_round(
+            apply, params, opt.init(params), opt, data, sizes, lam=LAM,
+            client_lr=0.05, local_steps=2, scaffold_state=d0)
+        ch = comm.DropoutChannel(0.5)
+        key = jax.random.PRNGKey(123)
+        ctx = ch.begin_round(key, sizes)
+        mask = np.asarray(ctx.mask)
+        assert 0 < mask.sum() < 8, "pick a key that drops some clients"
+        p2, st2, d2, _ = fed_sim.dcco_round(
+            apply, p, st, opt, data, sizes, lam=LAM, client_lr=0.05,
+            local_steps=2, scaffold_state=d1, channel=ch, channel_key=key)
+        kept = jax.tree.map(
+            lambda new, old: np.asarray(jnp.abs(new - old).reshape(8, -1)
+                                        .max(axis=1)), d2.c_slots, d1.c_slots)
+        for leaf in jax.tree.leaves(kept):
+            assert np.all(leaf[mask == 0.0] == 0.0)
+            assert np.all(leaf[mask == 1.0] > 0.0)
+
+    def test_dp_channel_must_noise_variates(self, toy):
+        """A DP channel that does not noise the 'variate' phase would
+        release the variate aggregate un-noised while reporting a finite
+        epsilon — rejected loudly; including 'variate' runs."""
+        params, apply, data, sizes = toy
+        opt = opt_lib.sgd(0.1)
+        with pytest.raises(ValueError, match="variate"):
+            fed_sim.dcco_round(
+                apply, params, opt.init(params), opt, data, sizes, lam=LAM,
+                scaffold_state=scaffold_init(params, 8),
+                channel=comm.DPGaussianChannel(0.3, clip_norm=10.0),
+                channel_key=jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="variate"):
+            round_engine.make_round_body(
+                apply, opt, round_engine.EngineConfig(
+                    scaffold=True, channel=comm.DPGaussianChannel(0.3)))
+        out = fed_sim.dcco_round(
+            apply, params, opt.init(params), opt, data, sizes, lam=LAM,
+            scaffold_state=scaffold_init(params, 8),
+            channel=comm.DPGaussianChannel(
+                0.3, clip_norm=10.0,
+                noise_phases=("stats", "update", "variate")),
+            channel_key=jax.random.PRNGKey(0))
+        assert len(out) == 4
+
+    def test_centralized_body_rejects_drift(self, toy):
+        params, apply, data, sizes = toy
+        with pytest.raises(ValueError):
+            round_engine.make_round_body(
+                apply, opt_lib.sgd(0.1),
+                round_engine.EngineConfig(algorithm="centralized",
+                                          scaffold=True))
+        with pytest.raises(ValueError):
+            round_engine.make_round_body(
+                apply, opt_lib.sgd(0.1),
+                round_engine.EngineConfig(algorithm="centralized",
+                                          prox_mu=0.1))
+
+
+class TestEngineDrift:
+    def test_scan_equals_python_loop_with_scaffold(self, toy):
+        params, apply, data, sizes = toy
+        opt = opt_lib.adam(1e-2)
+
+        def sampler(k_sel, k_aug):
+            return data, sizes
+
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=4, client_lr=0.05,
+                                        local_steps=2, scaffold=True)
+        eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+        rng = jax.random.PRNGKey(3)
+        pe, se, me = eng.run(params, opt.init(params), rng, 4)
+        assert isinstance(eng.drift_state, ScaffoldState)
+
+        p, st, d = params, opt.init(params), scaffold_init(params, 8)
+        losses = []
+        for r in range(4):
+            k_sel, k_aug = jax.random.split(jax.random.fold_in(rng, r))
+            batch, sz = sampler(k_sel, k_aug)
+            p, st, d, m = fed_sim.dcco_round(
+                apply, p, st, opt, batch, sz, lam=LAM, client_lr=0.05,
+                local_steps=2, scaffold_state=d)
+            losses.append(float(m.loss))
+        assert utils.tree_max_abs_diff(pe, p) < 1e-6
+        assert utils.tree_max_abs_diff(eng.drift_state.c, d.c) < 1e-5
+        np.testing.assert_allclose(np.asarray(me.loss), losses, rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_drift_state_resume_continues_trajectory(self, toy):
+        params, apply, data, sizes = toy
+        opt = opt_lib.sgd(0.1)
+
+        def sampler(k_sel, k_aug):
+            return data, sizes
+
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=4, client_lr=0.05,
+                                        local_steps=2, scaffold=True)
+        eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+        rng = jax.random.PRNGKey(9)
+        p1, s1, _ = eng.run(params, opt.init(params), rng, 4)
+        d1 = eng.drift_state
+        p1, s1, _ = eng.run(p1, s1, rng, 4, start_round=4, drift_state=d1)
+        p2, s2, _ = eng.run(params, opt.init(params), rng, 8)
+        assert utils.tree_max_abs_diff(p1, p2) < 1e-6
+        assert utils.tree_max_abs_diff(eng.drift_state.c, eng.drift_state.c) == 0.0
+
+    def test_fedavg_body_supports_scaffold(self, toy):
+        params, apply, data, sizes = toy
+        su = get_server_update("fedadam", server_lr=0.05)
+
+        def sampler(k_sel, k_aug):
+            return data, sizes
+
+        cfg = round_engine.EngineConfig(algorithm="fedavg_cco", lam=LAM,
+                                        chunk_rounds=3, client_lr=0.05,
+                                        local_steps=2, scaffold=True,
+                                        server_update=su)
+        eng = round_engine.RoundEngine(apply, su, sampler, cfg)
+        p, s, m = eng.run(params, su.init(params), jax.random.PRNGKey(3), 3)
+        assert bool(jnp.isfinite(m.loss).all())
+        assert isinstance(eng.drift_state, ScaffoldState)

@@ -9,9 +9,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import utils
 from repro.checkpoint import restore_checkpoint, save_checkpoint
-from repro.configs.base import get_config, DualEncoderConfig
+from repro.configs.base import get_config
 from repro.core import eval as eval_lib
-from repro.models import dual_encoder, transformer
+from repro.models import transformer
 from repro.optim import optimizers as opt_lib, schedules
 from repro.sharding import specs as shard_specs
 
@@ -94,7 +94,6 @@ class TestShardingRules:
     def test_rules_on_abstract_16way(self):
         """Validate specs against a virtual 16x16 mesh using eval_shape
         params (no devices needed: we check the returned PartitionSpecs)."""
-        import unittest.mock as mock
         cfg = get_config("qwen3-8b").replace(dtype="bfloat16")
         params = jax.eval_shape(
             lambda k: transformer.init_params(cfg, k),

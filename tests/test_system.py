@@ -5,7 +5,6 @@ protocol-faithful per-client path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import utils
 from repro.configs.base import get_config, DualEncoderConfig, TrainConfig

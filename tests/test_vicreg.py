@@ -3,10 +3,9 @@ with VICReg's seven statistics — same linearity, same equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import cco, fed_sim, vicreg
+from repro.core import cco, vicreg
 from repro.optim import optimizers as opt_lib
 from repro import utils
 
