@@ -1,5 +1,6 @@
 """Bench-regression gate: compare a fresh BENCH.json against the checked-in
-baseline (benchmarks/baseline.json) and fail on round_engine regressions.
+baseline (benchmarks/baseline.json) and fail on round_engine or
+stats-kernel regressions.
 
 Usage:
     python benchmarks/compare.py BENCH.json benchmarks/baseline.json \
@@ -15,6 +16,14 @@ machine, so the ratio cancels machine speed and isolates what this repo
 controls (dispatch removal, scan compilation, unroll policy). The gate
 fails when that ratio drops more than ``--max-regress`` (default 30%)
 below the baseline's ratio.
+
+The generalized stats kernel is gated the same way: the ratio of the
+naive per-statistic passes (``stats_kernel/naive_passes``: 7 separately
+jitted reductions) over the fused one-pass computation
+(``stats_kernel/one_pass``: all 7 statistics from one read — what the
+Pallas kernel fuses) must not drop more than ``--max-regress`` below the
+baseline's ratio, so a change that silently de-fuses the moment
+computation fails CI rather than just reading "covered".
 
 Raw per-row timings for every name present in both files are printed as an
 informational table (with the new/baseline ratio) so absolute drifts stay
@@ -43,6 +52,19 @@ def engine_speedup(rows: dict) -> float:
     return loop / scan
 
 
+def kernel_one_pass_ratio(rows: dict):
+    """None when the stats_kernel rows are absent (partial local runs may
+    gate only what they measured; CI always produces them)."""
+    try:
+        naive = float(rows["stats_kernel/naive_passes"]["us_per_call"])
+        one = float(rows["stats_kernel/one_pass"]["us_per_call"])
+    except KeyError:
+        return None
+    if one <= 0:
+        raise SystemExit(f"bad one_pass timing {one}")
+    return naive / one
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("new", help="fresh BENCH.json")
@@ -65,6 +87,7 @@ def main(argv=None) -> int:
             ratio = f"{w / b:7.2f}" if b > 0 else "      -"
             print(f"{n:44s} {b:12.1f} {w:12.1f} {ratio}")
 
+    failed = False
     sp_new, sp_base = engine_speedup(new), engine_speedup(base)
     floor = sp_base * (1.0 - args.max_regress)
     print(f"\nround_engine speedup: baseline {sp_base:.2f}x, "
@@ -72,11 +95,29 @@ def main(argv=None) -> int:
           f"(max regress {args.max_regress:.0%})")
     if sp_new < floor:
         print("FAIL: scan-engine speedup regressed past the gate")
+        failed = True
+
+    kr_new, kr_base = kernel_one_pass_ratio(new), kernel_one_pass_ratio(base)
+    if kr_new is None or kr_base is None:
+        which = "new BENCH.json" if kr_new is None else "baseline"
+        print(f"stats_kernel one-pass-vs-naive: SKIPPED ({which} has no "
+              f"stats_kernel rows — run `python benchmarks/run.py "
+              f"stats_kernel` to gate the kernel too)")
+    else:
+        kfloor = kr_base * (1.0 - args.max_regress)
+        print(f"stats_kernel one-pass-vs-naive: baseline {kr_base:.2f}x, "
+              f"new {kr_new:.2f}x, floor {kfloor:.2f}x")
+        if kr_new < kfloor:
+            print("FAIL: fused one-pass stats computation regressed past "
+                  "the gate")
+            failed = True
+
+    if failed:
         print("If this is a runner-environment shift rather than a code "
-              "change (the ratio cancels machine speed but not scheduler/"
-              "core-count effects on XLA:CPU's scan unrolling), refresh "
-              "the baseline: download the BENCH.json artifact from a "
-              "known-good run of this job and check it in as "
+              "change (the ratios cancel machine speed but not scheduler/"
+              "core-count effects on XLA:CPU's scan unrolling and fusion), "
+              "refresh the baseline: download the BENCH.json artifact from "
+              "a known-good run of this job and check it in as "
               "benchmarks/baseline.json.")
         return 1
     print("OK: within gate")

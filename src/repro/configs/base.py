@@ -8,8 +8,8 @@ Every assigned architecture gets a module ``repro/configs/<id>.py`` exporting
 from __future__ import annotations
 
 import dataclasses
-import importlib
 from dataclasses import dataclass
+import importlib
 from typing import Optional, Tuple
 
 

@@ -1,15 +1,16 @@
 # The paper's primary contribution: DCCO — distributed cross-correlation
 # optimization for federated dual-encoder training (see DESIGN.md).
+from repro.core import fed_sim  # noqa: F401
 from repro.core.cco import (  # noqa: F401
-    encoding_stats, encoding_stats_masked, weighted_average_stats,
-    correlation_matrix, cco_loss, cco_loss_from_stats, dcco_combine,
-    per_client_stats, STAT_KEYS)
+    SECOND_MOMENT_KEYS, STAT_KEYS, cco_loss, cco_loss_from_stats,
+    correlation_matrix, dcco_combine, encoding_stats, encoding_stats_masked,
+    moment_stats, per_client_stats, weighted_average_stats)
 from repro.core.dcco import (  # noqa: F401
     dcco_loss, dcco_loss_fused, dcco_loss_per_client,
     make_shard_map_dcco_loss)
 from repro.core.losses import (  # noqa: F401
-    ntxent_loss, softmax_cross_entropy, byol_predictive_loss, encoding_variance)
-from repro.core import fed_sim  # noqa: F401
+    byol_predictive_loss, encoding_variance, ntxent_loss,
+    softmax_cross_entropy)
 from repro.core.round_engine import (  # noqa: F401
     ALGORITHMS, EngineCarry, EngineConfig, EngineMetrics, RoundEngine,
-    dcco_round_sharded, make_round_body)
+    dcco_round_sharded, make_round_body, stats_round_sharded)

@@ -20,20 +20,59 @@ F32 = jnp.float32
 Stats = Dict[str, jnp.ndarray]   # mean_f/sq_f: (d,), mean_g/sq_g: (d,), cross: (d,d)
 
 STAT_KEYS = ("mean_f", "sq_f", "mean_g", "sq_g", "cross")
+# the optional within-view second moments (VICReg / W-MSE moment set)
+SECOND_MOMENT_KEYS = ("cov_f", "cov_g")
+
+
+def moment_stats(zf, zg, mask=None, *, second_moments: bool = False) -> Stats:
+    """The one sufficient-statistics accumulator every objective shares.
+
+    Computes the five CCO statistics — and, with ``second_moments``, the two
+    within-view second-moment matrices <F F^T>, <G G^T> that VICReg-family
+    losses need — in a single place, for both the dense and the masked
+    (padded variable-size client) layouts. Every statistic is linear in
+    samples, which is the invariant paper Eq. 3, the flattened-cohort
+    kernel path, and the shard_map psum path all rely on
+    (property-tested per registered objective in tests/test_objectives.py).
+
+    ``mask`` is ``(N,)`` in {0, 1}; rows with 0 contribute nothing and the
+    normalizer is the valid-sample count (DERM: 1-6 images/case padding).
+    """
+    zf = zf.astype(F32)
+    zg = zg.astype(F32)
+    if mask is None:
+        n = zf.shape[0]
+        st = {
+            "mean_f": zf.mean(0),
+            "sq_f": (zf * zf).mean(0),
+            "mean_g": zg.mean(0),
+            "sq_g": (zg * zg).mean(0),
+            "cross": zf.T @ zg / n,
+        }
+        if second_moments:
+            st["cov_f"] = zf.T @ zf / n
+            st["cov_g"] = zg.T @ zg / n
+        return st
+    w = mask.astype(F32)
+    n = jnp.maximum(w.sum(), 1.0)
+    zf_m = zf * w[:, None]
+    zg_m = zg * w[:, None]
+    st = {
+        "mean_f": zf_m.sum(0) / n,
+        "sq_f": (zf_m * zf).sum(0) / n,
+        "mean_g": zg_m.sum(0) / n,
+        "sq_g": (zg_m * zg).sum(0) / n,
+        "cross": zf_m.T @ zg / n,
+    }
+    if second_moments:
+        st["cov_f"] = zf_m.T @ zf / n
+        st["cov_g"] = zg_m.T @ zg / n
+    return st
 
 
 def encoding_stats(zf, zg) -> Stats:
     """Five batch statistics of encodings zf, zg: (N, d) -> Stats."""
-    zf = zf.astype(F32)
-    zg = zg.astype(F32)
-    n = zf.shape[0]
-    return {
-        "mean_f": zf.mean(0),
-        "sq_f": (zf * zf).mean(0),
-        "mean_g": zg.mean(0),
-        "sq_g": (zg * zg).mean(0),
-        "cross": zf.T @ zg / n,
-    }
+    return moment_stats(zf, zg)
 
 
 def weighted_average_stats(stats: Stats, weights) -> Stats:
@@ -49,13 +88,30 @@ def weighted_average_stats(stats: Stats, weights) -> Stats:
     return {k: avg(v) for k, v in stats.items()}
 
 
-def correlation_matrix(stats: Stats, eps: float = 1e-8):
-    """C_ij per paper Eq. 2, from the five statistics."""
-    var_f = stats["sq_f"] - stats["mean_f"] ** 2
-    var_g = stats["sq_g"] - stats["mean_g"] ** 2
+def correlation_matrix(stats: Stats, eps: float = 1e-8,
+                       var_floor: float = 1e-6):
+    """C_ij per paper Eq. 2, from the five statistics.
+
+    The variance is floored at ``var_floor * (1 + |sq|)`` — a *relative*
+    floor. With ``local_steps >= 2`` on tiny (2-sample) clients the stale
+    stop-grad combine ``local + sg(agg - local)`` cancels catastrophically
+    once the local stats diverge, and the combined variance can come out
+    ~0 or even negative while the covariance does not cancel; the old
+    absolute ``max(var, 0) + 1e-8`` then produced a ~1e-8 denominator,
+    |C| ~ 1e7, and a loss/gradient explosion that overflowed to NaN within
+    a round. Tying the floor to the second-moment scale bounds |C| by
+    ~1/var_floor regardless of how degenerate the cancellation is. For any
+    healthy variance (var > floor) the floor is bit-invisible: the max
+    resolves to var and the expression equals the pre-floor formula
+    exactly (asserted in tests/test_objectives.py).
+    """
+    floor_f = var_floor * (1.0 + jnp.abs(stats["sq_f"]))
+    floor_g = var_floor * (1.0 + jnp.abs(stats["sq_g"]))
+    var_f = jnp.maximum(stats["sq_f"] - stats["mean_f"] ** 2, floor_f)
+    var_g = jnp.maximum(stats["sq_g"] - stats["mean_g"] ** 2, floor_g)
     cov = stats["cross"] - jnp.outer(stats["mean_f"], stats["mean_g"])
-    denom = jnp.sqrt(jnp.maximum(var_f, 0.0) + eps)[:, None] * \
-        jnp.sqrt(jnp.maximum(var_g, 0.0) + eps)[None, :]
+    denom = jnp.sqrt(var_f + eps)[:, None] * \
+        jnp.sqrt(var_g + eps)[None, :]
     return cov / denom
 
 
@@ -87,19 +143,7 @@ def encoding_stats_masked(zf, zg, mask) -> Stats:
     """Statistics over valid samples only (mask: (N,) in {0,1}).
 
     Supports variable-size clients (DERM: 1-6 images/case) via padding."""
-    zf = zf.astype(F32)
-    zg = zg.astype(F32)
-    w = mask.astype(F32)
-    n = jnp.maximum(w.sum(), 1.0)
-    zf_m = zf * w[:, None]
-    zg_m = zg * w[:, None]
-    return {
-        "mean_f": zf_m.sum(0) / n,
-        "sq_f": (zf_m * zf).sum(0) / n,
-        "mean_g": zg_m.sum(0) / n,
-        "sq_g": (zg_m * zg).sum(0) / n,
-        "cross": zf_m.T @ zg / n,
-    }
+    return moment_stats(zf, zg, mask)
 
 
 def per_client_stats(zf, zg, clients: int) -> Stats:

@@ -20,13 +20,30 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import cco, losses
 from repro import utils
+from repro.core import cco, losses
 from repro.optim import optimizers as opt_lib
 from repro.server import drift as drift_lib
 from repro.server import update as server_update_lib
 
 F32 = jnp.float32
+
+
+def resolve_objective(objective, lam: float = 20.0):
+    """Resolve an objective name/instance; ``None`` -> CCO with ``lam``.
+
+    ``lam`` is CCO's hyperparameter, so it also applies when the CCO
+    objective is requested *by name* — ``objective="dcco", lam=5.0`` must
+    not silently train with the default lam. Other names/instances carry
+    their own hyperparameters and ignore ``lam``.
+
+    Imported lazily: ``repro.objectives`` builds on ``repro.core``, so a
+    module-level import here would be circular.
+    """
+    from repro import objectives as objectives_lib
+    if objective is None or objective == "dcco":
+        return objectives_lib.CCOObjective(lam=lam)
+    return objectives_lib.get_objective(objective)
 
 
 class RoundMetrics(NamedTuple):
@@ -121,26 +138,37 @@ def _scaffold_round_tail(scaffold_state, deltas, client_lr, local_steps,
 
 
 # ---------------------------------------------------------------------------
-# DCCO round (paper Sec 3.3, Fig. 2)
+# two-phase stats round (paper Sec 3.3, Fig. 2 — generic over StatsObjective)
 # ---------------------------------------------------------------------------
 
-def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
-               client_data, client_sizes, *, lam: float = 20.0,
-               client_lr: float = 1.0, local_steps: int = 1,
-               agg_stats_fn: Optional[Callable] = None,
-               channel=None, channel_key=None,
-               prox_mu: float = 0.0, scaffold_state=None):
-    """One DCCO round. Returns (params, opt_state, metrics).
+def stats_round(encoder_apply: Callable, params, opt_state, server_opt,
+                client_data, client_sizes, *, objective,
+                client_lr: float = 1.0, local_steps: int = 1,
+                agg_stats_fn: Optional[Callable] = None,
+                channel=None, channel_key=None,
+                prox_mu: float = 0.0, scaffold_state=None):
+    """One two-phase aggregated-statistics round for any StatsObjective
+    (``repro.objectives``: dcco / dvicreg / dwmse / registered custom).
+    Returns (params, opt_state, metrics). ``dcco_round`` is the CCO-bound
+    back-compat alias.
+
+    The protocol is objective-agnostic: phase 1 aggregates whatever stats
+    dict ``objective.stats_masked`` emits (Eq. 3 applies because the
+    protocol requires linearity in samples), phase 2 optimizes
+    ``objective.loss_from_stats`` on the stop-grad combine, and any comm
+    ``channel`` transports the objective's stats dict unchanged — payload
+    shapes differ per objective (5 vs 7 stats) and quantization / DP /
+    dropout / wire-bytes accounting compose per leaf.
 
     ``agg_stats_fn(zf_flat, zg_flat, mask_flat) -> Stats``, if given, computes
     the phase-1 *aggregate* statistics in one pass over the flattened cohort
     encodings. By Eq. 3 (stats are linear in samples) this equals the weighted
     average of per-client stats exactly — it is how the engine routes phase 1
-    through the fused ``cco_stats_pallas`` kernel. Phase 1 is never
-    differentiated, so a non-differentiable kernel is safe here. The flat
-    path requires a lossless full-participation channel
-    (``channel.supports_flat_stats``) since per-client payloads never
-    materialize.
+    through the fused ``cco_stats_pallas`` kernel (with the objective's
+    moment set). Phase 1 is never differentiated, so a non-differentiable
+    kernel is safe here. The flat path requires a lossless
+    full-participation channel (``channel.supports_flat_stats``) since
+    per-client payloads never materialize.
 
     ``channel`` (repro.comm) routes both uplinks — phase-1 statistics and
     phase-2 deltas — through an explicit wire: participation mask and
@@ -181,7 +209,7 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
     if agg_stats_fn is None:
         def client_stats(batch, mask):
             zf, zg = encoder_apply(params, batch)
-            return cco.encoding_stats_masked(zf, zg, mask)
+            return objective.stats_masked(zf, zg, mask)
 
         st_k = jax.vmap(client_stats)(client_data, masks)
         if ctx is None:
@@ -204,9 +232,9 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
     def client_update(batch, mask, corr=None):
         def loss_fn(p):
             zf, zg = encoder_apply(p, batch)
-            local = cco.encoding_stats_masked(zf, zg, mask)
-            combined = cco.dcco_combine(local, agg)
-            return cco.cco_loss_from_stats(combined, lam)
+            local = objective.stats_masked(zf, zg, mask)
+            combined = objective.combine(local, agg)
+            return objective.loss_from_stats(combined)
 
         return client_local_steps(loss_fn, params, client_lr, local_steps,
                                   prox_mu=prox_mu, correction=corr)
@@ -226,7 +254,7 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
     params, opt_state = server_update.step(params, opt_state, avg_delta)
 
     # collapse probe on the aggregated stats
-    enc_std = jnp.sqrt(jnp.maximum(agg["sq_f"] - agg["mean_f"] ** 2, 0.0)).mean()
+    enc_std = objective.encoding_std(agg)
     if scaffold_state is not None:
         new_scaffold, extra = _scaffold_round_tail(
             scaffold_state, deltas, client_lr, local_steps, w, ctx, channel)
@@ -237,6 +265,19 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
                                            jnp.asarray(wire, F32))
 
 
+def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
+               client_data, client_sizes, *, lam: float = 20.0,
+               objective=None, **round_kw):
+    """Back-compat alias: one DCCO round == ``stats_round`` with the CCO
+    objective (``lam`` is CCO's off-diagonal weight). See ``stats_round``
+    for the full contract; passing ``objective=`` selects another
+    registered stats objective (then ``lam`` is ignored)."""
+    return stats_round(encoder_apply, params, opt_state, server_opt,
+                       client_data, client_sizes,
+                       objective=resolve_objective(objective, lam),
+                       **round_kw)
+
+
 # ---------------------------------------------------------------------------
 # FedAvg baselines (within-client loss, no stats exchange)
 # ---------------------------------------------------------------------------
@@ -244,17 +285,27 @@ def dcco_round(encoder_apply: Callable, params, opt_state, server_opt,
 def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
                  client_data, client_sizes, *, loss_kind: str = "cco",
                  lam: float = 20.0, temperature: float = 0.1,
+                 objective=None,
                  client_lr: float = 1.0, local_steps: int = 1,
                  channel=None, channel_key=None,
                  prox_mu: float = 0.0, scaffold_state=None):
-    """FedAvg with a within-client loss: 'cco' | 'contrastive' | 'byol'.
+    """FedAvg with a within-client loss: 'stats' | 'cco' | 'contrastive'
+    | 'byol'.
+
+    The ``'stats'`` kind runs any :class:`repro.objectives.StatsObjective`
+    as a *within-client* loss (no stats exchange — the baseline DCCO-style
+    training is compared against); ``'cco'`` is its back-compat spelling
+    bound to the CCO objective with ``lam``, so the historical path is
+    bit-identical.
 
     ``channel`` routes the single uplink (client deltas) through the wire,
-    same contract as in ``dcco_round`` — as are ``server_opt`` (Optimizer
+    same contract as in ``stats_round`` — as are ``server_opt`` (Optimizer
     or ServerUpdate), ``prox_mu``, and ``scaffold_state`` (which again
     turns the return into a 4-tuple carrying the new variates).
     """
     server_update = server_update_lib.as_server_update(server_opt)
+    if loss_kind in ("cco", "stats"):
+        objective = resolve_objective(objective, lam)
     if scaffold_state is not None and channel is not None:
         check_variate_noise(channel)
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
@@ -270,9 +321,9 @@ def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
 
     def client_loss(p, batch, mask):
         zf, zg = encoder_apply(p, batch)
-        if loss_kind == "cco":
-            st = cco.encoding_stats_masked(zf, zg, mask)
-            return cco.cco_loss_from_stats(st, lam)
+        if loss_kind in ("cco", "stats"):
+            st = objective.stats_masked(zf, zg, mask)
+            return objective.loss_from_stats(st)
         if loss_kind == "contrastive":
             # NOTE: padding samples contribute as (weak) negatives; paper's
             # clients are tiny so we keep the simple masked-mean variant.
@@ -314,21 +365,23 @@ def fedavg_round(encoder_apply: Callable, params, opt_state, server_opt,
 # ---------------------------------------------------------------------------
 
 def centralized_step(encoder_apply: Callable, params, opt_state, server_opt,
-                     batch, mask=None, *, lam: float = 20.0):
-    """One centralized large-batch CCO step. batch leaves: (N, ...).
+                     batch, mask=None, *, lam: float = 20.0, objective=None):
+    """One centralized large-batch step of a stats objective (default: CCO
+    with ``lam`` — the pre-protocol behavior). batch leaves: (N, ...).
 
     ``server_opt`` may be an Optimizer or a ServerUpdate; the raw gradient
     goes straight to the wrapped optimizer (there is no client delta here,
     so drift corrections do not apply)."""
     server_opt = server_update_lib.as_server_update(server_opt).opt
+    objective = resolve_objective(objective, lam)
 
     def loss_fn(p):
         zf, zg = encoder_apply(p, batch)
         if mask is not None:
-            st = cco.encoding_stats_masked(zf, zg, mask)
+            st = objective.stats_masked(zf, zg, mask)
         else:
-            st = cco.encoding_stats(zf, zg)
-        return cco.cco_loss_from_stats(st, lam)
+            st = objective.stats(zf, zg)
+        return objective.loss_from_stats(st)
 
     loss, g = jax.value_and_grad(loss_fn)(params)
     updates, opt_state = server_opt.update(g, opt_state, params)

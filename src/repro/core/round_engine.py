@@ -14,7 +14,10 @@ loop into ONE XLA program:
   * a pluggable round body: ``dcco`` | ``fedavg_cco`` | ``fedavg_contrastive``
     | ``fedavg_byol`` | ``centralized`` — all reuse the reference semantics in
     :mod:`repro.core.fed_sim`, so scan-of-N-rounds == N Python-driven rounds
-    (tested in tests/test_round_engine.py);
+    (tested in tests/test_round_engine.py); the stats bodies (dcco /
+    fedavg_cco / centralized) are parametric in a
+    :class:`repro.objectives.StatsObjective` (``EngineConfig.objective``:
+    dcco / dvicreg / dwmse), whose stats dict rides every wire unchanged;
   * a sharded-cohort DCCO path: the (K, n, ...) client axis is laid across
     the mesh's data axis with ``shard_map``; the phase-1 stats aggregation
     and the phase-2 delta average become explicit psums — the wire protocol
@@ -52,7 +55,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import cco, fed_sim
+from repro.core import fed_sim
 from repro.core.dcco import shard_map_compat
 from repro.server import drift as drift_lib
 from repro.server import update as server_update_lib
@@ -68,6 +71,11 @@ _CHANNEL_SALT = 0xC0                 # fold_in salt for the per-round comm key
 class EngineConfig(NamedTuple):
     """Static configuration of the compiled round loop."""
     algorithm: str = "dcco"
+    objective: Any = None           # StatsObjective instance or registered
+                                    # name (repro.objectives) driving the
+                                    # dcco/fedavg_cco/centralized bodies;
+                                    # None = CCO with ``lam`` (pre-protocol
+                                    # behavior, bit-identical)
     lam: float = 20.0
     temperature: float = 0.1
     client_lr: float = 1.0
@@ -109,8 +117,13 @@ class EngineMetrics(NamedTuple):
 # phase-1 aggregate statistics through the fused Pallas kernel
 # ---------------------------------------------------------------------------
 
-def make_kernel_agg_stats(interpret: bool = False) -> Callable:
+def make_kernel_agg_stats(interpret: bool = False,
+                          second_moments: bool = False) -> Callable:
     """Aggregate cohort stats in one pass of the fused cco_stats kernel.
+
+    ``second_moments`` selects the kernel's moment set (the objective's
+    ``second_moments`` flag): "full" additionally emits the within-view
+    moments VICReg-family objectives need, still in one pass.
 
     Rows are pre-masked (zeroed) and the normalizer is the true valid-sample
     count, which is exact for binary masks: (m*f)^2 = m*f^2 and
@@ -118,43 +131,52 @@ def make_kernel_agg_stats(interpret: bool = False) -> Callable:
     """
     from repro.kernels.cco_stats import cco_stats_pallas
 
+    moments = "full" if second_moments else "cross"
+
     def agg_stats(zf, zg, mask):
         m = mask.astype(F32)[:, None]
         return cco_stats_pallas(zf.astype(F32) * m, zg.astype(F32) * m,
-                                jnp.sum(mask.astype(F32)), interpret=interpret)
+                                jnp.sum(mask.astype(F32)),
+                                interpret=interpret, moments=moments)
 
     return agg_stats
 
 
-def _resolve_agg_stats_fn(cfg: EngineConfig) -> Optional[Callable]:
+def _resolve_agg_stats_fn(cfg: EngineConfig, objective) -> Optional[Callable]:
     if cfg.stats_kernel == "off":
         return None
+    second = objective.second_moments
     if cfg.stats_kernel == "pallas":
         # pallas only compiles on accelerator backends; CPU falls back to
         # the (slow but exact) interpreter so the flag works everywhere
         return make_kernel_agg_stats(
-            interpret=jax.default_backend() == "cpu")
+            interpret=jax.default_backend() == "cpu", second_moments=second)
     if cfg.stats_kernel == "interpret":
-        return make_kernel_agg_stats(interpret=True)
+        return make_kernel_agg_stats(interpret=True, second_moments=second)
     raise ValueError(f"unknown stats_kernel {cfg.stats_kernel!r}")
 
 
 # ---------------------------------------------------------------------------
-# sharded-cohort DCCO round (client axis on the mesh's data axis)
+# sharded-cohort stats round (client axis on the mesh's data axis)
 # ---------------------------------------------------------------------------
 
-def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
-                       client_data, client_sizes, mesh, *, lam: float = 20.0,
-                       client_lr: float = 1.0, local_steps: int = 1,
-                       axis: str = "data", channel=None, channel_key=None,
-                       prox_mu: float = 0.0, scaffold_state=None):
-    """One DCCO round with the (K, n, ...) client axis sharded over ``axis``.
+def stats_round_sharded(encoder_apply: Callable, params, opt_state,
+                        server_opt, client_data, client_sizes, mesh, *,
+                        objective,
+                        client_lr: float = 1.0, local_steps: int = 1,
+                        axis: str = "data", channel=None, channel_key=None,
+                        prox_mu: float = 0.0, scaffold_state=None):
+    """One two-phase stats round (any StatsObjective) with the (K, n, ...)
+    client axis sharded over ``axis``. ``dcco_round_sharded`` is the
+    CCO-bound back-compat alias.
 
     Each shard hosts K/ndev clients; phase-1 aggregation and the phase-2
     delta average are explicit psums over ``axis`` — exactly the wire
-    collectives of Fig. 2, reusing the psum pattern of core/dcco.py. Output
-    equals the single-device ``fed_sim.dcco_round`` (weights N_k/N are
-    normalized by the psummed global sample count).
+    collectives of Fig. 2, reusing the psum pattern of core/dcco.py. The
+    psum aggregation is exact for any registered objective because the
+    protocol requires stats linear in samples (Eq. 3). Output equals the
+    single-device ``fed_sim.stats_round`` (weights N_k/N are normalized
+    by the psummed global sample count).
 
     With a ``channel`` (repro.comm) the collectives model a real wire:
     participation and the mask-renormalized weights come from
@@ -205,7 +227,7 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
 
         def client_stats(batch, mask):
             zf, zg = encoder_apply(p, batch)
-            return cco.encoding_stats_masked(zf, zg, mask)
+            return objective.stats_masked(zf, zg, mask)
 
         st_k = jax.vmap(client_stats)(batch_l, masks)
         if ctx_l is not None:
@@ -219,8 +241,8 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
         def client_update(batch, mask, corr=None):
             def loss_fn(pp):
                 zf, zg = encoder_apply(pp, batch)
-                local = cco.encoding_stats_masked(zf, zg, mask)
-                return cco.cco_loss_from_stats(cco.dcco_combine(local, agg), lam)
+                local = objective.stats_masked(zf, zg, mask)
+                return objective.loss_from_stats(objective.combine(local, agg))
 
             return fed_sim.client_local_steps(loss_fn, p, client_lr,
                                               local_steps, prox_mu=prox_mu,
@@ -281,7 +303,7 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
     avg_delta, loss, agg = outs[:3]
 
     params, opt_state = server_update.step(params, opt_state, avg_delta)
-    enc_std = jnp.sqrt(jnp.maximum(agg["sq_f"] - agg["mean_f"] ** 2, 0.0)).mean()
+    enc_std = objective.encoding_std(agg)
     wire = 0.0
     if channel is not None:
         wire = channel.round_bytes(ctx, agg) + \
@@ -297,6 +319,18 @@ def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
             loss.reshape(()), enc_std, jnp.asarray(wire, F32))
     return params, opt_state, fed_sim.RoundMetrics(loss.reshape(()), enc_std,
                                                    jnp.asarray(wire, F32))
+
+
+def dcco_round_sharded(encoder_apply: Callable, params, opt_state, server_opt,
+                       client_data, client_sizes, mesh, *, lam: float = 20.0,
+                       objective=None, **round_kw):
+    """Back-compat alias: sharded DCCO == ``stats_round_sharded`` with the
+    CCO objective (``lam``); ``objective=`` selects another registered
+    stats objective (then ``lam`` is ignored)."""
+    return stats_round_sharded(
+        encoder_apply, params, opt_state, server_opt, client_data,
+        client_sizes, mesh,
+        objective=fed_sim.resolve_objective(objective, lam), **round_kw)
 
 
 # ---------------------------------------------------------------------------
@@ -316,6 +350,15 @@ def make_round_body(encoder_apply: Callable, server_opt, cfg: EngineConfig,
     if cfg.cohort_axis is not None and cfg.algorithm != "dcco":
         raise NotImplementedError(
             "sharded cohorts are implemented for the dcco body only")
+    # the stats objective driving the dcco / fedavg_cco / centralized
+    # bodies; None -> CCO with cfg.lam (bit-identical to the pre-protocol
+    # engine). Resolution happens once, at build time.
+    objective = fed_sim.resolve_objective(cfg.objective, cfg.lam)
+    if cfg.objective is not None and cfg.algorithm in (
+            "fedavg_contrastive", "fedavg_byol"):
+        raise ValueError(
+            f"algorithm {cfg.algorithm!r} trains a non-stats loss; "
+            f"objective={objective!r} would be silently ignored")
     if cfg.algorithm == "centralized" and (cfg.scaffold or cfg.prox_mu):
         raise ValueError(
             "the centralized body has no local client training, so "
@@ -367,43 +410,44 @@ def make_round_body(encoder_apply: Callable, server_opt, cfg: EngineConfig,
                 raise ValueError("cohort_axis requires a mesh")
 
             def inner(params, opt_state, batch, sizes, key, **drift_kw):
-                return dcco_round_sharded(
+                return stats_round_sharded(
                     encoder_apply, params, opt_state, server_update, batch,
-                    sizes, mesh, lam=cfg.lam, client_lr=cfg.client_lr,
+                    sizes, mesh, objective=objective, client_lr=cfg.client_lr,
                     local_steps=cfg.local_steps, axis=cfg.cohort_axis,
                     channel=channel, channel_key=key, prox_mu=cfg.prox_mu,
                     **drift_kw)
         else:
-            agg_stats_fn = _resolve_agg_stats_fn(cfg)
+            agg_stats_fn = _resolve_agg_stats_fn(cfg, objective)
 
             def inner(params, opt_state, batch, sizes, key, **drift_kw):
-                return fed_sim.dcco_round(
+                return fed_sim.stats_round(
                     encoder_apply, params, opt_state, server_update, batch,
-                    sizes, lam=cfg.lam, client_lr=cfg.client_lr,
+                    sizes, objective=objective, client_lr=cfg.client_lr,
                     local_steps=cfg.local_steps, agg_stats_fn=agg_stats_fn,
                     channel=channel, channel_key=key, prox_mu=cfg.prox_mu,
                     **drift_kw)
         round_fn = _with_drift(inner)
     elif cfg.algorithm.startswith("fedavg_"):
-        kind = {"fedavg_cco": "cco", "fedavg_contrastive": "contrastive",
+        kind = {"fedavg_cco": "stats", "fedavg_contrastive": "contrastive",
                 "fedavg_byol": "byol"}[cfg.algorithm]
 
         def inner(params, opt_state, batch, sizes, key, **drift_kw):
             return fed_sim.fedavg_round(
                 encoder_apply, params, opt_state, server_update, batch, sizes,
-                loss_kind=kind, lam=cfg.lam, temperature=cfg.temperature,
+                loss_kind=kind, objective=objective,
+                temperature=cfg.temperature,
                 client_lr=cfg.client_lr, local_steps=cfg.local_steps,
                 channel=channel, channel_key=key, prox_mu=cfg.prox_mu,
                 **drift_kw)
         round_fn = _with_drift(inner)
-    else:  # centralized: union of the cohort, one large-batch CCO step
+    else:  # centralized: union of the cohort, one large-batch stats step
         def round_fn(params, opt_state, drift, batch, sizes, key):
             n_pad = jax.tree.leaves(batch)[0].shape[1]
             union = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), batch)
             mask = fed_sim._client_masks(sizes, n_pad).reshape(-1)
             p, o, m = fed_sim.centralized_step(
                 encoder_apply, params, opt_state, server_update, union,
-                mask=mask, lam=cfg.lam)
+                mask=mask, objective=objective)
             return p, o, drift, m
 
     return round_fn

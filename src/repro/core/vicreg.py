@@ -23,29 +23,19 @@ from repro.core import cco
 
 F32 = jnp.float32
 
-VICREG_STAT_KEYS = cco.STAT_KEYS + ("cov_f", "cov_g")
+VICREG_STAT_KEYS = cco.STAT_KEYS + cco.SECOND_MOMENT_KEYS
 
 
 def vicreg_stats(zf, zg) -> Dict[str, jnp.ndarray]:
     """Seven statistics: DCCO's five + within-view second moments."""
-    st = cco.encoding_stats(zf, zg)
-    zf = zf.astype(F32)
-    zg = zg.astype(F32)
-    n = zf.shape[0]
-    st["cov_f"] = zf.T @ zf / n
-    st["cov_g"] = zg.T @ zg / n
-    return st
+    return cco.moment_stats(zf, zg, second_moments=True)
 
 
 def vicreg_stats_masked(zf, zg, mask) -> Dict[str, jnp.ndarray]:
-    st = cco.encoding_stats_masked(zf, zg, mask)
-    zf = zf.astype(F32)
-    zg = zg.astype(F32)
-    w = mask.astype(F32)
-    n = jnp.maximum(w.sum(), 1.0)
-    st["cov_f"] = (zf * w[:, None]).T @ zf / n
-    st["cov_g"] = (zg * w[:, None]).T @ zg / n
-    return st
+    """Masked variant, through the same shared accumulator as CCO's —
+    one implementation, zero copy-paste drift (bit-identity with the
+    historical per-loss formulas is asserted in tests/test_objectives.py)."""
+    return cco.moment_stats(zf, zg, mask, second_moments=True)
 
 
 def vicreg_loss_from_stats(st, *, inv_weight: float = 25.0,

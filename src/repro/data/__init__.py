@@ -1,4 +1,4 @@
 from repro.data.partition import dirichlet_partition, iid_partition  # noqa: F401
+from repro.data.pipeline import FederatedDataset  # noqa: F401
 from repro.data.synthetic import (  # noqa: F401
     synthetic_labeled_images, synthetic_labeled_tokens)
-from repro.data.pipeline import FederatedDataset  # noqa: F401

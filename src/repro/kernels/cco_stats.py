@@ -1,12 +1,22 @@
-"""Fused CCO-statistics Pallas TPU kernel.
+"""Fused encoding-statistics Pallas TPU kernel.
 
-The DCCO hot spot: per-cohort encoding statistics
+The stats-objective hot spot: per-cohort encoding statistics
     mean_f, E[f^2], mean_g, E[g^2], E[f g^T]
 over a batch of encodings (N, d). A naive implementation reads the
-encodings from HBM five times (once per statistic); this kernel computes
-all five in ONE pass: each (bn x bd) VMEM tile of zf/zg is loaded once,
-the d x d cross-moment tile goes through the MXU, and the four vector
-moments ride along on the VPU.
+encodings from HBM once per statistic; this kernel computes all of them
+in ONE pass: each (bn x bd) VMEM tile of zf/zg is loaded once, the d x d
+moment tiles go through the MXU, and the four vector moments ride along
+on the VPU.
+
+``moments`` selects the moment set (the StatsObjective protocol's
+``second_moments`` flag): ``"cross"`` emits CCO's five statistics —
+byte-for-byte the historical kernel, same pallas_call — while ``"full"``
+additionally emits the within-view second moments E[f f^T], E[g g^T]
+that the VICReg / W-MSE objectives need, by carrying two extra
+j-/i-indexed views of the same inputs so each grid cell can form the
+(i, j) tiles of all three d x d moments. The extra MXU work is measured,
+not guessed: benchmarks/run.py::stats_kernel_bench times both moment
+sets and the one-pass-vs-naive ratio is gated in CI.
 
 Grid: (d_i tiles, d_j tiles, batch tiles) — batch innermost so output
 tiles stay resident in VMEM across the accumulation (revisited-output
@@ -18,8 +28,8 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+import jax.numpy as jnp
 
 F32 = jnp.float32
 
@@ -61,17 +71,86 @@ def _stats_kernel(zf_ref, zg_ref, inv_n_ref,
         sq_g_ref[...] += jnp.sum(zg * zg, axis=0) * inv_n
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_d", "interpret"))
+def _stats_kernel_full(zf_ref, zg_ref, zfj_ref, zgi_ref, inv_n_ref,
+                       cross_ref, mean_f_ref, sq_f_ref, mean_g_ref, sq_g_ref,
+                       cov_f_ref, cov_g_ref):
+    """The "full" moment set: the five CCO statistics plus the two
+    within-view second moments. ``zfj``/``zgi`` are the same inputs under
+    the opposite (j-/i-indexed) block maps, so this cell can form the
+    (i, j) tiles of cov_f = zf_i^T zf_j and cov_g = zg_i^T zg_j alongside
+    cross = zf_i^T zg_j — still a single pass over the batch. The
+    within-view moments are symmetric, so their MXU accumulations run only
+    on the upper block triangle (j >= i; tile (j, i) is the transpose of
+    (i, j)) and the host mirrors the strict-upper blocks down afterwards —
+    the strict-lower tiles are initialized to zero and never revisited."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    kb = pl.program_id(2)
+    inv_n = inv_n_ref[0]
+
+    zf = zf_ref[...].astype(F32)          # (bn, bdi)
+    zg = zg_ref[...].astype(F32)          # (bn, bdj)
+    zfj = zfj_ref[...].astype(F32)        # (bn, bdj)
+    zgi = zgi_ref[...].astype(F32)        # (bn, bdi)
+
+    @pl.when(kb == 0)
+    def _init():
+        cross_ref[...] = jnp.zeros_like(cross_ref)
+        cov_f_ref[...] = jnp.zeros_like(cov_f_ref)
+        cov_g_ref[...] = jnp.zeros_like(cov_g_ref)
+
+    dot = functools.partial(jax.lax.dot_general,
+                            dimension_numbers=(((0,), (0,)), ((), ())),
+                            preferred_element_type=F32)
+    cross_ref[...] += dot(zf, zg) * inv_n
+
+    @pl.when(j >= i)
+    def _within_view():
+        cov_f_ref[...] += dot(zf, zfj) * inv_n
+        cov_g_ref[...] += dot(zgi, zg) * inv_n
+
+    @pl.when(j == 0)
+    def _f_stats():
+        @pl.when(kb == 0)
+        def _init_f():
+            mean_f_ref[...] = jnp.zeros_like(mean_f_ref)
+            sq_f_ref[...] = jnp.zeros_like(sq_f_ref)
+        mean_f_ref[...] += jnp.sum(zf, axis=0) * inv_n
+        sq_f_ref[...] += jnp.sum(zf * zf, axis=0) * inv_n
+
+    @pl.when(i == 0)
+    def _g_stats():
+        @pl.when(kb == 0)
+        def _init_g():
+            mean_g_ref[...] = jnp.zeros_like(mean_g_ref)
+            sq_g_ref[...] = jnp.zeros_like(sq_g_ref)
+        mean_g_ref[...] += jnp.sum(zg, axis=0) * inv_n
+        sq_g_ref[...] += jnp.sum(zg * zg, axis=0) * inv_n
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d",
+                                             "interpret", "moments"))
 def cco_stats_pallas(zf, zg, num_valid=None, *, block_n: int = 512,
-                     block_d: int = 256, interpret: bool = False):
-    """zf, zg: (N, d) -> dict of the five statistics (all f32).
+                     block_d: int = 256, interpret: bool = False,
+                     moments: str = "cross"):
+    """zf, zg: (N, d) -> dict of encoding statistics (all f32).
+
+    ``moments="cross"`` (default) emits the five CCO statistics through
+    the historical kernel — bit-identical to the pre-flag behavior.
+    ``moments="full"`` additionally emits the within-view second moments
+    ``cov_f``/``cov_g`` (the VICReg / W-MSE moment set) in the same
+    single pass.
 
     N and d are padded to block multiples internally (zero padding is exact
     for sums; the 1/N scale uses the true N). ``num_valid`` (a traced scalar)
     overrides the normalizer — used with pre-masked encodings (rows zeroed
     for padding samples) so variable-size cohorts normalize by the true
-    sample count instead of the padded N.
+    sample count instead of the padded N; for a binary mask the pre-masked
+    second moments are exact too ((m·f)(m·f) = m·f²).
     """
+    if moments not in ("cross", "full"):
+        raise ValueError(f"unknown moment set {moments!r}; "
+                         f"expected 'cross' or 'full'")
     n, d = zf.shape
     bn = min(block_n, max(n, 8))
     bd = min(block_d, d)
@@ -94,26 +173,61 @@ def cco_stats_pallas(zf, zg, num_valid=None, *, block_n: int = 512,
         jax.ShapeDtypeStruct((d_p,), F32),       # sq_g
     )
     grid = (gi, gj, gk)
-    cross, mean_f, sq_f, mean_g, sq_g = pl.pallas_call(
-        _stats_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j, kb: (kb, i)),   # zf
-            pl.BlockSpec((bn, bd), lambda i, j, kb: (kb, j)),   # zg
-            pl.BlockSpec((1,), lambda i, j, kb: (0,)),          # inv_n scalar
-        ],
-        out_specs=(
-            pl.BlockSpec((bd, bd), lambda i, j, kb: (i, j)),
-            pl.BlockSpec((bd,), lambda i, j, kb: (i,)),
-            pl.BlockSpec((bd,), lambda i, j, kb: (i,)),
-            pl.BlockSpec((bd,), lambda i, j, kb: (j,)),
-            pl.BlockSpec((bd,), lambda i, j, kb: (j,)),
-        ),
-        out_shape=out_shapes,
-        interpret=interpret,
-    )(zf, zg, inv_n)
-    return {
+    in_specs = [
+        pl.BlockSpec((bn, bd), lambda i, j, kb: (kb, i)),   # zf
+        pl.BlockSpec((bn, bd), lambda i, j, kb: (kb, j)),   # zg
+    ]
+    out_specs = (
+        pl.BlockSpec((bd, bd), lambda i, j, kb: (i, j)),
+        pl.BlockSpec((bd,), lambda i, j, kb: (i,)),
+        pl.BlockSpec((bd,), lambda i, j, kb: (i,)),
+        pl.BlockSpec((bd,), lambda i, j, kb: (j,)),
+        pl.BlockSpec((bd,), lambda i, j, kb: (j,)),
+    )
+    inv_n_spec = pl.BlockSpec((1,), lambda i, j, kb: (0,))
+    if moments == "cross":
+        cross, mean_f, sq_f, mean_g, sq_g = pl.pallas_call(
+            _stats_kernel,
+            grid=grid,
+            in_specs=in_specs + [inv_n_spec],
+            out_specs=out_specs,
+            out_shape=out_shapes,
+            interpret=interpret,
+        )(zf, zg, inv_n)
+        cov = ()
+    else:
+        # the j-/i-indexed views of the SAME arrays; no host copies, just
+        # different block maps feeding the within-view moment tiles
+        cross, mean_f, sq_f, mean_g, sq_g, cov_f, cov_g = pl.pallas_call(
+            _stats_kernel_full,
+            grid=grid,
+            in_specs=in_specs + [
+                pl.BlockSpec((bn, bd), lambda i, j, kb: (kb, j)),   # zf_j
+                pl.BlockSpec((bn, bd), lambda i, j, kb: (kb, i)),   # zg_i
+                inv_n_spec,
+            ],
+            out_specs=out_specs + (
+                pl.BlockSpec((bd, bd), lambda i, j, kb: (i, j)),
+                pl.BlockSpec((bd, bd), lambda i, j, kb: (i, j)),
+            ),
+            out_shape=out_shapes + (
+                jax.ShapeDtypeStruct((d_p, d_p), F32),   # cov_f
+                jax.ShapeDtypeStruct((d_p, d_p), F32),   # cov_g
+            ),
+            interpret=interpret,
+        )(zf, zg, zf, zg, inv_n)
+        # mirror the strict-upper block triangle into the (zeroed)
+        # strict-lower blocks; diagonal blocks were accumulated once
+        blk = jnp.arange(d_p) // bd
+        strict_upper = blk[:, None] < blk[None, :]
+        cov_f = cov_f + jnp.where(strict_upper, cov_f, 0.0).T
+        cov_g = cov_g + jnp.where(strict_upper, cov_g, 0.0).T
+        cov = (("cov_f", cov_f), ("cov_g", cov_g))
+    out = {
         "mean_f": mean_f[:d], "sq_f": sq_f[:d],
         "mean_g": mean_g[:d], "sq_g": sq_g[:d],
         "cross": cross[:d, :d],
     }
+    for k, v in cov:
+        out[k] = v[:d, :d]
+    return out

@@ -17,10 +17,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+import numpy as np
 
 F32 = jnp.float32
 NEG_INF = -1e30

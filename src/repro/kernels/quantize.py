@@ -20,8 +20,8 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+import jax.numpy as jnp
 
 F32 = jnp.float32
 

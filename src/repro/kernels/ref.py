@@ -8,21 +8,27 @@ import numpy as np
 F32 = jnp.float32
 
 
-def cco_stats_ref(zf, zg):
-    """Five encoding statistics of the CCO loss (paper Eq. 2-3).
+def cco_stats_ref(zf, zg, second_moments: bool = False):
+    """Encoding statistics of the stats-objective family (paper Eq. 2-3).
 
     zf, zg: (N, d). Returns dict of f32: mean_f/sq_f/mean_g/sq_g (d,),
-    cross (d, d)."""
+    cross (d, d); with ``second_moments`` also the within-view moments
+    cov_f/cov_g (d, d) — the oracle for ``cco_stats_pallas`` in both
+    moment sets."""
     zf = zf.astype(F32)
     zg = zg.astype(F32)
     n = zf.shape[0]
-    return {
+    st = {
         "mean_f": zf.mean(0),
         "sq_f": (zf * zf).mean(0),
         "mean_g": zg.mean(0),
         "sq_g": (zg * zg).mean(0),
         "cross": zf.T @ zg / n,
     }
+    if second_moments:
+        st["cov_f"] = zf.T @ zf / n
+        st["cov_g"] = zg.T @ zg / n
+    return st
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,

@@ -1,4 +1,5 @@
-"""Production training driver: federated DCCO pretraining of any assigned
+"""Production training driver: federated stats-objective pretraining
+(``--objective dcco|dvicreg|dwmse``, ``repro.objectives``) of any assigned
 architecture (``--arch``), runnable end-to-end on CPU with smoke configs.
 
 Three execution modes:
@@ -28,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import comm
+from repro import comm, objectives as objectives_lib
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import (DualEncoderConfig, TrainConfig, get_config,
                                 get_dual_encoder_config)
@@ -72,6 +73,16 @@ def _forbid_ignored_flags(ap, args, attrs, why: str) -> None:
 
 
 def validate_flags(ap, args) -> None:
+    if args.objective != "dcco":
+        if args.mode == "fused":
+            raise SystemExit(
+                f"--objective {args.objective} needs the objective-"
+                f"parametric round bodies; the fused pod step hardcodes "
+                f"the CCO loss — use --mode engine or protocol")
+        _forbid_ignored_flags(
+            ap, args, ["lam"],
+            f"--lam is the CCO off-diagonal weight; --objective "
+            f"{args.objective} has its own hyperparameters")
     if args.channel != "quant":
         _forbid_ignored_flags(
             ap, args, ["quant_bits"],
@@ -129,13 +140,20 @@ def make_apply(cfg, de_cfg):
     return apply
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="resnet14-cifar")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--mode", choices=["engine", "fused", "protocol"],
                     default="engine")
+    ap.add_argument("--objective", default="dcco",
+                    choices=list(objectives_lib.OBJECTIVES),
+                    help="stats objective (repro.objectives) trained by "
+                         "the two-phase protocol: 'dcco' = the paper's "
+                         "cross-correlation loss (5-stat payload, --lam); "
+                         "'dvicreg' / 'dwmse' = VICReg / whitening-MSE "
+                         "from 7 statistics (engine/protocol modes)")
     ap.add_argument("--chunk-rounds", type=int, default=0,
                     help="rounds per scan segment (engine mode; 0=eval-every)")
     ap.add_argument("--stats-kernel", choices=["off", "pallas", "interpret"],
@@ -209,9 +227,17 @@ def main():
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--resume", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
     validate_flags(ap, args)
 
+    objective = objectives_lib.get_objective(
+        args.objective, **({"lam": args.lam} if args.objective == "dcco"
+                           else {}))
     cfg = get_config(args.arch, smoke=args.smoke)
     de_cfg = DualEncoderConfig(
         proj_dims=(64, 64) if args.smoke else
@@ -280,7 +306,8 @@ def main():
     if args.mode == "engine":
         chunk = args.chunk_rounds or args.eval_every or 25
         ecfg = round_engine.EngineConfig(
-            algorithm="dcco", lam=args.lam, client_lr=args.client_lr,
+            algorithm="dcco", objective=objective, lam=args.lam,
+            client_lr=args.client_lr,
             local_steps=args.local_steps, chunk_rounds=chunk,
             stats_kernel=args.stats_kernel, channel=channel,
             server_update=opt, prox_mu=args.fedprox_mu,
@@ -311,9 +338,9 @@ def main():
         rkey = jax.random.PRNGKey(args.seed * 100003 + r)
         if args.mode == "protocol":
             batch, sizes = ds.round_batch(rkey, args.clients_per_round)
-            out = fed_sim.dcco_round(
+            out = fed_sim.stats_round(
                 apply, params, opt_state, opt, batch, sizes,
-                lam=args.lam, client_lr=args.client_lr,
+                objective=objective, client_lr=args.client_lr,
                 local_steps=args.local_steps, prox_mu=args.fedprox_mu,
                 scaffold_state=drift_state, channel=channel,
                 channel_key=jax.random.fold_in(

@@ -1,0 +1,37 @@
+# StatsObjective protocol: one sufficient-statistics abstraction powering
+# every stats-based federated loss (paper Eq. 3 generalized; Sec. 6).
+from repro.objectives.base import (  # noqa: F401
+    Stats, StatsObjective, make_shard_map_loss, per_client_loss)
+from repro.objectives.standard import (  # noqa: F401
+    CCOObjective, VicRegObjective, WMSEObjective)
+
+# CLI-facing registry. Factories take objective-specific hyperparameters
+# (CCO's lam, VICReg's weights, ...); register_objective extends it.
+_REGISTRY = {
+    "dcco": CCOObjective,
+    "dvicreg": VicRegObjective,
+    "dwmse": WMSEObjective,
+}
+
+OBJECTIVES = tuple(_REGISTRY)
+
+
+def register_objective(name: str, factory) -> None:
+    """Register a StatsObjective factory under ``name`` (CLI-visible)."""
+    global OBJECTIVES
+    _REGISTRY[name] = factory
+    OBJECTIVES = tuple(_REGISTRY)
+
+
+def get_objective(objective, **hyper) -> StatsObjective:
+    """Resolve a name (or pass through an instance) to a StatsObjective."""
+    if isinstance(objective, StatsObjective):
+        if hyper:
+            raise ValueError(
+                f"hyperparameters {sorted(hyper)} cannot be applied to an "
+                f"already-constructed objective {objective!r}")
+        return objective
+    if objective in _REGISTRY:
+        return _REGISTRY[objective](**hyper)
+    raise ValueError(f"unknown objective {objective!r}; expected one of "
+                     f"{OBJECTIVES} or a StatsObjective instance")

@@ -19,8 +19,8 @@ from __future__ import annotations
 from typing import Any, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
 
 DATA_AXES: Tuple[str, ...] = ("pod", "data")   # present subset used
 

@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import ref
 from repro.kernels.cco_stats import cco_stats_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels import ref
 
 
 class TestCcoStatsKernel:
@@ -34,6 +34,33 @@ class TestCcoStatsKernel:
         for k in expected:
             np.testing.assert_allclose(np.asarray(out[k]), np.asarray(expected[k]),
                                        rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("n,d", [(64, 128), (300, 200), (9, 64)])
+    def test_full_moment_set_matches_ref(self, n, d, rng_key):
+        """moments="full" (the VICReg/W-MSE moment set): the two
+        within-view second moments match the oracle and the five shared
+        statistics are bit-identical to the default "cross" kernel."""
+        k1, k2 = jax.random.split(rng_key)
+        zf = jax.random.normal(k1, (n, d), jnp.float32)
+        zg = jax.random.normal(k2, (n, d), jnp.float32)
+        out5 = cco_stats_pallas(zf, zg, block_n=128, block_d=128,
+                                interpret=True)
+        out7 = cco_stats_pallas(zf, zg, block_n=128, block_d=128,
+                                interpret=True, moments="full")
+        expected = ref.cco_stats_ref(zf, zg, second_moments=True)
+        assert set(out7) == set(expected)
+        for k in out5:
+            np.testing.assert_array_equal(np.asarray(out5[k]),
+                                          np.asarray(out7[k]))
+        for k in expected:
+            np.testing.assert_allclose(np.asarray(out7[k]),
+                                       np.asarray(expected[k]),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_unknown_moment_set_rejected(self, rng_key):
+        z = jax.random.normal(rng_key, (8, 8), jnp.float32)
+        with pytest.raises(ValueError):
+            cco_stats_pallas(z, z, interpret=True, moments="diag")
 
     def test_feeds_cco_loss(self, rng_key):
         """End-to-end: kernel statistics -> identical CCO loss value."""

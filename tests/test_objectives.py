@@ -1,0 +1,500 @@
+"""The StatsObjective protocol (repro.objectives): one sufficient-
+statistics abstraction behind DCCO, D-VICReg, and D-WMSE.
+
+  * registry + stat specs match what the accumulator actually emits;
+  * linearity property per registered objective — weighted average of
+    per-client stats == flattened-cohort stats (the invariant paper
+    Eq. 3, the fused kernel path, and the shard_map psum path rely on);
+  * masked stats are bit-identical to the historical per-loss formulas
+    (the copy-paste-drift satellite: one shared accumulator);
+  * per-objective gradient equivalence: fused (centralized) ==
+    per-client stop-grad == shard_map psum;
+  * the refactored round == the pre-protocol DCCO round, exactly;
+  * the variance floor: bit-invisible on healthy statistics, bounded on
+    degenerate ones, and the local_steps>=2 2-sample-client NaN is gone;
+  * every objective trains end-to-end through the scan engine with a
+    comm channel, with wire bytes reflecting its payload;
+  * validate_flags coverage for --objective.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import comm, objectives as objectives_lib, utils
+from repro.core import cco, fed_sim, round_engine, vicreg, wmse
+from repro.objectives import get_objective, make_shard_map_loss, per_client_loss
+from repro.optim import optimizers as opt_lib
+
+SET = settings(max_examples=15, deadline=None)
+
+ALL_OBJECTIVES = list(objectives_lib.OBJECTIVES)
+
+
+def _views(key, n, d):
+    k1, k2 = jax.random.split(key)
+    zf = jax.random.normal(k1, (n, d), jnp.float32)
+    return zf, zf * 0.7 + 0.3 * jax.random.normal(k2, (n, d), jnp.float32)
+
+
+class TestRegistry:
+    def test_three_objectives_registered(self):
+        assert set(ALL_OBJECTIVES) >= {"dcco", "dvicreg", "dwmse"}
+
+    @pytest.mark.parametrize("name", ALL_OBJECTIVES)
+    def test_stat_spec_matches_stats(self, name, rng_key):
+        obj = get_objective(name)
+        zf, zg = _views(rng_key, 10, 6)
+        for stats in (obj.stats(zf, zg),
+                      obj.stats_masked(zf, zg, jnp.ones((10,)))):
+            assert set(stats) == set(obj.stat_keys)
+            for k, shape in obj.stat_spec(6).items():
+                assert stats[k].shape == shape, (name, k)
+
+    def test_payload_sizes_differ_by_moment_set(self):
+        d = 8
+        b5 = comm.DenseChannel().payload_bytes(
+            get_objective("dcco").stat_template(d))
+        b7 = comm.DenseChannel().payload_bytes(
+            get_objective("dvicreg").stat_template(d))
+        assert b7 == b5 + 2 * 4 * d * d    # + cov_f, cov_g
+
+    def test_instance_passthrough_and_unknown_rejected(self):
+        obj = get_objective("dcco", lam=3.0)
+        assert get_objective(obj) is obj
+        with pytest.raises(ValueError):
+            get_objective(obj, lam=4.0)
+        with pytest.raises(ValueError):
+            get_objective("barlow")
+
+    def test_register_objective_extends_registry(self):
+        class Custom(objectives_lib.CCOObjective):
+            name = "custom_cco"
+        objectives_lib.register_objective("custom_cco", Custom)
+        try:
+            assert "custom_cco" in objectives_lib.OBJECTIVES
+            assert isinstance(get_objective("custom_cco"), Custom)
+        finally:
+            objectives_lib._REGISTRY.pop("custom_cco")
+            objectives_lib.OBJECTIVES = tuple(objectives_lib._REGISTRY)
+
+    def test_custom_stat_key_gets_correct_spec(self, rng_key):
+        """stat_spec is derived from stats() itself, so an objective with
+        its own statistic (still linear in samples) specs correctly."""
+        class ThirdMoment(objectives_lib.CCOObjective):
+            stat_keys = objectives_lib.CCOObjective.stat_keys + ("m3_f",)
+
+            def stats(self, zf, zg):
+                st = super().stats(zf, zg)
+                st["m3_f"] = (zf.astype(jnp.float32) ** 3).mean(0)
+                return st
+
+        obj = ThirdMoment()
+        assert obj.stat_spec(6)["m3_f"] == (6,)
+        assert obj.stat_template(6)["m3_f"].shape == (6,)
+
+    def test_resolve_objective_honors_lam_for_dcco_name(self):
+        """objective="dcco" (the name) must not silently drop lam."""
+        assert fed_sim.resolve_objective("dcco", 5.0).lam == 5.0
+        assert fed_sim.resolve_objective(None, 5.0).lam == 5.0
+        cfg = round_engine.EngineConfig(algorithm="dcco", objective="dcco",
+                                        lam=5.0)
+        body = round_engine.make_round_body(
+            lambda p, b: (b["v1"], b["v2"]), opt_lib.sgd(0.1), cfg)
+        assert body is not None    # builds by name; lam resolution above
+
+
+class TestLinearity:
+    """Satellite: the property every registered objective must satisfy for
+    Eq. 3 / the kernel path / the psum path to be exact."""
+
+    @SET
+    @given(clients=st.integers(2, 5), n_per=st.integers(1, 4),
+           d=st.integers(2, 10), seed=st.integers(0, 2**16))
+    def test_weighted_client_stats_equal_cohort_stats(self, clients, n_per,
+                                                      d, seed):
+        zf, zg = _views(jax.random.PRNGKey(seed), clients * n_per, d)
+        for name in ALL_OBJECTIVES:
+            obj = get_objective(name)
+            st_global = obj.stats(zf, zg)
+            st_k = jax.vmap(obj.stats)(zf.reshape(clients, n_per, d),
+                                       zg.reshape(clients, n_per, d))
+            agg = cco.weighted_average_stats(
+                st_k, jnp.full((clients,), n_per, jnp.float32))
+            for k in obj.stat_keys:
+                np.testing.assert_allclose(
+                    np.asarray(agg[k]), np.asarray(st_global[k]),
+                    rtol=2e-5, atol=2e-6, err_msg=f"{name}/{k}")
+
+    @SET
+    @given(seed=st.integers(0, 2**16))
+    def test_masked_variable_sizes(self, seed):
+        """Same property under padding masks (unequal client sizes)."""
+        clients, n_pad, d = 4, 5, 6
+        key = jax.random.PRNGKey(seed)
+        zf, zg = _views(key, clients * n_pad, d)
+        sizes = jax.random.randint(jax.random.fold_in(key, 1),
+                                   (clients,), 1, n_pad + 1)
+        mask = (jnp.arange(n_pad)[None, :] < sizes[:, None]).astype(jnp.float32)
+        for name in ALL_OBJECTIVES:
+            obj = get_objective(name)
+            st_k = jax.vmap(obj.stats_masked)(
+                zf.reshape(clients, n_pad, d), zg.reshape(clients, n_pad, d),
+                mask)
+            agg = cco.weighted_average_stats(st_k, sizes.astype(jnp.float32))
+            st_global = obj.stats_masked(zf, zg, mask.reshape(-1))
+            for k in obj.stat_keys:
+                np.testing.assert_allclose(
+                    np.asarray(agg[k]), np.asarray(st_global[k]),
+                    rtol=2e-5, atol=2e-6, err_msg=f"{name}/{k}")
+
+
+class TestSharedAccumulator:
+    """Satellite: cco/vicreg masked stats route through ONE accumulator and
+    are bit-identical to the historical per-loss formulas."""
+
+    def _legacy_cco_masked(self, zf, zg, mask):
+        zf = zf.astype(jnp.float32)
+        zg = zg.astype(jnp.float32)
+        w = mask.astype(jnp.float32)
+        n = jnp.maximum(w.sum(), 1.0)
+        zf_m = zf * w[:, None]
+        zg_m = zg * w[:, None]
+        return {
+            "mean_f": zf_m.sum(0) / n,
+            "sq_f": (zf_m * zf).sum(0) / n,
+            "mean_g": zg_m.sum(0) / n,
+            "sq_g": (zg_m * zg).sum(0) / n,
+            "cross": zf_m.T @ zg / n,
+        }
+
+    def test_masked_stats_bit_identical_to_legacy(self, rng_key):
+        zf, zg = _views(rng_key, 12, 6)
+        mask = (jnp.arange(12) < 9).astype(jnp.float32)
+        legacy = self._legacy_cco_masked(zf, zg, mask)
+        new = cco.encoding_stats_masked(zf, zg, mask)
+        vr = vicreg.vicreg_stats_masked(zf, zg, mask)
+        wm = wmse.wmse_stats_masked(zf, zg, mask)
+        for k in cco.STAT_KEYS:
+            assert (new[k] == legacy[k]).all(), k
+            assert (vr[k] == legacy[k]).all(), k    # no copy-paste drift
+            assert (wm[k] == legacy[k]).all(), k
+        # the legacy vicreg cov formula, verbatim
+        w = mask.astype(jnp.float32)
+        n = jnp.maximum(w.sum(), 1.0)
+        assert ((zf * w[:, None]).T @ zf / n == vr["cov_f"]).all()
+        assert ((zg * w[:, None]).T @ zg / n == vr["cov_g"]).all()
+
+    def test_unmasked_stats_bit_identical_across_objectives(self, rng_key):
+        zf, zg = _views(rng_key, 16, 5)
+        five = cco.encoding_stats(zf, zg)
+        seven = vicreg.vicreg_stats(zf, zg)
+        for k in cco.STAT_KEYS:
+            assert (five[k] == seven[k]).all(), k
+
+
+class TestGradientEquivalence:
+    """Acceptance: fused == per-client == shard_map gradients, per
+    objective (Appendix-A style, generalized)."""
+
+    @pytest.mark.parametrize("name", ALL_OBJECTIVES)
+    def test_fused_vs_per_client_vs_shard_map(self, name, rng_key):
+        obj = get_objective(name)
+        zf, zg = _views(rng_key, 12, 6)
+        g_fused = jax.grad(lambda z: obj.loss(z, zg))(zf)
+        g_pc = jax.grad(lambda z: per_client_loss(obj, z, zg, 4))(zf)
+        np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_pc),
+                                   rtol=1e-4, atol=1e-6)
+        mesh = jax.make_mesh((1,), ("data",))
+        loss_fn = make_shard_map_loss(obj, mesh)
+        np.testing.assert_allclose(float(loss_fn(zf, zg)),
+                                   float(obj.loss(zf, zg)), rtol=1e-5)
+        g_sm = jax.grad(lambda z: loss_fn(z, zg))(zf)
+        np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_sm),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_cco_objective_matches_dcco_loss_paths(self, rng_key):
+        """The generic per-client loss reproduces core/dcco.py exactly."""
+        from repro.core import dcco
+        obj = get_objective("dcco", lam=5.0)
+        zf, zg = _views(rng_key, 12, 6)
+        assert float(per_client_loss(obj, zf, zg, 4)) == pytest.approx(
+            float(dcco.dcco_loss_per_client(zf, zg, 5.0, 4)), rel=1e-6)
+
+    @pytest.mark.parametrize("name", ALL_OBJECTIVES)
+    def test_federated_round_equals_centralized(self, name, rng_key):
+        """One stats_round at client_lr=1, one local step == one
+        centralized step — the Appendix-A theorem per objective."""
+        obj = get_objective(name)
+        params = {"w": jax.random.normal(rng_key, (10, 6)) * 0.4}
+
+        def apply(p, batch):
+            return jnp.tanh(batch["v1"] @ p["w"]), jnp.tanh(batch["v2"] @ p["w"])
+
+        k1, k2 = jax.random.split(rng_key)
+        data = {"v1": jax.random.normal(k1, (5, 3, 10)),
+                "v2": jax.random.normal(k2, (5, 3, 10))}
+        sizes = jnp.full((5,), 3, jnp.int32)
+        opt = opt_lib.sgd(0.1)
+        p_fed, _, _ = fed_sim.stats_round(
+            apply, params, opt.init(params), opt, data, sizes, objective=obj)
+        union = jax.tree.map(lambda x: x.reshape(15, 10), data)
+        p_cent, _, _ = fed_sim.centralized_step(
+            apply, params, opt.init(params), opt, union, objective=obj)
+        assert utils.tree_max_abs_diff(p_fed, p_cent) < 1e-5
+
+
+class TestBackCompatBitIdentity:
+    """Acceptance: the pre-protocol DCCO path is exactly preserved."""
+
+    def _toy(self, rng_key):
+        params = {"w": jax.random.normal(rng_key, (10, 6)) * 0.4}
+
+        def apply(p, batch):
+            return jnp.tanh(batch["v1"] @ p["w"]), jnp.tanh(batch["v2"] @ p["w"])
+
+        k1, k2 = jax.random.split(rng_key)
+        data = {"v1": jax.random.normal(k1, (6, 3, 10)),
+                "v2": jax.random.normal(k2, (6, 3, 10))}
+        sizes = jnp.array([3, 1, 2, 3, 2, 3], jnp.int32)
+        return params, apply, data, sizes
+
+    def _legacy_dcco_round(self, apply, params, opt, data, sizes, lam):
+        """The pre-StatsObjective dcco_round body, written out longhand
+        with the pre-floor correlation formula — the == oracle."""
+        def legacy_corr(stats, eps=1e-8):
+            var_f = stats["sq_f"] - stats["mean_f"] ** 2
+            var_g = stats["sq_g"] - stats["mean_g"] ** 2
+            cov = stats["cross"] - jnp.outer(stats["mean_f"], stats["mean_g"])
+            denom = jnp.sqrt(jnp.maximum(var_f, 0.0) + eps)[:, None] * \
+                jnp.sqrt(jnp.maximum(var_g, 0.0) + eps)[None, :]
+            return cov / denom
+
+        def legacy_loss(stats, lam):
+            c = legacy_corr(stats)
+            d = c.shape[0]
+            diag = jnp.diagonal(c)
+            on = jnp.sum((1.0 - diag) ** 2)
+            off = (jnp.sum(c * c) - jnp.sum(diag * diag)) / (d - 1)
+            return on + lam * off
+
+        n_pad = data["v1"].shape[1]
+        masks = (jnp.arange(n_pad)[None] < sizes[:, None]).astype(jnp.float32)
+
+        def client_stats(batch, mask):
+            zf, zg = apply(params, batch)
+            return cco.encoding_stats_masked(zf, zg, mask)
+
+        st_k = jax.vmap(client_stats)(data, masks)
+        agg = cco.weighted_average_stats(st_k, sizes.astype(jnp.float32))
+
+        def client_update(batch, mask):
+            def loss_fn(p):
+                zf, zg = apply(p, batch)
+                local = cco.encoding_stats_masked(zf, zg, mask)
+                return legacy_loss(cco.dcco_combine(local, agg), lam)
+            loss, g = jax.value_and_grad(loss_fn)(params)
+            return jax.tree.map(lambda x: -1.0 * x, g), loss
+
+        deltas, losses_k = jax.vmap(client_update)(data, masks)
+        w = sizes.astype(jnp.float32) / jnp.sum(sizes.astype(jnp.float32))
+        avg_delta = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+        from repro.server import update as server_update_lib
+        server_update = server_update_lib.as_server_update(opt)
+        p2, _ = server_update.step(params, opt.init(params), avg_delta)
+        return p2, jnp.sum(w * losses_k)
+
+    def test_stats_round_equals_legacy_round_exactly(self, rng_key):
+        params, apply, data, sizes = self._toy(rng_key)
+        opt = opt_lib.adam(1e-2)
+        p_new, _, m = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                         data, sizes, lam=5.0)
+        p_old, loss_old = self._legacy_dcco_round(apply, params, opt, data,
+                                                  sizes, 5.0)
+        assert utils.tree_max_abs_diff(p_new, p_old) == 0.0
+        assert float(m.loss) == float(loss_old)
+
+    def test_engine_default_objective_is_explicit_cco(self, rng_key):
+        params, apply, data, sizes = self._toy(rng_key)
+
+        def sampler(k_sel, k_aug):
+            return data, sizes
+
+        opt = opt_lib.adam(1e-2)
+        outs = []
+        for objective in (None, get_objective("dcco", lam=5.0)):
+            cfg = round_engine.EngineConfig(algorithm="dcco", lam=5.0,
+                                            chunk_rounds=3,
+                                            objective=objective)
+            eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+            outs.append(eng.run(params, opt.init(params),
+                                jax.random.PRNGKey(3), 3))
+        assert utils.tree_max_abs_diff(outs[0][0], outs[1][0]) == 0.0
+        np.testing.assert_array_equal(np.asarray(outs[0][2].loss),
+                                      np.asarray(outs[1][2].loss))
+
+
+class TestVarianceFloor:
+    """Satellite: the PR-3 NaN edge — degenerate combined variance on
+    2-sample clients with local_steps >= 2."""
+
+    def test_floor_bit_invisible_on_healthy_stats(self, rng_key):
+        zf, zg = _views(rng_key, 64, 8)
+        stats = cco.encoding_stats(zf, zg)
+        c_new = cco.correlation_matrix(stats)
+        # pre-floor formula, verbatim
+        var_f = stats["sq_f"] - stats["mean_f"] ** 2
+        var_g = stats["sq_g"] - stats["mean_g"] ** 2
+        cov = stats["cross"] - jnp.outer(stats["mean_f"], stats["mean_g"])
+        denom = jnp.sqrt(jnp.maximum(var_f, 0.0) + 1e-8)[:, None] * \
+            jnp.sqrt(jnp.maximum(var_g, 0.0) + 1e-8)[None, :]
+        assert (c_new == cov / denom).all()
+
+    def test_degenerate_variance_bounded(self):
+        """A catastrophically-cancelled stats dict (negative variance,
+        non-cancelled covariance) must yield a bounded correlation, not
+        the ~1e7 blow-up of the old absolute eps."""
+        d = 4
+        stats = {"mean_f": jnp.full((d,), 1.0),
+                 "sq_f": jnp.full((d,), 0.8),      # var = -0.2 < 0
+                 "mean_g": jnp.full((d,), 1.0),
+                 "sq_g": jnp.full((d,), 0.8),
+                 "cross": jnp.full((d, d), 0.5)}
+        c = cco.correlation_matrix(stats)
+        assert bool(jnp.isfinite(c).all())
+        # floor = 1e-6 * 1.8 -> |C| <= 0.5 / (1e-6 * 1.8) ~ 2.8e5,
+        # and far below the old ~0.5 / 1e-8 = 5e7
+        assert float(jnp.abs(c).max()) < 1e6
+        g = jax.grad(lambda s: cco.cco_loss_from_stats(s, 5.0))(stats)
+        assert bool(all(jnp.isfinite(x).all() for x in jax.tree.leaves(g)))
+
+    def test_no_nan_on_two_sample_cohort_multi_local_steps(self):
+        """Regression: a 2-sample-client cohort with multiple local GD
+        steps at client_lr=1.0 — the documented NaN edge. The unbounded
+        (linear) encoder makes the later-step local stats diverge, the
+        stop-grad combine cancels catastrophically (negative combined
+        variance, non-cancelled covariance), and with the old absolute
+        1e-8 eps the amplified gradients overflowed the client params to
+        NaN within the round (verified: this exact configuration was
+        non-finite pre-floor). With the relative floor the round stays
+        finite."""
+        key = jax.random.PRNGKey(0)
+        params = {"w": jax.random.normal(key, (10, 8)) * 0.5}
+
+        def apply(p, batch):
+            return batch["v1"] @ p["w"], batch["v2"] @ p["w"]
+
+        k1, k2 = jax.random.split(key)
+        base = jax.random.normal(k1, (8, 2, 10))
+        data = {"v1": base,
+                "v2": base + 0.05 * jax.random.normal(k2, (8, 2, 10))}
+        sizes = jnp.full((8,), 2, jnp.int32)
+        opt = opt_lib.sgd(1.0)
+        p, _, m = fed_sim.dcco_round(apply, params, opt.init(params), opt,
+                                     data, sizes, lam=20.0, client_lr=1.0,
+                                     local_steps=4)
+        assert bool(jnp.isfinite(m.loss))
+        assert bool(all(jnp.isfinite(x).all() for x in jax.tree.leaves(p)))
+
+
+class TestEngineEndToEnd:
+    """Acceptance: every objective trains through the scan engine with a
+    comm channel; wire bytes reflect the objective's payload."""
+
+    def _toy(self):
+        key = jax.random.PRNGKey(0)
+        params = {"w1": jax.random.normal(key, (10, 16)) * 0.3,
+                  "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+        def apply(p, batch):
+            def enc(x):
+                return jnp.tanh(x @ p["w1"]) @ p["w2"]
+            return enc(batch["v1"]), enc(batch["v2"])
+
+        pool = {"v1": jax.random.normal(jax.random.PRNGKey(1), (20, 3, 10)),
+                "v2": jax.random.normal(jax.random.PRNGKey(2), (20, 3, 10))}
+
+        def sampler(k_sel, k_aug):
+            sel = jax.random.choice(k_sel, 20, (6,), replace=False)
+            return (jax.tree.map(lambda x: x[sel], pool),
+                    jnp.full((6,), 3, jnp.int32))
+
+        return params, apply, sampler
+
+    @pytest.mark.parametrize("name", ALL_OBJECTIVES)
+    def test_trains_with_quant_channel(self, name):
+        params, apply, sampler = self._toy()
+        obj = get_objective(name)
+        opt = opt_lib.adam(1e-2)
+        cfg = round_engine.EngineConfig(
+            algorithm="dcco", objective=obj, chunk_rounds=3,
+            channel=comm.QuantizedChannel(8))
+        eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+        p, s, m = eng.run(params, opt.init(params), jax.random.PRNGKey(3), 3)
+        assert bool(jnp.isfinite(m.loss).all())
+        assert utils.tree_max_abs_diff(p, params) > 0.0
+        # per-round uplink: stats payload + delta payload, quantized
+        ch = comm.QuantizedChannel(8)
+        expect = 6 * (ch.payload_bytes(obj.stat_template(6))
+                      + ch.payload_bytes(params))
+        np.testing.assert_allclose(np.asarray(m.wire_bytes),
+                                   expect, rtol=1e-6)
+
+    def test_seven_stat_payload_costs_more_wire(self):
+        params, apply, sampler = self._toy()
+        wires = {}
+        for name in ("dcco", "dvicreg"):
+            opt = opt_lib.adam(1e-2)
+            cfg = round_engine.EngineConfig(
+                algorithm="dcco", objective=get_objective(name),
+                chunk_rounds=2, channel=comm.DenseChannel())
+            eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+            _, _, m = eng.run(params, opt.init(params),
+                              jax.random.PRNGKey(3), 2)
+            wires[name] = float(m.wire_bytes[0])
+        # + 2 f32 (d, d) within-view moments x 6 clients
+        assert wires["dvicreg"] == wires["dcco"] + 2 * 4 * 6 * 6 * 6
+
+    @pytest.mark.parametrize("name", ["dvicreg", "dwmse"])
+    def test_stats_kernel_full_moments_matches_jnp(self, name):
+        params, apply, sampler = self._toy()
+        obj = get_objective(name)
+        outs = {}
+        for kernel in ("off", "interpret"):
+            opt = opt_lib.adam(1e-2)
+            cfg = round_engine.EngineConfig(
+                algorithm="dcco", objective=obj, chunk_rounds=3,
+                stats_kernel=kernel)
+            eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+            outs[kernel] = eng.run(params, opt.init(params),
+                                   jax.random.PRNGKey(3), 3)
+        assert utils.tree_max_abs_diff(outs["off"][0],
+                                       outs["interpret"][0]) < 1e-5
+
+
+class TestValidateFlags:
+    def _args(self, argv):
+        from repro.launch import train as train_mod
+        ap = train_mod.build_parser()
+        return train_mod, ap, ap.parse_args(argv)
+
+    def test_objective_accepted_in_engine_mode(self):
+        train_mod, ap, args = self._args(["--objective", "dvicreg"])
+        train_mod.validate_flags(ap, args)     # no exit
+
+    def test_objective_rejected_in_fused_mode(self):
+        train_mod, ap, args = self._args(
+            ["--objective", "dvicreg", "--mode", "fused"])
+        with pytest.raises(SystemExit, match="fused"):
+            train_mod.validate_flags(ap, args)
+
+    def test_lam_rejected_for_non_cco_objective(self):
+        train_mod, ap, args = self._args(
+            ["--objective", "dwmse", "--lam", "7.5"])
+        with pytest.raises(SystemExit, match="lam"):
+            train_mod.validate_flags(ap, args)
+
+    def test_default_objective_keeps_lam(self):
+        train_mod, ap, args = self._args(["--lam", "7.5"])
+        train_mod.validate_flags(ap, args)     # no exit

@@ -301,6 +301,22 @@ cfg4 = round_engine.EngineConfig(algorithm="dcco", lam=5.0, chunk_rounds=3,
 eng4 = round_engine.RoundEngine(apply, opt, sampler, cfg4)
 pe4, se4, me4 = eng4.run(params, opt.init(params), jax.random.PRNGKey(3), 6)
 assert utils.tree_max_abs_diff(pe3, pe4) < 1e-5
+
+# objective-parametric sharded round: D-VICReg through the 2-device psum
+# body == the single-device stats_round (the 7-stat dict psums per key),
+# and its channel-routed wire costs more bytes than DCCO's 5-stat dict
+from repro.objectives import get_objective
+obj = get_objective("dvicreg")
+pv1, sv1, mv1 = fed_sim.stats_round(apply, params, opt.init(params), opt,
+                                    data, sizes, objective=obj)
+pv2, sv2, mv2 = round_engine.stats_round_sharded(
+    apply, params, opt.init(params), opt, data, sizes, mesh, objective=obj)
+assert utils.tree_max_abs_diff(pv1, pv2) < 1e-6
+assert abs(float(mv1.loss) - float(mv2.loss)) < 1e-5
+pv3, sv3, mv3 = round_engine.stats_round_sharded(
+    apply, params, opt.init(params), opt, data, sizes, mesh, objective=obj,
+    channel=comm.DenseChannel(), channel_key=ck)
+assert float(mv3.wire_bytes) > float(md.wire_bytes)
 print("SHARDED_OK")
 """
 

@@ -3,9 +3,9 @@ import os
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro import utils
 from repro.checkpoint import restore_checkpoint, save_checkpoint

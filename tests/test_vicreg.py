@@ -5,9 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
+from repro import utils
 from repro.core import cco, vicreg
 from repro.optim import optimizers as opt_lib
-from repro import utils
 
 SET = settings(max_examples=20, deadline=None)
 
