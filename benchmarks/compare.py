@@ -1,6 +1,6 @@
 """Bench-regression gate: compare a fresh BENCH.json against the checked-in
-baseline (benchmarks/baseline.json) and fail on round_engine or
-stats-kernel regressions.
+baseline (benchmarks/baseline.json) and fail on round_engine, stats-kernel,
+or streaming-engine regressions.
 
 Usage:
     python benchmarks/compare.py BENCH.json benchmarks/baseline.json \
@@ -8,22 +8,31 @@ Usage:
 
 Gate semantics — machine-portable on purpose: CI runners (and laptops)
 differ wildly in absolute speed, so gating raw microseconds against a
-baseline recorded on a different machine is pure noise. The engine's
-headline metric is the *speedup ratio* of the scan-compiled engine over the
-Python round loop (``round_engine/python_loop`` us / ``round_engine/
-scan_engine`` us): both sides are measured in the same process on the same
-machine, so the ratio cancels machine speed and isolates what this repo
-controls (dispatch removal, scan compilation, unroll policy). The gate
-fails when that ratio drops more than ``--max-regress`` (default 30%)
-below the baseline's ratio.
+baseline recorded on a different machine is pure noise. Every gate is a
+*ratio of two timings from the same process on the same machine*, which
+cancels machine speed and isolates what this repo controls:
 
-The generalized stats kernel is gated the same way: the ratio of the
-naive per-statistic passes (``stats_kernel/naive_passes``: 7 separately
-jitted reductions) over the fused one-pass computation
-(``stats_kernel/one_pass``: all 7 statistics from one read — what the
-Pallas kernel fuses) must not drop more than ``--max-regress`` below the
-baseline's ratio, so a change that silently de-fuses the moment
-computation fails CI rather than just reading "covered".
+  * engine speedup — the scan-compiled engine over the Python round loop
+    (``round_engine/python_loop`` us / ``round_engine/scan_engine`` us):
+    dispatch removal, scan compilation, unroll policy. Fails when the
+    ratio drops more than ``--max-regress`` below the baseline's.
+  * stats-kernel fusion — the naive per-statistic passes
+    (``stats_kernel/naive_passes``) over the fused one-pass computation
+    (``stats_kernel/one_pass``): a change that silently de-fuses the
+    moment computation fails CI rather than just reading "covered".
+  * streaming overhead — the streamed round (``population_scale/
+    streaming_c{N}``) over the materialized round (``population_scale/
+    materialized_c{N}``) at the largest cohort N both paths ran: the
+    O(chunk)-memory inner scan is allowed its bounded time overhead, but
+    a change that makes streaming pathologically slower than the
+    materialized path (ratio grows more than ``--max-regress`` over the
+    baseline's) fails.
+
+A gated ratio whose rows are missing from either file fails with the
+missing row NAMED and the command that produces it — never a raw
+KeyError traceback. (The stats-kernel gate alone stays optional-by-design
+for partial local runs: absent rows skip it with a notice; CI always
+produces them.)
 
 Raw per-row timings for every name present in both files are printed as an
 informational table (with the new/baseline ratio) so absolute drifts stay
@@ -33,6 +42,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 
 
@@ -40,15 +50,23 @@ def _rows_by_name(blob: dict) -> dict:
     return {r["name"]: r for r in blob["rows"]}
 
 
-def engine_speedup(rows: dict) -> float:
+def _us(rows: dict, name: str, which: str, bench: str) -> float:
+    """A gated row's timing, or a named-key SystemExit — the gate must
+    say WHICH row is missing from WHICH file and how to regenerate it."""
     try:
-        loop = float(rows["round_engine/python_loop"]["us_per_call"])
-        scan = float(rows["round_engine/scan_engine"]["us_per_call"])
-    except KeyError as e:
-        raise SystemExit(f"missing round_engine row {e} — run "
-                         f"`python benchmarks/run.py round_engine` first")
+        return float(rows[name]["us_per_call"])
+    except KeyError:
+        raise SystemExit(
+            f"gated benchmark row '{name}' is missing from {which} — "
+            f"run `python benchmarks/run.py {bench}` to produce it "
+            f"(BENCH_SMOKE=1 for the CI-sized sweep)")
+
+
+def engine_speedup(rows: dict, which: str) -> float:
+    loop = _us(rows, "round_engine/python_loop", which, "round_engine")
+    scan = _us(rows, "round_engine/scan_engine", which, "round_engine")
     if scan <= 0:
-        raise SystemExit(f"bad scan_engine timing {scan}")
+        raise SystemExit(f"bad scan_engine timing {scan} in {which}")
     return loop / scan
 
 
@@ -65,13 +83,40 @@ def kernel_one_pass_ratio(rows: dict):
     return naive / one
 
 
+def streaming_overhead(rows: dict, which: str) -> float:
+    """streaming/materialized round-time ratio at the largest cohort both
+    paths ran (population_scale emits materialized rows only up to its
+    memory cap, so the shared cohort is discovered, not hardcoded)."""
+    mat = {int(m.group(1)) for name in rows
+           if (m := re.fullmatch(r"population_scale/materialized_c(\d+)",
+                                 name))}
+    stream = {int(m.group(1)) for name in rows
+              if (m := re.fullmatch(r"population_scale/streaming_c(\d+)",
+                                    name))}
+    shared = mat & stream
+    if not shared:
+        raise SystemExit(
+            f"gated benchmark rows 'population_scale/materialized_c<N>' + "
+            f"'population_scale/streaming_c<N>' (same N) are missing from "
+            f"{which} — run `python benchmarks/run.py population_scale` "
+            f"to produce them (BENCH_SMOKE=1 for the CI-sized sweep)")
+    n = max(shared)
+    mat_us = _us(rows, f"population_scale/materialized_c{n}", which,
+                 "population_scale")
+    stream_us = _us(rows, f"population_scale/streaming_c{n}", which,
+                    "population_scale")
+    if mat_us <= 0:
+        raise SystemExit(f"bad materialized_c{n} timing {mat_us} in {which}")
+    return stream_us / mat_us
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("new", help="fresh BENCH.json")
     ap.add_argument("baseline", help="checked-in baseline JSON")
     ap.add_argument("--max-regress", type=float, default=0.30,
-                    help="maximum tolerated fractional drop of the "
-                         "round_engine speedup ratio (default 0.30)")
+                    help="maximum tolerated fractional regression of each "
+                         "gated ratio (default 0.30)")
     args = ap.parse_args(argv)
 
     with open(args.new) as f:
@@ -88,7 +133,8 @@ def main(argv=None) -> int:
             print(f"{n:44s} {b:12.1f} {w:12.1f} {ratio}")
 
     failed = False
-    sp_new, sp_base = engine_speedup(new), engine_speedup(base)
+    sp_new = engine_speedup(new, "the new BENCH.json")
+    sp_base = engine_speedup(base, "the baseline")
     floor = sp_base * (1.0 - args.max_regress)
     print(f"\nround_engine speedup: baseline {sp_base:.2f}x, "
           f"new {sp_new:.2f}x, floor {floor:.2f}x "
@@ -111,6 +157,16 @@ def main(argv=None) -> int:
             print("FAIL: fused one-pass stats computation regressed past "
                   "the gate")
             failed = True
+
+    so_new = streaming_overhead(new, "the new BENCH.json")
+    so_base = streaming_overhead(base, "the baseline")
+    ceil = so_base * (1.0 + args.max_regress)
+    print(f"streaming-vs-materialized round time: baseline {so_base:.2f}x, "
+          f"new {so_new:.2f}x, ceiling {ceil:.2f}x")
+    if so_new > ceil:
+        print("FAIL: the streaming engine's time overhead over the "
+              "materialized path regressed past the gate")
+        failed = True
 
     if failed:
         print("If this is a runner-environment shift rather than a code "

@@ -18,6 +18,9 @@ microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
   objective_sweep — the StatsObjective protocol per registered objective
                     (dcco / dvicreg / dwmse): stats payload bytes, kernel
                     time for the objective's moment set, probe accuracy.
+  population_scale— cohort size as a memory-free knob (repro.hierarchy):
+                    round time + compiled peak memory, materialized vs
+                    streamed (cohort_chunk), cohort 64 -> 4096 clients.
   server_opt_sweep— non-IID severity (label-sharded vs IID) x server
                     update strategy (fedavg_sgd / fedavgm / fedadam /
                     fedyogi / fedadam+scaffold), probe accuracy per cell
@@ -26,8 +29,8 @@ microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
 
 Set ``BENCH_SMOKE=1`` to shrink the timed sweeps to CI-smoke sizes (the
 bench-regression gate in CI runs ``round_engine`` + ``comm_sweep`` +
-``objective_sweep`` + ``stats_kernel`` this way and compares against
-benchmarks/baseline.json via compare.py).
+``objective_sweep`` + ``stats_kernel`` + ``population_scale`` this way
+and compares against benchmarks/baseline.json via compare.py).
 
 All model-scale numbers are CPU-host timings of reduced configs — relative
 comparisons only; absolute TPU numbers come from the §Roofline analysis.
@@ -430,6 +433,93 @@ def server_opt_sweep(rounds=25, cpr=16):
                  f"loss={float(m.loss[-1]):.3f}")
 
 
+def population_scale(rounds=3, cohorts=(64, 256, 1024, 4096), chunk=64,
+                     materialize_max=256):
+    """Cohort size as a memory-free knob: round time and compiled peak
+    memory, materialized vs streamed (EngineConfig.cohort_chunk), as the
+    cohort grows 64 -> 4096 clients/round — the cross-device population
+    regime (thousands of devices, 2 samples each).
+
+    Same dispatch-bound tiny-encoder setup as ``round_engine_bench``.
+    Memory is read from XLA's compiled-program analysis of the engine's
+    scan segment (argument + temp bytes — machine-independent, it is the
+    compiler's own allocation plan): the materialized path grows O(cohort)
+    while the streamed path stays O(chunk). Rows at the largest cohort
+    both paths run feed the CI gate in compare.py: the streamed round's
+    time overhead over the materialized round (same process, same host,
+    so the ratio is machine-portable) must not regress.
+    """
+    from repro.core import round_engine
+    max_cohort = max(cohorts)
+    imgs, labels = synthetic.synthetic_labeled_images(
+        2 * max_cohort, 5, image_size=16, noise=0.5, seed=0)
+    ds = pipeline.FederatedDataset.build(
+        {"images": imgs}, labels, num_clients=max_cohort,
+        samples_per_client=2, alpha=0.0, seed=0)
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (16 * 16 * 3, 128)) * 0.05,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (128, 64)) * 0.1}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x.reshape(x.shape[0], -1) @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    def compiled_bytes(eng, carry):
+        """XLA's own allocation plan for one scan segment (bytes). The
+        AOT-lowering surface is version-sensitive; a failure degrades the
+        row to compiled_MB=0.0 but says so on stderr rather than letting
+        the memory evidence vanish silently."""
+        try:
+            mem = eng._segment_fn(eng.config.chunk_rounds).lower(
+                carry, jnp.asarray(0, jnp.int32)).compile().memory_analysis()
+            return sum(int(getattr(mem, f, 0) or 0) for f in
+                       ("argument_size_in_bytes", "temp_size_in_bytes",
+                        "output_size_in_bytes"))
+        except Exception as e:  # pragma: no cover - jax-version drift
+            print(f"population_scale: compiled memory analysis "
+                  f"unavailable ({type(e).__name__}: {e}); emitting "
+                  f"compiled_MB=0.0", file=sys.stderr)
+            return 0
+
+    def run_engine(cohort, cohort_chunk):
+        opt = opt_lib.adam(1e-3)
+        if cohort_chunk:
+            sampler = ds.make_streaming_sampler(cohort, cohort_chunk)
+        else:
+            sampler = ds.make_round_sampler(cohort)
+        ecfg = round_engine.EngineConfig(algorithm="dcco", lam=5.0,
+                                         chunk_rounds=rounds,
+                                         cohort_chunk=cohort_chunk)
+        eng = round_engine.RoundEngine(apply, opt, sampler, ecfg)
+        carry = round_engine.EngineCarry(params, opt.init(params),
+                                         jax.random.PRNGKey(7))
+        mem = compiled_bytes(eng, carry)
+        out = eng.run(params, opt.init(params), jax.random.PRNGKey(7), rounds)
+        jax.block_until_ready(out[2].loss)            # warmup/compile
+        t0 = time.perf_counter()
+        p, s, m = eng.run(params, opt.init(params), jax.random.PRNGKey(7),
+                          rounds)
+        jax.block_until_ready(m.loss)
+        us = (time.perf_counter() - t0) / rounds * 1e6
+        return us, mem, float(m.loss[-1])
+
+    last_mat = None
+    for cohort in cohorts:
+        if cohort <= materialize_max:
+            us_m, mem_m, _ = run_engine(cohort, 0)
+            emit(f"population_scale/materialized_c{cohort}", us_m,
+                 f"cohort={cohort};compiled_MB={mem_m / 1e6:.1f}")
+            last_mat = (cohort, us_m)
+        us_s, mem_s, loss = run_engine(cohort, min(chunk, cohort))
+        extra = ""
+        if last_mat is not None and last_mat[0] == cohort:
+            extra = f";stream_vs_mat={us_s / last_mat[1]:.2f}x"
+        emit(f"population_scale/streaming_c{cohort}", us_s,
+             f"cohort={cohort};chunk={min(chunk, cohort)};"
+             f"compiled_MB={mem_s / 1e6:.1f};loss={loss:.3f}{extra}")
+
+
 def fused_step_bench():
     from repro.configs.base import TrainConfig
     from repro.launch import steps as steps_lib
@@ -629,6 +719,7 @@ BENCHES = {
     "stale_stats": stale_stats_study,
     "dvicreg": dvicreg_bench,
     "objective_sweep": objective_sweep,
+    "population_scale": population_scale,
     "roofline": roofline_bench,
 }
 
@@ -643,6 +734,10 @@ SMOKE_KW = {
     "stats_kernel": {"sizes": ((512, 256),)},
     "table1": {"rounds": 8},
     "table2": {"rounds": 8},
+    # the 4096-client streaming smoke must stay: it is the acceptance
+    # check that mega-cohorts actually fit on a shared CPU runner
+    "population_scale": {"rounds": 2, "cohorts": (64, 256, 4096),
+                         "chunk": 64, "materialize_max": 256},
 }
 
 

@@ -86,6 +86,17 @@ class Channel:
     # payloads — only lossless, size-weighted, full-participation channels
     # qualify.
     supports_flat_stats = True
+    # an *ideal* channel is a lossless identity wire with size-weighted
+    # aggregation — exactly the un-channeled math. The hierarchical
+    # aggregator (repro.hierarchy) collapses a tree of ideal hops to the
+    # flat sum (bit-identical by Eq.-3 linearity). Deliberately False on
+    # the base class: a custom subclass that forgets to think about it
+    # only loses the fast path, never correctness.
+    ideal = False
+    # whether begin_round always returns an all-ones participation mask;
+    # False lets the hierarchy know it must renormalize weights over the
+    # surviving mass when this channel runs a hop.
+    full_participation = True
 
     def begin_round(self, key, client_sizes) -> ChannelContext:
         k = client_sizes.shape[0]
@@ -105,6 +116,35 @@ class Channel:
         agg = jax.tree.map(
             lambda v: jnp.tensordot(ctx.weights, v, axes=1), dec)
         return self.post_aggregate(ctx, agg, phase)
+
+    # ------------------------------------------------------ partial folds
+    def local_fold(self, ctx_local, dec_tree, phase: str, *,
+                   num_shards: int = 1):
+        """Fold one shard's already-decoded payloads into its partial
+        aggregate (the sharded-cohort path: the psum over shards of these
+        partials is the server aggregate). ``ctx_local`` holds the shard's
+        slice of the participation mask / weights plus a shard-folded key;
+        ``num_shards`` is the static mesh size, which hierarchical
+        aggregators use to place their edges on shards. The base fold is
+        exactly the weighted sum the un-hooked path computed, so existing
+        sharded trajectories are bit-identical."""
+        del phase, num_shards
+        return jax.tree.map(
+            lambda v: jnp.tensordot(ctx_local.weights, v, axes=1), dec_tree)
+
+    def chunk_fold(self, ctx: ChannelContext, tree_chunk, phase: str,
+                   chunk_index, chunk_weights):
+        """Partial aggregate of one cohort chunk (the streaming engine,
+        repro.hierarchy.streaming): encode/decode the chunk's per-client
+        payloads with chunk-folded randomness and fold them with the
+        chunk's slice of the GLOBAL aggregation weights. Summing the
+        partials over all chunks and applying ``post_aggregate`` once
+        equals ``aggregate`` on the materialized cohort up to float
+        regrouping (exactly, in math, by Eq.-3 linearity)."""
+        ctx_c = ctx._replace(key=jax.random.fold_in(ctx.key, chunk_index))
+        dec = self.encode_decode(ctx_c, tree_chunk, phase)
+        return jax.tree.map(
+            lambda v: jnp.tensordot(chunk_weights, v, axes=1), dec)
 
     # ----------------------------------------------------------- accounting
     def payload_bytes(self, tree) -> float:
@@ -126,6 +166,8 @@ class Channel:
 
 class DenseChannel(Channel):
     """Identity wire — f32 payloads, lossless, full participation."""
+
+    ideal = True
 
 
 class QuantizedChannel(Channel):
@@ -238,6 +280,7 @@ class DropoutChannel(Channel):
 
     name = "dropout"
     supports_flat_stats = False
+    full_participation = False
 
     def __init__(self, p: float = 0.1):
         if not 0.0 <= p < 1.0:

@@ -12,6 +12,16 @@ variable-size clients like DERM's 1-6 images/case are supported).
 
 ``encoder_apply(params, batch) -> (zf, zg)`` abstracts the dual encoding
 model: batch is one client's (n, ...) slice holding both views.
+
+The rounds here materialize the whole cohort on the leading K axis. Two
+scale-out companions share their exact semantics: the sharded-cohort path
+(:func:`repro.core.round_engine.stats_round_sharded`, K laid across the
+device mesh) and the streaming path
+(:func:`repro.hierarchy.streaming.streaming_stats_round`, K processed in
+O(chunk)-memory chunks) — both exact by Eq. 3 because every payload is
+linear in samples, and both reusing the comm ``channel`` contract
+(a :class:`repro.hierarchy.HierarchicalChannel` additionally fans the
+aggregation in through edge aggregators with one channel per hop).
 """
 from __future__ import annotations
 

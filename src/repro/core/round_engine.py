@@ -43,7 +43,16 @@ loop into ONE XLA program:
     and phase-2 deltas — is routed through the channel's encode/decode and
     participation-weighted aggregation INSIDE the scan body (dispatch is
     trace-time, so lossy wires cost no extra Python per round), with
-    per-round bytes-on-the-wire in ``EngineMetrics.wire_bytes``.
+    per-round bytes-on-the-wire in ``EngineMetrics.wire_bytes``;
+  * hierarchical aggregation and streaming mega-cohorts
+    (:mod:`repro.hierarchy`): a ``HierarchicalChannel`` fans the cohort in
+    through edge aggregators (clients -> edges -> server, one comm channel
+    per hop, both hops' bytes accounted — on the sharded path each device
+    folds its local edges with the ``kernels/segment_sum.py`` one-pass
+    kernel), and ``EngineConfig.cohort_chunk`` streams the cohort through
+    the round in fixed-size chunks via an inner ``lax.scan`` whose carry
+    holds only the running stat/delta sums — peak memory O(chunk) instead
+    of O(cohort), which is what makes thousands-of-clients rounds fit.
 """
 from __future__ import annotations
 
@@ -81,6 +90,12 @@ class EngineConfig(NamedTuple):
     client_lr: float = 1.0
     local_steps: int = 1
     chunk_rounds: int = 20          # rounds per jitted scan segment
+    cohort_chunk: int = 0           # >0: stream the cohort through the
+                                    # round in chunks of this many clients
+                                    # (repro.hierarchy.streaming) — peak
+                                    # memory O(cohort_chunk) instead of
+                                    # O(cohort); requires a chunkable
+                                    # sampler (make_streaming_sampler)
     scan_unroll: int = 0            # 0 = auto: 8 on CPU (XLA:CPU loses
                                     # inter-op parallelism inside while
                                     # bodies), 1 on accelerators
@@ -198,6 +213,7 @@ def stats_round_sharded(encoder_apply: Callable, params, opt_state,
     if scaffold_state is not None and channel is not None:
         fed_sim.check_variate_noise(channel)
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
+    nshards = mesh.shape[axis]
     if channel is not None:
         if channel_key is None:
             raise ValueError("channel requires channel_key")
@@ -230,11 +246,18 @@ def stats_round_sharded(encoder_apply: Callable, params, opt_state,
             return objective.stats_masked(zf, zg, mask)
 
         st_k = jax.vmap(client_stats)(batch_l, masks)
-        if ctx_l is not None:
-            st_k = channel.encode_decode(ctx_l, st_k, "stats")
-        agg = {k: jax.lax.psum(jnp.tensordot(w_l, v, axes=1), axis)
-               for k, v in st_k.items()}
-        if ctx_l is not None:
+        if ctx_l is None:
+            agg = {k: jax.lax.psum(jnp.tensordot(w_l, v, axes=1), axis)
+                   for k, v in st_k.items()}
+        else:
+            # channel.local_fold is this shard's partial aggregate of the
+            # decoded payloads (the base fold is the same tensordot as
+            # above; a hierarchical channel folds its shard-local edges
+            # here, kernels/segment_sum.py); the psum is the server hop
+            dec = channel.encode_decode(ctx_l, st_k, "stats")
+            part = channel.local_fold(ctx_l, dec, "stats",
+                                      num_shards=nshards)
+            agg = {k: jax.lax.psum(v, axis) for k, v in part.items()}
             agg = channel.post_aggregate(
                 ctx_l._replace(key=ckey), agg, "stats")
 
@@ -254,11 +277,15 @@ def stats_round_sharded(encoder_apply: Callable, params, opt_state,
             deltas, losses_k = jax.vmap(client_update)(
                 batch_l, masks, drift_lib.scaffold_corrections(state_l))
         raw_deltas = deltas
-        if ctx_l is not None:
-            deltas = channel.encode_decode(ctx_l, deltas, "update")
-        avg_delta = jax.tree.map(
-            lambda d: jax.lax.psum(jnp.tensordot(w_l, d, axes=1), axis), deltas)
-        if ctx_l is not None:
+        if ctx_l is None:
+            avg_delta = jax.tree.map(
+                lambda d: jax.lax.psum(jnp.tensordot(w_l, d, axes=1), axis),
+                deltas)
+        else:
+            dec_d = channel.encode_decode(ctx_l, deltas, "update")
+            part_d = channel.local_fold(ctx_l, dec_d, "update",
+                                        num_shards=nshards)
+            avg_delta = jax.tree.map(lambda d: jax.lax.psum(d, axis), part_d)
             avg_delta = channel.post_aggregate(
                 ctx_l._replace(key=ckey), avg_delta, "update")
         loss = jax.lax.psum(jnp.sum(w_l * losses_k), axis)
@@ -270,11 +297,16 @@ def stats_round_sharded(encoder_apply: Callable, params, opt_state,
                 state_l, raw_deltas, client_lr, local_steps)
             dc = jax.tree.map(lambda new, old: new - old,
                               ck_new, state_l.c_slots)
-            if ctx_l is not None:
-                dc = channel.encode_decode(ctx_l, dc, "variate")
-            agg_dc = jax.tree.map(
-                lambda d: jax.lax.psum(jnp.tensordot(w_l, d, axes=1), axis), dc)
-            if ctx_l is not None:
+            if ctx_l is None:
+                agg_dc = jax.tree.map(
+                    lambda d: jax.lax.psum(jnp.tensordot(w_l, d, axes=1),
+                                           axis), dc)
+            else:
+                dec_c = channel.encode_decode(ctx_l, dc, "variate")
+                part_c = channel.local_fold(ctx_l, dec_c, "variate",
+                                            num_shards=nshards)
+                agg_dc = jax.tree.map(lambda d: jax.lax.psum(d, axis),
+                                      part_c)
                 agg_dc = channel.post_aggregate(
                     ctx_l._replace(key=ckey), agg_dc, "variate")
             # ck_new leaves the shard unmasked; the dropped-slot blend and
@@ -454,6 +486,72 @@ def make_round_body(encoder_apply: Callable, server_opt, cfg: EngineConfig,
 
 
 # ---------------------------------------------------------------------------
+# streaming round body (repro.hierarchy.streaming)
+# ---------------------------------------------------------------------------
+
+def make_streaming_round_body(encoder_apply: Callable, server_opt,
+                              cfg: EngineConfig, sampler) -> Callable:
+    """Build the streaming round body: round_fn(params, opt_state, drift,
+    k_sel, k_aug, key) -> (params, opt_state, drift, metrics). Unlike the
+    materialized bodies it samples INSIDE the round, one cohort chunk at a
+    time, so the engine never holds more than ``cfg.cohort_chunk`` clients
+    of batch data — the `sampler` must be chunkable
+    (``FederatedDataset.make_streaming_sampler`` /
+    ``repro.hierarchy.StreamingSampler``)."""
+    from repro.hierarchy import streaming as streaming_lib
+
+    if cfg.algorithm != "dcco":
+        raise ValueError(
+            f"cohort_chunk streams the two-phase stats round only "
+            f"(algorithm 'dcco'), got {cfg.algorithm!r}")
+    if cfg.cohort_axis is not None:
+        raise ValueError(
+            "cohort_chunk and cohort_axis are two layouts for the same "
+            "client axis — stream it or shard it, not both")
+    if cfg.scaffold:
+        raise ValueError(
+            "SCAFFOLD keeps per-cohort-slot variates resident, which is "
+            "exactly the O(cohort) state cohort_chunk removes — disable "
+            "scaffold for streaming rounds")
+    if cfg.stats_kernel != "off":
+        raise ValueError(
+            "stats_kernel aggregates phase-1 stats from the flattened "
+            "materialized cohort; with cohort_chunk the cohort never "
+            "materializes — use the default per-chunk accumulation")
+    if not hasattr(sampler, "sample_chunk"):
+        raise ValueError(
+            "cohort_chunk needs a chunkable sampler "
+            "(FederatedDataset.make_streaming_sampler or a "
+            "repro.hierarchy.StreamingSampler), got a plain round sampler")
+    if sampler.cohort_chunk != cfg.cohort_chunk:
+        raise ValueError(
+            f"sampler chunks {sampler.cohort_chunk} clients but "
+            f"EngineConfig.cohort_chunk={cfg.cohort_chunk}")
+    num_chunks = sampler.clients_per_round // cfg.cohort_chunk
+    objective = fed_sim.resolve_objective(cfg.objective, cfg.lam)
+    # resolution to a ServerUpdate happens once, inside the round (the
+    # same single coercion point as the materialized bodies)
+    server_opt = (cfg.server_update if cfg.server_update is not None
+                  else server_opt)
+    channel = cfg.channel
+
+    def round_fn(params, opt_state, drift, k_sel, k_aug, key):
+        sizes = sampler.cohort_sizes(k_sel)
+        # per-round O(K)-scalar sampling state, hoisted out of both
+        # phase scans
+        state = sampler.prepare(k_sel, k_aug)
+        p, o, m = streaming_lib.streaming_stats_round(
+            encoder_apply, params, opt_state, server_opt,
+            lambda c: sampler.sample_chunk(state, c),
+            num_chunks, sizes, objective=objective,
+            client_lr=cfg.client_lr, local_steps=cfg.local_steps,
+            channel=channel, channel_key=key, prox_mu=cfg.prox_mu)
+        return p, o, drift, m
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
 
@@ -475,7 +573,13 @@ class RoundEngine:
         self.config = config
         self.sampler = sampler
         self.drift_state = None      # final drift carry of the last run()
-        self.round_fn = make_round_body(encoder_apply, server_opt, config, mesh)
+        self._streaming = config.cohort_chunk > 0
+        if self._streaming:
+            self.round_fn = make_streaming_round_body(
+                encoder_apply, server_opt, config, sampler)
+        else:
+            self.round_fn = make_round_body(encoder_apply, server_opt,
+                                            config, mesh)
         donate = (0,) if config.donate else ()
         self._segment = jax.jit(
             functools.partial(self._run_segment, config.chunk_rounds),
@@ -492,9 +596,15 @@ class RoundEngine:
             # so the selection/augmentation streams are unchanged vs the
             # channel-less engine — resume and regression baselines hold
             k_ch = jax.random.fold_in(rkey, _CHANNEL_SALT)
-            batch, sizes = self.sampler(k_sel, k_aug)
-            params, opt_state, drift, m = self.round_fn(
-                c.params, c.opt_state, c.drift, batch, sizes, k_ch)
+            if self._streaming:
+                # the streaming body samples inside the round, one cohort
+                # chunk at a time — the full batch never materializes here
+                params, opt_state, drift, m = self.round_fn(
+                    c.params, c.opt_state, c.drift, k_sel, k_aug, k_ch)
+            else:
+                batch, sizes = self.sampler(k_sel, k_aug)
+                params, opt_state, drift, m = self.round_fn(
+                    c.params, c.opt_state, c.drift, batch, sizes, k_ch)
             return (EngineCarry(params, opt_state, c.rng, drift),
                     EngineMetrics(m.loss, m.encoding_std,
                                   jnp.asarray(m.wire_bytes, F32)))

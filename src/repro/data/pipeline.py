@@ -50,25 +50,29 @@ class FederatedDataset:
 
     # ------------------------------------------------------------- rounds --
 
-    def _two_views(self, k_aug, gathered, k: int, n: int):
+    def _two_views_keyed(self, keys, gathered, k: int, n: int):
         """Augment gathered (K*n, ...) raw samples into stacked two-view
-        batches (K, n, ...). The single source of truth for the view
-        pipeline, shared by the host path (round_batch) and the in-scan
-        path (make_round_sampler)."""
+        batches (K, n, ...) with explicit per-sample keys (K*n, 2). The
+        single source of truth for the view pipeline, shared by the host
+        path (round_batch), the in-scan path (make_round_sampler), and the
+        chunked path (make_streaming_sampler — which slices the SAME key
+        array, so a chunk's views equal the materialized cohort's)."""
         out = {}
         if "images" in gathered:
-            keys = jax.random.split(k_aug, k * n)
             v1, v2 = jax.vmap(augment.two_views_image)(keys, gathered["images"])
             out["v1"] = v1.reshape(k, n, *v1.shape[1:])
             out["v2"] = v2.reshape(k, n, *v2.shape[1:])
         if "tokens" in gathered:
-            keys = jax.random.split(k_aug, k * n)
             v1, v2 = jax.vmap(
                 lambda kk, tt: augment.two_views_tokens(kk, tt, self.vocab)
             )(keys, gathered["tokens"])
             out["v1"] = v1.reshape(k, n, *v1.shape[1:])
             out["v2"] = v2.reshape(k, n, *v2.shape[1:])
         return out
+
+    def _two_views(self, k_aug, gathered, k: int, n: int):
+        return self._two_views_keyed(jax.random.split(k_aug, k * n),
+                                     gathered, k, n)
 
     def round_batch(self, key, clients_per_round: int):
         """Sample K clients, gather raw samples, build two augmented views.
@@ -95,6 +99,14 @@ class FederatedDataset:
 
     # ------------------------------------------------- in-scan sampling --
 
+    def _stage(self):
+        """Device-resident (data, client_index), staged once per dataset
+        and shared by every in-scan sampler."""
+        if self._staged is None:
+            self._staged = ({k: jnp.asarray(v) for k, v in self.data.items()},
+                            jnp.asarray(self.client_index))
+        return self._staged
+
     def make_round_sampler(self, clients_per_round: int):
         """A jax-traceable ``sampler(k_sel, k_aug) -> (batch, sizes)``.
 
@@ -108,10 +120,7 @@ class FederatedDataset:
         """
         if clients_per_round in self._samplers:
             return self._samplers[clients_per_round]
-        if self._staged is None:
-            self._staged = ({k: jnp.asarray(v) for k, v in self.data.items()},
-                            jnp.asarray(self.client_index))
-        data, cindex = self._staged
+        data, cindex = self._stage()
         num_clients, n = self.num_clients, self.samples_per_client
         k_round = clients_per_round
 
@@ -126,3 +135,46 @@ class FederatedDataset:
 
         self._samplers[clients_per_round] = sampler
         return sampler
+
+    def make_streaming_sampler(self, clients_per_round: int,
+                               cohort_chunk: int):
+        """A chunkable sampler for the streaming engine path
+        (``EngineConfig.cohort_chunk``): ``prepare(k_sel, k_aug)`` does the
+        O(K)-scalar per-round work ONCE (cohort selection indices + the
+        K*n per-sample augmentation keys — hoisted out of the chunk scan),
+        and ``sample_chunk(state, c)`` gathers and augments ONLY chunk
+        ``c``, so a round never materializes more than ``cohort_chunk``
+        clients of batch data. Chunks concatenate to exactly the cohort
+        ``make_round_sampler`` would emit for the same keys (same
+        selection, same per-sample augmentation keys — tested), which is
+        what makes streaming-vs-materialized equivalence checkable.
+        """
+        from repro.hierarchy.streaming import StreamingSampler
+        if cohort_chunk < 1 or clients_per_round % cohort_chunk:
+            raise ValueError(
+                f"clients_per_round={clients_per_round} does not divide "
+                f"into chunks of {cohort_chunk}")
+        data, cindex = self._stage()
+        num_clients, n = self.num_clients, self.samples_per_client
+        k_round, chunk = clients_per_round, cohort_chunk
+
+        def prepare(k_sel, k_aug):
+            sel = jax.random.choice(k_sel, num_clients, (k_round,),
+                                    replace=False)
+            return sel, jax.random.split(k_aug, k_round * n)
+
+        def sample_chunk(state, c):
+            sel, aug_keys = state
+            sel_c = jax.lax.dynamic_slice(sel, (c * chunk,), (chunk,))
+            idx = cindex[sel_c].reshape(-1)                  # (chunk*n,)
+            gathered = {kk: v[idx] for kk, v in data.items()}
+            keys = jax.lax.dynamic_slice(aug_keys, (c * chunk * n, 0),
+                                         (chunk * n, 2))
+            batch = self._two_views_keyed(keys, gathered, chunk, n)
+            return batch, jnp.full((chunk,), n, jnp.int32)
+
+        def cohort_sizes(k_sel):
+            return jnp.full((k_round,), n, jnp.int32)
+
+        return StreamingSampler(k_round, chunk, prepare, sample_chunk,
+                                cohort_sizes)

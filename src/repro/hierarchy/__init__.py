@@ -1,0 +1,11 @@
+# Hierarchical aggregation & streaming mega-cohorts: the Eq.-3 linearity
+# of every stats payload makes aggregation exact under any summation tree,
+# so the cohort can fan in through edge aggregators (per-hop comm
+# channels, per-hop wire bytes) and stream through the round in fixed-size
+# chunks with O(chunk) peak memory. See docs/architecture.md "Hierarchy &
+# streaming".
+from repro.hierarchy.aggregation import (  # noqa: F401
+    FOLD_IMPLS, HierarchicalChannel, HierarchicalContext,
+    contiguous_edge_ids, fold_to_edges)
+from repro.hierarchy.streaming import (  # noqa: F401
+    StreamingSampler, streaming_stats_round)

@@ -31,6 +31,20 @@ def cco_stats_ref(zf, zg, second_moments: bool = False):
     return st
 
 
+def segment_sum_ref(rows, seg_ids, num_segments: int, weights=None):
+    """Weighted segment sum — the oracle for ``segment_sum_pallas``.
+
+    rows: (K, d) per-client stat rows, seg_ids: (K,) int32 edge ids in
+    [0, num_segments) (ids outside the range contribute nothing — padding
+    rows use ``num_segments``), weights: optional (K,) f32. Returns
+    (num_segments, d) f32: out[e] = sum_{k: seg_ids[k]==e} w_k * rows[k].
+    """
+    rows = rows.astype(F32)
+    if weights is not None:
+        rows = rows * weights.astype(F32)[:, None]
+    return jax.ops.segment_sum(rows, seg_ids, num_segments=num_segments)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         scale: float | None = None):
     """q: (B,H,Sq,Dh), k/v: (B,KVH,Skv,Dh) -> (B,H,Sq,Dh).

@@ -1,0 +1,94 @@
+"""Fused segment-sum Pallas TPU kernel — the hierarchy's client→edge fold.
+
+Two-level aggregation (repro.hierarchy) folds K per-client stat rows into
+E per-edge aggregates: out[e] = sum_{k in edge e} w_k * rows[k]. A naive
+implementation gathers/scatter-adds per client; this kernel does the fold
+in ONE pass over the rows by turning the segment reduction into an MXU
+matmul: each (bk x bd) tile of rows is loaded once, the segment ids of the
+tile are expanded on the fly into a one-hot (E x bk) membership matrix
+(a broadcasted-iota compare — no materialized one-hot in HBM), and the
+per-edge partials accumulate as ``one_hot @ (w * rows)`` with the output
+tile resident in VMEM across the whole row axis (revisited-output
+pattern, rows innermost in the grid).
+
+This is the same fold the sharded cohort path runs per device when edges
+align with the mesh (num_edges % num_shards == 0): each shard folds its
+local clients into its local edges, and the cross-shard psum implements
+the edge→server hop.
+
+Exactness: the fold is linear in rows, so by paper Eq. 3 any segment
+grouping of the statistics is exact in math; numerically the kernel
+matches the jnp oracle (``ref.segment_sum_ref``) to float-regrouping
+tolerance (interpret-mode tested in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _segment_sum_kernel(rows_ref, ids_ref, w_ref, out_ref, *, num_seg_p: int):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    rows = rows_ref[...].astype(F32)                       # (bk, bd)
+    w = w_ref[...].astype(F32)                             # (1, bk)
+    ids = ids_ref[...]                                     # (1, bk) int32
+    # one-hot membership (num_seg_p, bk): row e marks this tile's clients
+    # of edge e. Padding rows carry id == num_seg_p, matching no edge.
+    seg = jax.lax.broadcasted_iota(jnp.int32, (num_seg_p, rows.shape[0]), 0)
+    one_hot = (seg == ids).astype(F32)
+    out_ref[...] += jax.lax.dot_general(
+        one_hot, rows * w.reshape(-1, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=F32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_k",
+                                             "block_d", "interpret"))
+def segment_sum_pallas(rows, seg_ids, num_segments: int, weights=None, *,
+                       block_k: int = 512, block_d: int = 256,
+                       interpret: bool = False):
+    """rows: (K, d), seg_ids: (K,) int32 in [0, num_segments) -> (E, d) f32.
+
+    ``weights`` (K,) optionally scales each row before the fold (the
+    hierarchy folds w_k * stats_k). K and d are padded to block multiples
+    internally; padding rows get id ``num_segments`` (matches nothing) and
+    weight 0, so they contribute exactly nothing. The per-edge output axis
+    is padded to the f32 sublane multiple and sliced back.
+    """
+    k, d = rows.shape
+    bk = min(block_k, max(k, 8))
+    bd = min(block_d, max(d, 1))
+    k_p = -(-k // bk) * bk
+    d_p = -(-d // bd) * bd
+    e_p = -(-num_segments // 8) * 8          # f32 sublane multiple
+    if weights is None:
+        weights = jnp.ones((k,), F32)
+    if k_p != k or d_p != d:
+        rows = jnp.pad(rows, ((0, k_p - k), (0, d_p - d)))
+    if k_p != k:
+        seg_ids = jnp.pad(seg_ids, (0, k_p - k),
+                          constant_values=num_segments)
+        weights = jnp.pad(weights, (0, k_p - k))
+    out = pl.pallas_call(
+        functools.partial(_segment_sum_kernel, num_seg_p=e_p),
+        grid=(d_p // bd, k_p // bk),
+        in_specs=[
+            pl.BlockSpec((bk, bd), lambda di, kb: (kb, di)),   # rows
+            pl.BlockSpec((1, bk), lambda di, kb: (0, kb)),     # ids
+            pl.BlockSpec((1, bk), lambda di, kb: (0, kb)),     # weights
+        ],
+        out_specs=pl.BlockSpec((e_p, bd), lambda di, kb: (0, di)),
+        out_shape=jax.ShapeDtypeStruct((e_p, d_p), F32),
+        interpret=interpret,
+    )(rows, seg_ids.astype(jnp.int32).reshape(1, -1),
+      weights.astype(F32).reshape(1, -1))
+    return out[:num_segments, :d]

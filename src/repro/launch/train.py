@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import comm, objectives as objectives_lib
+from repro import comm, hierarchy, objectives as objectives_lib
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import (DualEncoderConfig, TrainConfig, get_config,
                                 get_dual_encoder_config)
@@ -98,15 +98,52 @@ def validate_flags(ap, args) -> None:
             ap, args, ["dp_sigma", "dp_clip", "dp_delta"],
             f"DP flags only apply to --channel dp (got --channel "
             f"{args.channel})")
-    if args.channel != "dropout":
+    if args.channel != "dropout" and not (args.edges
+                                          and args.edge_channel == "dropout"):
         _forbid_ignored_flags(
             ap, args, ["dropout_p"],
-            f"--dropout-p only applies to --channel dropout (got "
-            f"--channel {args.channel})")
+            f"--dropout-p only applies to --channel dropout or an "
+            f"--edge-channel dropout hop (got --channel {args.channel})")
     if args.mode != "engine":
         _forbid_ignored_flags(
-            ap, args, ["stats_kernel", "chunk_rounds"],
+            ap, args, ["stats_kernel", "chunk_rounds", "cohort_chunk"],
             f"--mode {args.mode} does not run the scan engine")
+    if args.edges:
+        if args.clients_per_round % args.edges:
+            raise SystemExit(
+                f"--edges {args.edges} does not divide --clients-per-round "
+                f"{args.clients_per_round}: edges are contiguous "
+                f"equal-size client groups")
+        if args.channel == "dp":
+            raise SystemExit(
+                "--edges refuses a DP client hop: noise calibration and "
+                "epsilon accounting across a two-level tree are undefined "
+                "(repro.hierarchy) — drop --edges or use a flat --channel dp")
+        if args.mode == "fused":
+            raise SystemExit(
+                "--edges models the client->edge->server wire; the fused "
+                "pod step has no per-client wire — use --mode engine or "
+                "protocol")
+    else:
+        _forbid_ignored_flags(
+            ap, args, ["edge_channel"],
+            "--edge-channel configures the edge->server hop of --edges")
+    if args.cohort_chunk:
+        if args.clients_per_round % args.cohort_chunk:
+            raise SystemExit(
+                f"--cohort-chunk {args.cohort_chunk} does not divide "
+                f"--clients-per-round {args.clients_per_round}")
+        if args.edges and args.cohort_chunk % max(
+                args.clients_per_round // args.edges, 1):
+            raise SystemExit(
+                f"--cohort-chunk {args.cohort_chunk} does not hold whole "
+                f"edges of {args.clients_per_round // args.edges} clients "
+                f"(--edges {args.edges})")
+        _forbid_ignored_flags(
+            ap, args, ["scaffold", "stats_kernel"],
+            "streaming rounds keep no cohort-resident state: SCAFFOLD "
+            "slot variates and the flattened-cohort stats kernel both "
+            "need the materialized cohort")
     if args.mode == "fused":
         if args.channel != "none":
             raise SystemExit(
@@ -185,6 +222,22 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dropout-p", type=float, default=0.1,
                     help="per-round client dropout probability "
                          "(--channel dropout)")
+    ap.add_argument("--edges", type=int, default=0,
+                    help="fan the cohort in through this many edge "
+                         "aggregators (repro.hierarchy): clients -> edges "
+                         "-> server, --channel on the client->edge hop and "
+                         "--edge-channel on the edge->server hop, both "
+                         "hops' bytes accounted (0 = flat aggregation)")
+    ap.add_argument("--edge-channel", default="dense",
+                    choices=["dense", "int8", "dropout"],
+                    help="edge->server hop channel for --edges ('dropout' "
+                         "models a regional edge outage taking all its "
+                         "clients down at once, p = --dropout-p)")
+    ap.add_argument("--cohort-chunk", type=int, default=0,
+                    help="stream the cohort through each round in chunks "
+                         "of this many clients (engine mode; peak memory "
+                         "O(chunk) instead of O(cohort), unlocking "
+                         "thousands of clients/round; 0 = materialized)")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients-per-round", type=int, default=16)
     ap.add_argument("--samples-per-client", type=int, default=2)
@@ -297,6 +350,12 @@ def main():
         quant_kernel=args.quant_kernel, dp_sigma=args.dp_sigma,
         dp_clip=args.dp_clip, dp_delta=args.dp_delta,
         dropout_p=args.dropout_p)
+    if args.edges:
+        # two-level topology: --channel becomes the client->edge hop
+        channel = hierarchy.HierarchicalChannel(
+            args.edges, client_channel=channel,
+            edge_channel=comm.get_channel(args.edge_channel,
+                                          dropout_p=args.dropout_p))
     wire_total = [0.0]
 
     os.makedirs(args.ckpt_dir, exist_ok=True)
@@ -309,11 +368,16 @@ def main():
             algorithm="dcco", objective=objective, lam=args.lam,
             client_lr=args.client_lr,
             local_steps=args.local_steps, chunk_rounds=chunk,
+            cohort_chunk=args.cohort_chunk,
             stats_kernel=args.stats_kernel, channel=channel,
             server_update=opt, prox_mu=args.fedprox_mu,
             scaffold=args.scaffold)
-        engine = round_engine.RoundEngine(
-            apply, opt, ds.make_round_sampler(args.clients_per_round), ecfg)
+        if args.cohort_chunk:
+            sampler = ds.make_streaming_sampler(args.clients_per_round,
+                                                args.cohort_chunk)
+        else:
+            sampler = ds.make_round_sampler(args.clients_per_round)
+        engine = round_engine.RoundEngine(apply, opt, sampler, ecfg)
 
         def on_segment(round_end, carry, m):
             history.extend(float(x) for x in np.asarray(m.loss))

@@ -1,0 +1,352 @@
+"""Hierarchical aggregation + streaming mega-cohorts (repro.hierarchy):
+
+  * two-level dense aggregation is BIT-identical (== 0.0) to flat
+    aggregation for every registered objective — the Eq.-3 summation-tree
+    exactness, computed-as-collapse so baselines stay byte-stable;
+  * the forced real tree (collapse_ideal=False) matches flat to float
+    regrouping only — demonstrating the exactness is math, not luck;
+  * lossy hops compose: int8 client uplink, edge-outage dropout with
+    surviving-mass renormalization, per-hop wire-bytes accounting;
+  * the segment-sum fold: kernel (interpret) == jnp oracle inside the
+    channel;
+  * guards: DP hops, nested trees, non-dividing cohorts refused loudly;
+  * streaming rounds (EngineConfig.cohort_chunk): chunked engine ==
+    materialized engine on the same key stream, channels/hierarchy
+    compose, chunk samplers concatenate to the materialized cohort, and
+    the build-time guards fire.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm, hierarchy, utils
+from repro.core import fed_sim, round_engine
+from repro.data import pipeline, synthetic
+from repro.objectives import OBJECTIVES, get_objective
+from repro.optim import optimizers as opt_lib
+
+LAM = 5.0
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (10, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    data = {"v1": jax.random.normal(jax.random.PRNGKey(1), (8, 3, 10)),
+            "v2": jax.random.normal(jax.random.PRNGKey(2), (8, 3, 10))}
+    sizes = jnp.array([3, 1, 2, 3, 3, 2, 1, 3], jnp.int32)
+    return params, apply, data, sizes
+
+
+@pytest.fixture(scope="module")
+def image_ds():
+    imgs, labels = synthetic.synthetic_labeled_images(60, 3, image_size=8,
+                                                      noise=0.5, seed=1)
+    ds = pipeline.FederatedDataset.build(
+        {"images": imgs}, labels, num_clients=20, samples_per_client=2,
+        alpha=0.0, seed=0)
+    params = {"w1": jax.random.normal(jax.random.PRNGKey(0),
+                                      (8 * 8 * 3, 32)) * 0.05,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (32, 16)) * 0.1}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x.reshape(x.shape[0], -1) @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    return ds, params, apply
+
+
+class TestTwoLevelExactness:
+    @pytest.mark.parametrize("name", OBJECTIVES)
+    def test_dense_tree_bit_identical_to_flat(self, toy, name):
+        """The acceptance property: a dense-dense two-level tree == flat
+        aggregation, bit for bit, for every registered objective."""
+        params, apply, data, sizes = toy
+        obj = get_objective(name, **({"lam": LAM} if name == "dcco" else {}))
+        opt = opt_lib.adam(1e-2)
+        p0, s0, m0 = fed_sim.stats_round(apply, params, opt.init(params),
+                                         opt, data, sizes, objective=obj)
+        ch = hierarchy.HierarchicalChannel(4)
+        p1, s1, m1 = fed_sim.stats_round(apply, params, opt.init(params),
+                                         opt, data, sizes, objective=obj,
+                                         channel=ch,
+                                         channel_key=jax.random.PRNGKey(42))
+        assert utils.tree_max_abs_diff(p0, p1) == 0.0
+        assert float(m0.loss) == float(m1.loss)
+        # both hops are accounted even on the ideal wire: K client + E
+        # edge payloads per phase
+        assert float(m1.wire_bytes) > 0.0
+
+    def test_real_tree_matches_flat_to_regrouping(self, toy):
+        """collapse_ideal=False forces the genuine two-level computation
+        (segment fold + edge sum): equal to flat up to float regrouping —
+        the Eq.-3 exactness is mathematical, the collapse only preserves
+        the bits."""
+        params, apply, data, sizes = toy
+        obj = get_objective("dcco", lam=LAM)
+        opt = opt_lib.adam(1e-2)
+        p0, _, m0 = fed_sim.stats_round(apply, params, opt.init(params),
+                                        opt, data, sizes, objective=obj)
+        ch = hierarchy.HierarchicalChannel(4, collapse_ideal=False)
+        assert not ch.collapses
+        p1, _, m1 = fed_sim.stats_round(apply, params, opt.init(params),
+                                        opt, data, sizes, objective=obj,
+                                        channel=ch,
+                                        channel_key=jax.random.PRNGKey(42))
+        assert utils.tree_max_abs_diff(p0, p1) < 1e-6
+        assert abs(float(m0.loss) - float(m1.loss)) < 1e-5
+
+    def test_kernel_fold_matches_jnp_fold(self, toy):
+        """The Pallas segment-sum fold (interpret mode) inside the channel
+        == the jnp segment_sum fold."""
+        params, apply, data, sizes = toy
+        obj = get_objective("dcco", lam=LAM)
+        opt = opt_lib.adam(1e-2)
+        outs = {}
+        for impl in ("jnp", "interpret"):
+            ch = hierarchy.HierarchicalChannel(
+                4, client_channel=comm.QuantizedChannel(8), fold_impl=impl)
+            outs[impl] = fed_sim.stats_round(
+                apply, params, opt.init(params), opt, data, sizes,
+                objective=obj, channel=ch,
+                channel_key=jax.random.PRNGKey(42))
+        assert utils.tree_max_abs_diff(outs["jnp"][0],
+                                       outs["interpret"][0]) < 1e-6
+
+    def test_fold_to_edges_matches_manual(self):
+        tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (6, 3)),
+                "b": jax.random.normal(jax.random.PRNGKey(1), (6, 2, 2))}
+        w = jax.random.uniform(jax.random.PRNGKey(2), (6,))
+        ids = hierarchy.contiguous_edge_ids(6, 3)
+        np.testing.assert_array_equal(np.asarray(ids), [0, 0, 1, 1, 2, 2])
+        out = hierarchy.fold_to_edges(tree, w, ids, 3)
+        for k in tree:
+            want = jnp.stack([
+                jnp.tensordot(w[2 * e:2 * e + 2], tree[k][2 * e:2 * e + 2],
+                              axes=1) for e in range(3)])
+            np.testing.assert_allclose(np.asarray(out[k]), np.asarray(want),
+                                       rtol=1e-6, atol=1e-7)
+
+
+class TestLossyHops:
+    def test_int8_uplink_trains_and_accounts_both_hops(self, toy):
+        params, apply, data, sizes = toy
+        obj = get_objective("dcco", lam=LAM)
+        opt = opt_lib.adam(1e-2)
+        ch = hierarchy.HierarchicalChannel(
+            4, client_channel=comm.QuantizedChannel(8))
+        p, s, m = fed_sim.stats_round(apply, params, opt.init(params), opt,
+                                      data, sizes, objective=obj, channel=ch,
+                                      channel_key=jax.random.PRNGKey(42))
+        assert bool(jnp.isfinite(m.loss))
+        ctx = ch.begin_round(jax.random.PRNGKey(0), sizes)
+        tmpl = obj.stat_template(6)
+        hop = ch.hop_bytes(ctx, tmpl)
+        # 8 int8 client payloads + 4 dense edge payloads, and the split
+        # sums to the round accounting
+        assert float(hop["client_edge"]) == pytest.approx(
+            8 * comm.QuantizedChannel(8).payload_bytes(tmpl))
+        assert float(hop["edge_server"]) == pytest.approx(
+            4 * comm.DenseChannel().payload_bytes(tmpl))
+        assert float(ch.round_bytes(ctx, tmpl)) == pytest.approx(
+            float(hop["client_edge"] + hop["edge_server"]))
+
+    def test_edge_outage_renormalizes_over_survivors(self, toy):
+        """An edge-hop dropout drops whole client groups; the effective
+        weights renormalize over the surviving mass and still sum to 1."""
+        params, apply, data, sizes = toy
+        ch = hierarchy.HierarchicalChannel(
+            4, edge_channel=comm.DropoutChannel(0.5))
+        assert not ch.full_participation
+        # some key where at least one edge survives and one drops
+        for seed in range(20):
+            ctx = ch.begin_round(jax.random.PRNGKey(seed), sizes)
+            keep = np.asarray(ctx.edge_ctx.mask)
+            if 0 < keep.sum() < 4:
+                break
+        else:
+            pytest.fail("no key produced a partial outage")
+        mask = np.asarray(ctx.mask)
+        w = np.asarray(ctx.weights)
+        # clients behind a dropped edge vanish together
+        np.testing.assert_array_equal(mask, np.repeat(keep, 2))
+        assert w[mask == 0].sum() == 0.0
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+        # and the round still trains
+        obj = get_objective("dcco", lam=LAM)
+        opt = opt_lib.adam(1e-2)
+        p, s, m = fed_sim.stats_round(apply, params, opt.init(params), opt,
+                                      data, sizes, objective=obj, channel=ch,
+                                      channel_key=jax.random.PRNGKey(seed))
+        assert bool(jnp.isfinite(m.loss))
+
+    def test_edge_outage_p0_matches_dense_tree(self, toy):
+        """p=0 edge dropout == the dense edge hop up to the one extra
+        surviving-mass renormalization (a division by fl(sum w) ~= 1.0 —
+        ulp-level, and absent entirely when edges actually drop nothing
+        numerically relevant)."""
+        params, apply, data, sizes = toy
+        obj = get_objective("dcco", lam=LAM)
+        opt = opt_lib.adam(1e-2)
+        outs = []
+        for edge_ch in (None, comm.DropoutChannel(0.0)):
+            ch = hierarchy.HierarchicalChannel(4, edge_channel=edge_ch,
+                                               collapse_ideal=False)
+            outs.append(fed_sim.stats_round(
+                apply, params, opt.init(params), opt, data, sizes,
+                objective=obj, channel=ch,
+                channel_key=jax.random.PRNGKey(42)))
+        assert utils.tree_max_abs_diff(outs[0][0], outs[1][0]) < 1e-7
+
+
+class TestGuards:
+    def test_dp_hop_refused(self):
+        with pytest.raises(ValueError, match="DP noise calibration"):
+            hierarchy.HierarchicalChannel(
+                2, client_channel=comm.DPGaussianChannel(0.5))
+        with pytest.raises(ValueError, match="DP noise calibration"):
+            hierarchy.HierarchicalChannel(
+                2, edge_channel=comm.DPGaussianChannel(0.5))
+
+    def test_nested_tree_refused(self):
+        with pytest.raises(ValueError, match="nested"):
+            hierarchy.HierarchicalChannel(
+                2, client_channel=hierarchy.HierarchicalChannel(2))
+
+    def test_non_dividing_cohort_refused(self, toy):
+        params, apply, data, sizes = toy
+        ch = hierarchy.HierarchicalChannel(3)
+        with pytest.raises(ValueError, match="does not divide"):
+            ch.begin_round(jax.random.PRNGKey(0), sizes)   # 8 % 3 != 0
+
+    def test_bad_fold_impl_refused(self):
+        with pytest.raises(ValueError, match="fold impl"):
+            hierarchy.HierarchicalChannel(2, fold_impl="magic")
+
+
+class TestStreaming:
+    def test_streaming_engine_matches_materialized(self, image_ds):
+        """chunked == materialized on the same (selection, augmentation)
+        key stream, up to the float regrouping of the chunked sums."""
+        ds, params, apply = image_ds
+        opt = opt_lib.adam(1e-2)
+        rng = jax.random.PRNGKey(3)
+        cfg_m = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                          chunk_rounds=4)
+        eng_m = round_engine.RoundEngine(apply, opt,
+                                         ds.make_round_sampler(8), cfg_m)
+        pm, sm, mm = eng_m.run(params, opt.init(params), rng, 4)
+        cfg_s = cfg_m._replace(cohort_chunk=2)
+        eng_s = round_engine.RoundEngine(
+            apply, opt, ds.make_streaming_sampler(8, 2), cfg_s)
+        ps, ss, ms = eng_s.run(params, opt.init(params), rng, 4)
+        assert utils.tree_max_abs_diff(pm, ps) < 1e-4
+        np.testing.assert_allclose(np.asarray(mm.loss), np.asarray(ms.loss),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_chunks_concatenate_to_materialized_cohort(self, image_ds):
+        ds, _, _ = image_ds
+        key = jax.random.PRNGKey(11)
+        k_sel, k_aug = jax.random.split(key)
+        full_sampler = ds.make_round_sampler(6)
+        batch, sizes = full_sampler(k_sel, k_aug)
+        stream = ds.make_streaming_sampler(6, 2)
+        assert stream.num_chunks == 3
+        state = stream.prepare(k_sel, k_aug)
+        chunks = [stream.sample_chunk(state, c) for c in range(3)]
+        cat = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                           *[b for b, _ in chunks])
+        assert utils.tree_max_abs_diff(batch, cat) == 0.0
+        np.testing.assert_array_equal(
+            np.asarray(sizes),
+            np.concatenate([np.asarray(s) for _, s in chunks]))
+        np.testing.assert_array_equal(np.asarray(stream.cohort_sizes(k_sel)),
+                                      np.asarray(sizes))
+
+    def test_streaming_with_quantized_channel(self, image_ds):
+        ds, params, apply = image_ds
+        opt = opt_lib.adam(1e-2)
+        cfg = round_engine.EngineConfig(
+            algorithm="dcco", lam=LAM, chunk_rounds=2, cohort_chunk=2,
+            channel=comm.QuantizedChannel(8))
+        eng = round_engine.RoundEngine(
+            apply, opt, ds.make_streaming_sampler(8, 2), cfg)
+        p, s, m = eng.run(params, opt.init(params), jax.random.PRNGKey(3), 2)
+        assert bool(jnp.isfinite(m.loss).all())
+        # wire accounting is the same K-client payload math as materialized
+        cfg_m = round_engine.EngineConfig(
+            algorithm="dcco", lam=LAM, chunk_rounds=2,
+            channel=comm.QuantizedChannel(8))
+        eng_m = round_engine.RoundEngine(apply, opt,
+                                         ds.make_round_sampler(8), cfg_m)
+        pm, sm, mm = eng_m.run(params, opt.init(params),
+                               jax.random.PRNGKey(3), 2)
+        np.testing.assert_allclose(np.asarray(m.wire_bytes),
+                                   np.asarray(mm.wire_bytes))
+
+    def test_streaming_with_hierarchy_chunk_holds_whole_edges(self, image_ds):
+        ds, params, apply = image_ds
+        opt = opt_lib.adam(1e-2)
+        ch = hierarchy.HierarchicalChannel(
+            4, client_channel=comm.QuantizedChannel(8))
+        cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                        chunk_rounds=2, cohort_chunk=4,
+                                        channel=ch)
+        eng = round_engine.RoundEngine(
+            apply, opt, ds.make_streaming_sampler(8, 4), cfg)
+        p, s, m = eng.run(params, opt.init(params), jax.random.PRNGKey(3), 2)
+        assert bool(jnp.isfinite(m.loss).all())
+        assert float(m.wire_bytes[0]) > 0
+
+    def test_streaming_dense_hierarchy_matches_flat_streaming(self, image_ds):
+        ds, params, apply = image_ds
+        opt = opt_lib.adam(1e-2)
+        rng = jax.random.PRNGKey(3)
+        outs = []
+        for ch in (None, hierarchy.HierarchicalChannel(4)):
+            cfg = round_engine.EngineConfig(algorithm="dcco", lam=LAM,
+                                            chunk_rounds=2, cohort_chunk=4,
+                                            channel=ch)
+            eng = round_engine.RoundEngine(
+                apply, opt, ds.make_streaming_sampler(8, 4), cfg)
+            outs.append(eng.run(params, opt.init(params), rng, 2))
+        assert utils.tree_max_abs_diff(outs[0][0], outs[1][0]) == 0.0
+
+    def test_streaming_guards(self, image_ds):
+        ds, params, apply = image_ds
+        opt = opt_lib.adam(1e-2)
+
+        def build(cfg, sampler):
+            return round_engine.RoundEngine(apply, opt, sampler, cfg)
+
+        stream = ds.make_streaming_sampler(8, 2)
+        base = round_engine.EngineConfig(algorithm="dcco", cohort_chunk=2)
+        with pytest.raises(ValueError, match="chunkable sampler"):
+            build(base, ds.make_round_sampler(8))
+        with pytest.raises(ValueError, match="stats round only"):
+            build(base._replace(algorithm="fedavg_cco"), stream)
+        with pytest.raises(ValueError, match="SCAFFOLD"):
+            build(base._replace(scaffold=True), stream)
+        with pytest.raises(ValueError, match="stats_kernel"):
+            build(base._replace(stats_kernel="interpret"), stream)
+        with pytest.raises(ValueError, match="stream it or shard it"):
+            build(base._replace(cohort_axis="data"), stream)
+        with pytest.raises(ValueError, match="cohort_chunk=4"):
+            build(base._replace(cohort_chunk=4), stream)
+        with pytest.raises(ValueError, match="does not divide"):
+            ds.make_streaming_sampler(8, 3)
+        # hierarchy whose edges don't fit the chunk fails at trace time
+        ch = hierarchy.HierarchicalChannel(
+            2, client_channel=comm.QuantizedChannel(8))
+        eng = build(base._replace(channel=ch), stream)   # 2 < edge size 4
+        with pytest.raises(ValueError, match="whole edges"):
+            eng.run(params, opt.init(params), jax.random.PRNGKey(0), 1)

@@ -305,6 +305,33 @@ assert utils.tree_max_abs_diff(pe3, pe4) < 1e-5
 # objective-parametric sharded round: D-VICReg through the 2-device psum
 # body == the single-device stats_round (the 7-stat dict psums per key),
 # and its channel-routed wire costs more bytes than DCCO's 5-stat dict
+# hierarchical aggregation on the mesh (repro.hierarchy): 4 edges over 2
+# shards -> each device folds its 4 clients into 2 local edges with the
+# segment-sum kernel, the psum is the edge->server hop. Dense-dense
+# collapses to the flat dense sharded result bitwise; an int8 client hop
+# runs the real tree and accounts both hops' bytes.
+from repro import hierarchy
+ph0, sh0, mh0 = round_engine.dcco_round_sharded(
+    apply, params, opt.init(params), opt, data, sizes, mesh, lam=5.0,
+    channel=hierarchy.HierarchicalChannel(4), channel_key=ck)
+assert utils.tree_max_abs_diff(pd, ph0) == 0.0
+phq, shq, mhq = round_engine.dcco_round_sharded(
+    apply, params, opt.init(params), opt, data, sizes, mesh, lam=5.0,
+    channel=hierarchy.HierarchicalChannel(
+        4, client_channel=comm.QuantizedChannel(8), fold_impl="interpret"),
+    channel_key=ck)
+assert bool(jnp.isfinite(mhq.loss))
+assert float(mhq.wire_bytes) > float(mq.wire_bytes)  # + edge hop payloads
+# misaligned edges (1 edge on 2 shards) are refused loudly
+try:
+    round_engine.dcco_round_sharded(
+        apply, params, opt.init(params), opt, data, sizes, mesh, lam=5.0,
+        channel=hierarchy.HierarchicalChannel(1, collapse_ideal=False),
+        channel_key=ck)
+    raise AssertionError("misaligned edges were not refused")
+except ValueError as e:
+    assert "align" in str(e)
+
 from repro.objectives import get_objective
 obj = get_objective("dvicreg")
 pv1, sv1, mv1 = fed_sim.stats_round(apply, params, opt.init(params), opt,
