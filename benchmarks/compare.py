@@ -20,6 +20,15 @@ cancels machine speed and isolates what this repo controls:
     (``stats_kernel/naive_passes``) over the fused one-pass computation
     (``stats_kernel/one_pass``): a change that silently de-fuses the
     moment computation fails CI rather than just reading "covered".
+  * async straggler speedup — the simulated ticks-per-update of the sync
+    engine over the buffered (FedBuff-style) engine under the same
+    heavy-tail latency stream (``async_stragglers/sync_ticks_per_update``
+    / ``async_stragglers/buffered_ticks_per_update``). Both numbers are
+    deterministic functions of the latency model and seed, so this gate
+    has zero machine noise: it fails if the speedup regresses past
+    ``--max-regress`` below the baseline's, and fails HARD (regardless of
+    the baseline) if the buffered engine ever stops beating the sync scan
+    (ratio <= 1.0) — the buffered path's reason to exist.
   * streaming overhead — the streamed round (``population_scale/
     streaming_c{N}``) over the materialized round (``population_scale/
     materialized_c{N}``) at the largest cohort N both paths ran: the
@@ -81,6 +90,17 @@ def kernel_one_pass_ratio(rows: dict):
     if one <= 0:
         raise SystemExit(f"bad one_pass timing {one}")
     return naive / one
+
+
+def async_speedup(rows: dict, which: str) -> float:
+    sync = _us(rows, "async_stragglers/sync_ticks_per_update", which,
+               "async_stragglers")
+    buf = _us(rows, "async_stragglers/buffered_ticks_per_update", which,
+              "async_stragglers")
+    if buf <= 0:
+        raise SystemExit(f"bad buffered_ticks_per_update value {buf} "
+                         f"in {which}")
+    return sync / buf
 
 
 def streaming_overhead(rows: dict, which: str) -> float:
@@ -157,6 +177,20 @@ def main(argv=None) -> int:
             print("FAIL: fused one-pass stats computation regressed past "
                   "the gate")
             failed = True
+
+    asp_new = async_speedup(new, "the new BENCH.json")
+    asp_base = async_speedup(base, "the baseline")
+    afloor = max(asp_base * (1.0 - args.max_regress), 1.0)
+    print(f"async straggler speedup (sim ticks/update): baseline "
+          f"{asp_base:.2f}x, new {asp_new:.2f}x, floor {afloor:.2f}x")
+    if asp_new <= 1.0:
+        print("FAIL: the buffered engine no longer beats the sync scan "
+              "under heavy-tail stragglers (its reason to exist)")
+        failed = True
+    elif asp_new < afloor:
+        print("FAIL: buffered-engine straggler speedup regressed past "
+              "the gate")
+        failed = True
 
     so_new = streaming_overhead(new, "the new BENCH.json")
     so_base = streaming_overhead(base, "the baseline")

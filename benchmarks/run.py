@@ -322,6 +322,98 @@ def round_engine_bench(rounds=100, cpr=16):
          f"loss={float(me.loss[-1]):.3f}")
 
 
+def async_stragglers(ticks=60, cpr=16, async_k=4, tail=0.7):
+    """Sync vs buffered (FedBuff-style) engine under heavy-tail stragglers.
+
+    Simulated-time model, machine-portable by construction: one scheduler
+    tick is the unit of client latency. The SYNC engine waits for its
+    slowest sampled client, so a round costs ``1 + max(cohort delays)``
+    ticks (delays replayed host-side from the engine's own key stream);
+    the BUFFERED engine (EngineConfig.async_k) dispatches a cohort every
+    tick and applies an update per K-trigger, so its cost is
+    ``ticks / updates_applied`` ticks per update. Both are deterministic
+    functions of the latency model and seed — the gated speedup
+    (sync/buffered ticks-per-update, benchmarks/compare.py) cancels
+    machine speed entirely. Wall-clock us/tick and probe accuracy ride
+    along as informational rows.
+    """
+    from repro.core import round_engine
+    from repro.data import latency as latency_lib
+    imgs, labels = synthetic.synthetic_labeled_images(600, 5, image_size=16)
+    ds = pipeline.FederatedDataset.build(
+        {"images": imgs}, labels, num_clients=128, samples_per_client=2,
+        alpha=0.0, seed=0)
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (16 * 16 * 3, 128)) * 0.05,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (128, 64)) * 0.1}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x.reshape(x.shape[0], -1) @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    def embed(p, images):
+        x = images.reshape(images.shape[0], -1)
+        return jnp.tanh(x @ p["w1"]) @ p["w2"]
+
+    lat = latency_lib.LatencyModel("heavytail", horizon=8, tail=tail, seed=0)
+    rng = jax.random.PRNGKey(7)
+
+    # simulated sync cost: replay the engine's key derivation (round key =
+    # fold_in(rng, r); selection key = split()[0]; delay key = the sampler's
+    # fold_in salt) and charge each round its slowest sampled client
+    sync_ticks = 0
+    for r in range(ticks):
+        k_sel, _ = jax.random.split(jax.random.fold_in(rng, r))
+        sel = jax.random.choice(k_sel, ds.num_clients, (cpr,), replace=False)
+        d = latency_lib.sample_delays(
+            lat, jax.random.fold_in(k_sel, latency_lib._LATENCY_SALT),
+            sel.astype(jnp.int32))
+        sync_ticks += 1 + int(d.max())
+
+    opt = opt_lib.adam(1e-3)
+    eng = round_engine.RoundEngine(
+        apply, opt, ds.make_round_sampler(cpr),
+        round_engine.EngineConfig(algorithm="dcco", lam=5.0,
+                                  chunk_rounds=ticks))
+    out = eng.run(params, opt.init(params), rng, ticks)
+    jax.block_until_ready(out[2].loss)                       # warmup/compile
+    t0 = time.perf_counter()
+    ps, _, ms = eng.run(params, opt.init(params), rng, ticks)
+    jax.block_until_ready(ms.loss)
+    us_sync = (time.perf_counter() - t0) / ticks * 1e6
+    sync_tpu = sync_ticks / ticks
+    emit("async_stragglers/sync", us_sync,
+         f"ticks={ticks};sim_ticks={sync_ticks};"
+         f"probe={_probe(embed, ps, imgs, labels):.3f}")
+
+    eng = round_engine.RoundEngine(
+        apply, opt, ds.make_async_round_sampler(cpr, lat),
+        round_engine.EngineConfig(algorithm="dcco", lam=5.0,
+                                  chunk_rounds=ticks, async_k=async_k,
+                                  staleness_fn="poly", latency=lat))
+    out = eng.run(params, opt.init(params), rng, ticks)
+    jax.block_until_ready(out[2].loss)                       # warmup/compile
+    t0 = time.perf_counter()
+    pb, _, mb = eng.run(params, opt.init(params), rng, ticks)
+    jax.block_until_ready(mb.loss)
+    us_buf = (time.perf_counter() - t0) / ticks * 1e6
+    updates = int(jnp.sum(mb.applied))
+    stale = mb.staleness[mb.applied > 0]
+    buf_tpu = ticks / max(updates, 1)
+    emit("async_stragglers/buffered", us_buf,
+         f"ticks={ticks};K={async_k};updates={updates};"
+         f"stale={float(stale.mean()) if updates else 0.0:.2f};"
+         f"probe={_probe(embed, pb, imgs, labels):.3f}")
+
+    # the gated pair: simulated ticks per server update, sync vs buffered
+    emit("async_stragglers/sync_ticks_per_update", sync_tpu,
+         f"tail={tail};horizon=8")
+    emit("async_stragglers/buffered_ticks_per_update", buf_tpu,
+         f"tail={tail};K={async_k};"
+         f"speedup={sync_tpu / buf_tpu:.2f}x")
+
+
 def comm_sweep(rounds=25, cpr=16):
     """Bytes-on-the-wire vs probe accuracy across communication channels.
 
@@ -712,6 +804,7 @@ BENCHES = {
     "figure3": figure3_collapse,
     "dcco_round": dcco_round_bench,
     "round_engine": round_engine_bench,
+    "async_stragglers": async_stragglers,
     "comm_sweep": comm_sweep,
     "server_opt_sweep": server_opt_sweep,
     "fused_step": fused_step_bench,
@@ -728,6 +821,9 @@ BENCHES = {
 # shared CPU runner
 SMOKE_KW = {
     "round_engine": {"rounds": 40},
+    # ticks-per-update ratios are exact functions of the latency stream,
+    # so the smoke run may shrink wall time without moving the gate
+    "async_stragglers": {"ticks": 24},
     "comm_sweep": {"rounds": 8},
     "server_opt_sweep": {"rounds": 8},
     "objective_sweep": {"rounds": 8},

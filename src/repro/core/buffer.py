@@ -1,0 +1,165 @@
+"""Staleness-weighted server-side stats buffer (FedBuff-style).
+
+The semi-synchronous engine (``EngineConfig.async_k``) decouples client
+dispatch from the server update: every scheduler tick dispatches a cohort,
+each client's contribution (phase-1 stats + phase-2 delta) "arrives"
+``delay`` ticks later (:mod:`repro.data.latency`), and the server applies
+its update as soon as ``K`` contributions have accumulated — throughput is
+bounded by the server fold rate, not the slowest client.
+
+This module owns the two pieces of state that ride the scan carry
+(``EngineCarry.buffer``) and the pure folds over them:
+
+  * an in-flight ring (:class:`StalenessBuffer` with a leading
+    ``(horizon,)`` axis): slot ``j`` holds the staleness-weighted partial
+    sums of contributions arriving ``j`` ticks from now, plus per-slot
+    counters (mass / count / staleness mass). Dispatch scatters a cohort
+    into its delay buckets with ONE weighted segment-sum fold
+    (:func:`repro.hierarchy.aggregation.fold_to_edges`, the same
+    ``kernels/segment_sum.py`` weighted fold the hierarchy uses) — the
+    per-contribution staleness weight simply rides the fold's weight
+    vector. Memory is O(horizon * (stats + params)), independent of how
+    many contributions are in flight;
+  * the arrived buffer (:class:`StalenessBuffer`, scalar counters): each
+    tick pops ring slot 0 into it; when ``count >= K`` the engine applies
+    ``server_update.step`` on the mass-normalized delta and resets it.
+
+Exactness (paper Eq. 3): encoding statistics are linear in samples, so the
+buffer is nothing but a re-association of the flat weighted sum
+``sum_i w_i s(tau_i) x_i`` — any arrival order, any ring partition, and
+any staleness weighting is an exact weighted aggregate (property-tested in
+``tests/test_async_engine.py``). With unit staleness weights, zero
+latency, and ``K = cohort`` the fold IS the synchronous round's fold, which
+is why that configuration collapses to the sync body bit-identically.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+# staleness-weight registry: tick delay tau -> down-weight s(tau).
+# "poly" is the FedBuff choice (Nguyen et al., 2022): s = (1 + tau)^-1/2.
+STALENESS_FNS = {
+    "unit": lambda tau: jnp.ones_like(tau),
+    "poly": lambda tau: (1.0 + tau) ** -0.5,
+    "inv": lambda tau: 1.0 / (1.0 + tau),
+}
+
+
+def resolve_staleness(spec):
+    """Coerce None / registry name / callable into a staleness weight fn."""
+    if spec is None:
+        spec = "unit"
+    if callable(spec):
+        return spec
+    if spec not in STALENESS_FNS:
+        raise ValueError(f"unknown staleness fn {spec!r}; expected one of "
+                         f"{tuple(STALENESS_FNS)} or a callable")
+    return STALENESS_FNS[spec]
+
+
+class StalenessBuffer(NamedTuple):
+    """Weighted partial sums of client contributions + counters.
+
+    As the arrived buffer every field is a scalar-counter / unweighted-sum
+    pytree; as the in-flight ring every field carries a leading
+    ``(horizon,)`` slot axis. ``mass`` is ``sum_i w_i * s(tau_i)`` (the
+    normalizer), ``count`` the participating-contribution count (what the
+    K-trigger compares), ``tau`` the staleness mass ``sum_i w_i s_i tau_i``
+    (mean staleness = tau / mass).
+    """
+    stats: Any
+    delta: Any
+    loss: jnp.ndarray
+    mass: jnp.ndarray
+    count: jnp.ndarray
+    tau: jnp.ndarray
+
+
+class AsyncState(NamedTuple):
+    """The ``EngineCarry.buffer`` extension of the buffered engine."""
+    buffer: StalenessBuffer      # arrived, awaiting the K-trigger
+    pending: StalenessBuffer     # in-flight ring, leading (horizon,) axis
+    applied_total: jnp.ndarray   # int32: server updates applied so far
+
+
+def init_state(stat_spec, params, horizon: int) -> AsyncState:
+    """Zero AsyncState for ``stat_spec`` (stat key -> shape, from
+    ``StatsObjective.stat_spec``), a params pytree, and ring depth
+    ``horizon``."""
+    def zeros(lead=()):
+        return StalenessBuffer(
+            stats={k: jnp.zeros(lead + tuple(s), F32)
+                   for k, s in stat_spec.items()},
+            delta=jax.tree.map(
+                lambda p: jnp.zeros(lead + tuple(p.shape), F32), params),
+            loss=jnp.zeros(lead, F32), mass=jnp.zeros(lead, F32),
+            count=jnp.zeros(lead, F32), tau=jnp.zeros(lead, F32))
+
+    return AsyncState(zeros(), zeros((horizon,)),
+                      jnp.zeros((), jnp.int32))
+
+
+def dispatch_fold(pending: StalenessBuffer, st_k, deltas, losses_k,
+                  w_eff, mask, delays, impl: str = "jnp") -> StalenessBuffer:
+    """Scatter one dispatched cohort into its delay buckets.
+
+    ``w_eff`` (K,) is the full per-contribution weight — participation
+    weight times staleness weight — riding the segment-sum fold;
+    ``mask`` (K,) in {0,1} feeds the K-trigger count (a dropped client
+    contributes neither mass nor count); ``delays`` (K,) int32 in
+    [0, horizon) are the bucket ids.
+    """
+    from repro.hierarchy.aggregation import fold_to_edges
+
+    horizon = pending.mass.shape[0]
+    ones = jnp.ones_like(w_eff)
+    f = fold_to_edges(
+        {"stats": st_k, "delta": deltas, "loss": losses_k,
+         "mass": ones, "tau": delays.astype(F32)},
+        w_eff, delays, horizon, impl=impl)
+    cnt = fold_to_edges({"c": ones}, mask, delays, horizon, impl=impl)["c"]
+    folded = StalenessBuffer(f["stats"], f["delta"], f["loss"],
+                             f["mass"], cnt, f["tau"])
+    return jax.tree.map(jnp.add, pending, folded)
+
+
+def ring_pop(pending: StalenessBuffer):
+    """Pop slot 0 (this tick's arrivals) and advance the ring.
+
+    Returns ``(arrived, pending')`` where ``arrived`` is a scalar-counter
+    StalenessBuffer and ``pending'`` has every slot shifted one tick
+    closer with a zeroed tail slot.
+    """
+    arrived = jax.tree.map(lambda x: x[0], pending)
+    shifted = jax.tree.map(
+        lambda x: jnp.roll(x, -1, axis=0).at[-1].set(0.0), pending)
+    return arrived, shifted
+
+
+def buffer_add(buf: StalenessBuffer, arrived: StalenessBuffer):
+    """Fold arrived contributions into the server buffer (exact by Eq.-3
+    linearity: addition of weighted partial sums)."""
+    return jax.tree.map(jnp.add, buf, arrived)
+
+
+def buffer_aggregate(buf: StalenessBuffer, floor: float = 1e-12):
+    """Mass-normalized aggregate (avg_stats, avg_delta, mean_staleness).
+
+    The normalizer is floored so an empty or outage-starved buffer (all
+    contributions dropped by a lossy channel) yields zeros, never NaN —
+    the same guard discipline as the objective var-floor.
+    """
+    denom = jnp.maximum(buf.mass, floor)
+    avg_stats = jax.tree.map(lambda v: v / denom, buf.stats)
+    avg_delta = jax.tree.map(lambda v: v / denom, buf.delta)
+    return avg_stats, avg_delta, buf.tau / denom
+
+
+def buffer_reset_where(buf: StalenessBuffer, cond):
+    """Zero the buffer where scalar ``cond`` holds (post-apply reset)."""
+    return jax.tree.map(lambda x: jnp.where(cond, jnp.zeros_like(x), x), buf)

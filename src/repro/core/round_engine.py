@@ -111,6 +111,23 @@ class EngineConfig(NamedTuple):
     prox_mu: float = 0.0            # FedProx proximal coefficient (0 = off)
     scaffold: bool = False          # SCAFFOLD control variates: adds a
                                     # (c, c_slots) pytree to the scan carry
+    # --- semi-synchronous buffered engine (repro.core.buffer) ---
+    async_k: int = 0                # >0: FedBuff-style semi-synchronous
+                                    # rounds — apply the server update when
+                                    # this many client contributions have
+                                    # ARRIVED (staleness-weighted buffer);
+                                    # 0 = strictly synchronous rounds
+    staleness_fn: Any = "unit"      # repro.core.buffer.STALENESS_FNS name
+                                    # or callable tau -> weight
+    latency: Any = None             # repro.data.latency model (None/"zero"/
+                                    # "uniform"/"heavytail"/LatencyModel);
+                                    # must match the async sampler's
+    async_collapse: bool = True     # collapse the provably-synchronous
+                                    # config (K = cohort, zero latency, unit
+                                    # staleness) to the sync round body —
+                                    # bit-identical baselines, same idiom as
+                                    # HierarchicalChannel.collapse_ideal;
+                                    # False forces the real buffered path
 
 
 class EngineCarry(NamedTuple):
@@ -119,13 +136,22 @@ class EngineCarry(NamedTuple):
     rng: jnp.ndarray
     drift: Any = ()                 # drift-correction state (ScaffoldState
                                     # when EngineConfig.scaffold, else empty)
+    buffer: Any = ()                # semi-synchronous buffer + in-flight
+                                    # ring (buffer_lib.AsyncState when the
+                                    # real buffered path runs, else empty)
 
 
 class EngineMetrics(NamedTuple):
-    """Stacked per-round metrics, leading axis = rounds."""
+    """Stacked per-round metrics, leading axis = rounds (= scheduler ticks
+    on the buffered engine)."""
     loss: jnp.ndarray
     encoding_std: jnp.ndarray
     wire_bytes: jnp.ndarray = 0.0   # uplink bytes/round (0: ideal wire)
+    applied: jnp.ndarray = 1.0      # server updates applied this tick
+                                    # (sync rounds apply every round; the
+                                    # buffered engine applies on K-triggers)
+    staleness: jnp.ndarray = 0.0    # mean staleness (ticks) of the applied
+                                    # aggregate, 0 when no update applied
 
 
 # ---------------------------------------------------------------------------
@@ -552,6 +578,161 @@ def make_streaming_round_body(encoder_apply: Callable, server_opt,
 
 
 # ---------------------------------------------------------------------------
+# semi-synchronous buffered round body (repro.core.buffer)
+# ---------------------------------------------------------------------------
+
+def make_async_round_body(encoder_apply: Callable, server_opt,
+                          cfg: EngineConfig, k_cohort: int) -> Callable:
+    """Build the buffered round body: round_fn(params, opt_state, drift,
+    astate, batch, sizes, delays, key) -> (params, opt_state, drift,
+    astate, metrics).
+
+    Each scheduler tick dispatches a full cohort through the ordinary
+    two-phase stats round math (phase-1 stats, dispatch-cohort aggregate,
+    phase-2 deltas — the same folds as ``fed_sim.stats_round``), but the
+    server update is DEFERRED: per-client contributions are scattered into
+    the in-flight ring at their arrival delay with a staleness weight
+    ``s(delay)`` riding the weighted segment-sum fold, this tick's
+    arrivals fold into the server buffer, and the update applies only when
+    ``cfg.async_k`` contributions have accumulated (then the buffer
+    resets). Exact by Eq.-3 linearity — the buffer merely re-associates
+    the weighted sum; see :mod:`repro.core.buffer`.
+    """
+    from repro.core import buffer as buffer_lib
+    from repro.core import cco
+
+    if cfg.algorithm != "dcco":
+        raise ValueError(
+            f"async_k buffers the two-phase stats round only "
+            f"(algorithm 'dcco'), got {cfg.algorithm!r}")
+    if cfg.cohort_axis is not None:
+        raise ValueError(
+            "async_k and cohort_axis are not composed: the buffered "
+            "scheduler folds per-client contributions on one host — "
+            "shard the cohort or buffer it, not both")
+    if cfg.stats_kernel != "off":
+        raise ValueError(
+            "stats_kernel aggregates phase-1 stats from the flattened "
+            "cohort; the async buffer scatters per-client contributions "
+            "by arrival delay — needs per-client payloads")
+    objective = fed_sim.resolve_objective(cfg.objective, cfg.lam)
+    staleness_fn = buffer_lib.resolve_staleness(cfg.staleness_fn)
+    server_update = server_update_lib.as_server_update(
+        cfg.server_update if cfg.server_update is not None else server_opt)
+    channel = cfg.channel
+    if channel is not None:
+        if getattr(channel, "noise_phases", None) is not None:
+            raise ValueError(
+                f"{channel!r} with async_k: DP noise calibration across "
+                f"staleness-weighted multi-tick aggregates is undefined "
+                f"(the per-contribution weights change the sensitivity) — "
+                f"run DP on the synchronous engine")
+        if hasattr(channel, "hop_bytes") and not channel.collapses:
+            raise ValueError(
+                f"{channel!r} with async_k: a lossy edge hop folds "
+                f"per-EDGE aggregates, but the buffer scatters per-CLIENT "
+                f"contributions — use a collapsing (ideal-hop) tree or a "
+                f"flat channel")
+    k_trigger = float(cfg.async_k)
+
+    def round_fn(params, opt_state, drift, astate, batch, sizes, delays,
+                 key):
+        n_pad = jax.tree.leaves(batch)[0].shape[1]
+        masks = fed_sim._client_masks(sizes, n_pad)
+        if channel is None:
+            ctx = None
+            w = sizes.astype(F32) / jnp.sum(sizes.astype(F32))
+            pmask = jnp.ones((k_cohort,), F32)
+        else:
+            ctx = channel.begin_round(key, sizes)
+            w, pmask = ctx.weights, ctx.mask
+        wire = 0.0
+
+        # ---- phase 1 (dispatch-synchronous): cohort stats -> aggregate.
+        # The dispatch cohort's OWN aggregate drives phase 2 — the
+        # stop-grad combine needs the round's population estimate at
+        # dispatch time, before any of these contributions arrive.
+        def client_stats(b, m):
+            zf, zg = encoder_apply(params, b)
+            return objective.stats_masked(zf, zg, m)
+
+        st_k = jax.vmap(client_stats)(batch, masks)
+        if ctx is None:
+            st_wire = st_k
+            agg = cco.weighted_average_stats(st_k, sizes.astype(F32))
+        else:
+            # same math as channel.aggregate, with the decoded per-client
+            # payloads kept — they are what the ring scatters
+            st_wire = channel.encode_decode(ctx, st_k, "stats")
+            agg = jax.tree.map(lambda v: jnp.tensordot(w, v, axes=1),
+                               st_wire)
+            agg = channel.post_aggregate(ctx, agg, "stats")
+            wire = wire + channel.round_bytes(ctx, agg)
+
+        # ---- phase 2: local steps against the dispatch aggregate
+        def client_update(b, m, corr=None):
+            def loss_fn(p):
+                zf, zg = encoder_apply(p, b)
+                local = objective.stats_masked(zf, zg, m)
+                return objective.loss_from_stats(
+                    objective.combine(local, agg))
+
+            return fed_sim.client_local_steps(
+                loss_fn, params, cfg.client_lr, cfg.local_steps,
+                prox_mu=cfg.prox_mu, correction=corr)
+
+        if cfg.scaffold:
+            deltas, losses_k = jax.vmap(client_update)(
+                batch, masks, drift_lib.scaffold_corrections(drift))
+        else:
+            deltas, losses_k = jax.vmap(client_update)(batch, masks)
+        if ctx is None:
+            d_wire = deltas
+        else:
+            d_wire = channel.encode_decode(ctx, deltas, "update")
+            wire = wire + channel.round_bytes(
+                ctx, jax.tree.map(lambda x: x[0], deltas))
+        if cfg.scaffold:
+            # variate refresh stays dispatch-synchronous (client-side
+            # state, never buffered); its uplink rides this tick's wire
+            drift, extra = fed_sim._scaffold_round_tail(
+                drift, deltas, cfg.client_lr, cfg.local_steps, w, ctx,
+                channel)
+            wire = wire + extra
+
+        # ---- staleness-weighted scatter into the in-flight ring
+        s_w = staleness_fn(delays.astype(F32))
+        w_eff = w * s_w * pmask
+        pending = buffer_lib.dispatch_fold(
+            astate.pending, st_wire, d_wire, losses_k, w_eff, pmask,
+            delays)
+        arrived, pending = buffer_lib.ring_pop(pending)
+        buf = buffer_lib.buffer_add(astate.buffer, arrived)
+
+        # ---- apply the server update once K contributions accumulated
+        do_apply = buf.count >= k_trigger
+        _, avg_delta, mean_tau = buffer_lib.buffer_aggregate(buf)
+        p_new, o_new = server_update.step(params, opt_state, avg_delta)
+        sel = lambda new, old: jax.tree.map(            # noqa: E731
+            lambda a, b: jnp.where(do_apply, a, b), new, old)
+        params2, opt2 = sel(p_new, params), sel(o_new, opt_state)
+        buf = buffer_lib.buffer_reset_where(buf, do_apply)
+        astate2 = buffer_lib.AsyncState(
+            buf, pending,
+            astate.applied_total + do_apply.astype(jnp.int32))
+
+        metrics = EngineMetrics(
+            loss=jnp.sum(w * losses_k),
+            encoding_std=objective.encoding_std(agg),
+            wire_bytes=jnp.asarray(wire, F32),
+            applied=do_apply.astype(F32),
+            staleness=jnp.where(do_apply, mean_tau, 0.0))
+        return params2, opt2, drift, astate2, metrics
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
 
@@ -573,8 +754,60 @@ class RoundEngine:
         self.config = config
         self.sampler = sampler
         self.drift_state = None      # final drift carry of the last run()
+        self.buffer_state = None     # final AsyncState of the last run()
         self._streaming = config.cohort_chunk > 0
-        if self._streaming:
+        self._async = config.async_k > 0
+        self._async_real = False     # True when the buffered path runs
+        if self._async:
+            from repro.core import buffer as buffer_lib
+            from repro.data import latency as latency_lib
+            if self._streaming:
+                raise ValueError(
+                    "async_k and cohort_chunk are two schedulers for the "
+                    "same round (buffered arrivals vs streamed chunks) "
+                    "and are not composed — drop one")
+            if not hasattr(sampler, "latency"):
+                raise ValueError(
+                    "async_k needs a latency-aware sampler emitting "
+                    "(batch, sizes, delays) — use "
+                    "FederatedDataset.make_async_round_sampler or "
+                    "repro.data.latency.make_async_sampler, got a plain "
+                    "round sampler")
+            lat = latency_lib.resolve_latency(config.latency)
+            if sampler.latency != lat:
+                raise ValueError(
+                    f"sampler draws delays from {sampler.latency} but "
+                    f"EngineConfig.latency resolves to {lat} — the ring "
+                    f"horizon and the delay stream must agree")
+            k_cohort = sampler.clients_per_round
+            if not 1 <= config.async_k <= k_cohort:
+                raise ValueError(
+                    f"async_k={config.async_k} must be in [1, "
+                    f"clients_per_round={k_cohort}]: fewer than one "
+                    f"contribution never triggers, more than one cohort "
+                    f"can never accumulate before the first apply")
+            # resolve once so an unknown name fails at build, not in trace
+            buffer_lib.resolve_staleness(config.staleness_fn)
+            self._async_collapsed = (
+                config.async_collapse and lat.kind == "zero"
+                and config.staleness_fn in (None, "unit")
+                and config.async_k == k_cohort)
+            if self._async_collapsed:
+                # K = cohort, zero latency, unit staleness: every dispatch
+                # arrives immediately and triggers exactly one apply — the
+                # buffered round IS the synchronous round, so compute it
+                # as one (bit-identical, the collapse_ideal idiom)
+                self.round_fn = make_round_body(encoder_apply, server_opt,
+                                                config, mesh)
+            else:
+                self.round_fn = make_async_round_body(
+                    encoder_apply, server_opt, config, k_cohort)
+                self._async_real = True
+                self._async_horizon = lat.horizon
+                self._objective = fed_sim.resolve_objective(
+                    config.objective, config.lam)
+                self._encoder_apply = encoder_apply
+        elif self._streaming:
             self.round_fn = make_streaming_round_body(
                 encoder_apply, server_opt, config, sampler)
         else:
@@ -596,18 +829,33 @@ class RoundEngine:
             # so the selection/augmentation streams are unchanged vs the
             # channel-less engine — resume and regression baselines hold
             k_ch = jax.random.fold_in(rkey, _CHANNEL_SALT)
-            if self._streaming:
+            buffer = c.buffer
+            if self._async_real:
+                batch, sizes, delays = self.sampler(k_sel, k_aug)
+                params, opt_state, drift, buffer, m = self.round_fn(
+                    c.params, c.opt_state, c.drift, c.buffer, batch, sizes,
+                    delays, k_ch)
+                applied, stale = m.applied, m.staleness
+            elif self._streaming:
                 # the streaming body samples inside the round, one cohort
                 # chunk at a time — the full batch never materializes here
                 params, opt_state, drift, m = self.round_fn(
                     c.params, c.opt_state, c.drift, k_sel, k_aug, k_ch)
+                applied, stale = jnp.ones((), F32), jnp.zeros((), F32)
             else:
-                batch, sizes = self.sampler(k_sel, k_aug)
+                if self._async:
+                    # collapsed async config: same cohorts (delays are a
+                    # fold_in side stream off k_sel), sync round body
+                    batch, sizes, _delays = self.sampler(k_sel, k_aug)
+                else:
+                    batch, sizes = self.sampler(k_sel, k_aug)
                 params, opt_state, drift, m = self.round_fn(
                     c.params, c.opt_state, c.drift, batch, sizes, k_ch)
-            return (EngineCarry(params, opt_state, c.rng, drift),
+                applied, stale = jnp.ones((), F32), jnp.zeros((), F32)
+            return (EngineCarry(params, opt_state, c.rng, drift, buffer),
                     EngineMetrics(m.loss, m.encoding_std,
-                                  jnp.asarray(m.wire_bytes, F32)))
+                                  jnp.asarray(m.wire_bytes, F32),
+                                  applied, stale))
 
         unroll = self.config.scan_unroll or (
             8 if jax.default_backend() == "cpu" else 1)
@@ -624,11 +872,24 @@ class RoundEngine:
                 donate_argnums=self._donate)
         return self._tail_segments[num_rounds]
 
+    def _init_async_state(self, params):
+        """Zero AsyncState sized from the sampler/encoder shapes (no FLOPs:
+        the encoding dim comes from ``jax.eval_shape``)."""
+        from repro.core import buffer as buffer_lib
+        k0 = jax.random.PRNGKey(0)
+        batch_s, _, _ = jax.eval_shape(self.sampler, k0, k0)
+        client0 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), batch_s)
+        zf_s, _ = jax.eval_shape(self._encoder_apply, params, client0)
+        return buffer_lib.init_state(
+            self._objective.stat_spec(zf_s.shape[-1]), params,
+            self._async_horizon)
+
     # -- full run -----------------------------------------------------------
     def run(self, params, opt_state, rng, rounds: int, *, start_round: int = 0,
             on_segment: Optional[Callable] = None, ckpt_dir: Optional[str] = None,
             ckpt_every: int = 0, ckpt_name: str = "engine",
-            drift_state=None):
+            drift_state=None, buffer_state=None):
         """Run ``rounds`` rounds; returns (params, opt_state, EngineMetrics).
 
         Metrics stream back per segment; ``on_segment(round_end, carry,
@@ -642,6 +903,13 @@ class RoundEngine:
         ``self.drift_state`` after the run (it is part of the returned
         carry, so it is safe to keep).
 
+        On the real buffered path (``async_k`` without collapse) the
+        staleness buffer and in-flight ring ride the carry the same way:
+        pass ``buffer_state=`` to resume mid-flight contributions (zeros
+        otherwise), read the final :class:`repro.core.buffer.AsyncState`
+        from ``self.buffer_state``, and checkpoints gain a ``"buffer"``
+        entry so save -> resume preserves in-flight work.
+
         With ``donate=True`` (default) the ``carry`` seen by ``on_segment``
         is donated to the NEXT segment: read it synchronously inside the
         callback (evaluate, log, ...) and ``jnp.copy`` anything you keep —
@@ -650,26 +918,28 @@ class RoundEngine:
         """
         drift = () if drift_state is None else drift_state
         if self.config.scaffold and drift_state is None:
-            _, sizes_shape = jax.eval_shape(
+            shapes = jax.eval_shape(
                 self.sampler, jax.random.PRNGKey(0), jax.random.PRNGKey(0))
-            drift = drift_lib.scaffold_init(params, sizes_shape.shape[0])
-        carry = EngineCarry(params, opt_state, rng, drift)
+            drift = drift_lib.scaffold_init(params, shapes[1].shape[0])
+        buffer = () if buffer_state is None else buffer_state
+        if self._async_real and buffer_state is None:
+            buffer = self._init_async_state(params)
+        carry = EngineCarry(params, opt_state, rng, drift, buffer)
         if self._donate:
             # segments donate their carry; copy once so the CALLER's buffers
             # survive the run (donation then recycles only engine-internal
             # buffers from segment to segment).
             carry = jax.tree.map(jnp.copy, carry)
         chunk = self.config.chunk_rounds
-        losses, stds, wires = [], [], []
+        cols = [[] for _ in EngineMetrics._fields]
         done, last_ckpt = 0, 0
         while done < rounds:
             seg = min(chunk, rounds - done)
             carry, m = self._segment_fn(seg)(
                 carry, jnp.asarray(start_round + done, jnp.int32))
             done += seg
-            losses.append(m.loss)
-            stds.append(m.encoding_std)
-            wires.append(m.wire_bytes)
+            for col, v in zip(cols, m):
+                col.append(jnp.asarray(v, F32))
             round_end = start_round + done
             if on_segment is not None:
                 on_segment(round_end, carry, m)
@@ -679,13 +949,16 @@ class RoundEngine:
                 blob = {"params": carry.params, "opt": carry.opt_state}
                 if self.config.scaffold:
                     blob["drift"] = carry.drift
+                if self._async_real:
+                    blob["buffer"] = carry.buffer
                 save_checkpoint(path, blob, round_end)
                 last_ckpt = done
         self.drift_state = carry.drift if self.config.scaffold else None
+        self.buffer_state = carry.buffer if self._async_real else None
         if self.config.channel is not None:
             # host-side bookkeeping (e.g. the DP epsilon accountant)
             self.config.channel.finalize_rounds(done)
-        metrics = EngineMetrics(jnp.concatenate(losses) if losses else jnp.zeros((0,)),
-                                jnp.concatenate(stds) if stds else jnp.zeros((0,)),
-                                jnp.concatenate(wires) if wires else jnp.zeros((0,)))
+        metrics = EngineMetrics(*[
+            jnp.concatenate(col) if col else jnp.zeros((0,))
+            for col in cols])
         return carry.params, carry.opt_state, metrics

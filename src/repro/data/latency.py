@@ -1,0 +1,118 @@
+"""Per-client arrival-latency models for the semi-synchronous engine.
+
+The sync ``RoundEngine`` blocks every round on its whole cohort, so one
+straggler stalls the fleet. The buffered engine (``EngineConfig.async_k``,
+``repro.core.buffer``) instead lets each dispatched client's contribution
+"arrive" ``delay`` scheduler ticks after dispatch. This module owns that
+delay model:
+
+  * :class:`LatencyModel` — a tiny static spec (kind, ring horizon,
+    heavy-tail severity, per-client seed);
+  * :func:`sample_delays` — draws integer delays in ``[0, horizon)`` for a
+    cohort of client ids. The ``heavytail`` kind gives every client a
+    PERSISTENT Pareto-distributed base latency (a slow client is slow every
+    round — the cross-device straggler regime of McMahan et al., 2017),
+    keyed by ``fold_in`` on the client id so the draw is reproducible and
+    independent of the round;
+  * :func:`make_async_sampler` — wraps any plain ``(k_sel, k_aug) ->
+    (batch, sizes)`` round sampler into the async 3-tuple form
+    ``(batch, sizes, delays)``. The delay key is a ``fold_in`` salt off
+    ``k_sel`` (no split), so the selection and augmentation streams are
+    bit-identical to the synchronous sampler's — zero-latency async runs
+    see exactly the cohorts the sync engine would.
+
+``FederatedDataset.make_async_round_sampler`` is the dataset-aware twin:
+same contract, but delays are drawn from the TRUE sampled client ids, so
+heavy-tail stragglers persist across rounds.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+LATENCY_KINDS = ("zero", "uniform", "heavytail")
+
+_LATENCY_SALT = 0x1A7    # fold_in salt off k_sel -> the per-round delay key
+
+
+class LatencyModel(NamedTuple):
+    """Static arrival-delay spec for the buffered engine.
+
+    kind: "zero" (every contribution arrives the tick it was dispatched),
+    "uniform" (iid delays in [0, horizon)), or "heavytail" (persistent
+    per-client Pareto base latency, severity ``tail``). ``horizon`` bounds
+    the in-flight ring depth: delays are clipped to ``horizon - 1``.
+    """
+    kind: str = "zero"
+    horizon: int = 1
+    tail: float = 0.7       # Pareto exponent multiplier (heavytail only)
+    seed: int = 0           # per-client base-latency stream (heavytail only)
+
+
+def resolve_latency(spec) -> LatencyModel:
+    """Coerce None / kind-name / LatencyModel into a validated model."""
+    if spec is None:
+        spec = LatencyModel()
+    elif isinstance(spec, str):
+        defaults = {"zero": LatencyModel(),
+                    "uniform": LatencyModel("uniform", horizon=4),
+                    "heavytail": LatencyModel("heavytail", horizon=8)}
+        if spec not in defaults:
+            raise ValueError(f"unknown latency kind {spec!r}; "
+                             f"expected one of {LATENCY_KINDS}")
+        spec = defaults[spec]
+    if not isinstance(spec, LatencyModel):
+        raise ValueError(f"latency spec must be None, a kind name, or a "
+                         f"LatencyModel, got {type(spec).__name__}")
+    if spec.kind not in LATENCY_KINDS:
+        raise ValueError(f"unknown latency kind {spec.kind!r}; "
+                         f"expected one of {LATENCY_KINDS}")
+    if spec.horizon < 1:
+        raise ValueError(f"latency horizon must be >= 1, got {spec.horizon}")
+    if spec.kind == "heavytail" and spec.tail <= 0:
+        raise ValueError(f"heavytail severity must be > 0, got {spec.tail}")
+    return spec
+
+
+def sample_delays(model: LatencyModel, key, client_ids) -> jnp.ndarray:
+    """Integer arrival delays in ``[0, model.horizon)`` for one cohort.
+
+    ``key`` is the per-round delay key (used by round-varying kinds);
+    ``client_ids`` (K,) int are the sampled clients — the heavytail kind
+    derives each client's PERSISTENT base latency from them via fold_in,
+    so the same client is slow in every round it is dispatched.
+    """
+    k = client_ids.shape[0]
+    if model.kind == "zero":
+        return jnp.zeros((k,), jnp.int32)
+    if model.kind == "uniform":
+        return jax.random.randint(key, (k,), 0, model.horizon, jnp.int32)
+    base = jax.random.PRNGKey(model.seed)
+    u = jax.vmap(
+        lambda c: jax.random.uniform(jax.random.fold_in(base, c),
+                                     minval=1e-6))(client_ids)
+    # Pareto-tail base latency: u^(-tail) - 1 is 0 for most clients and
+    # large for a heavy few; floor to ticks, clip to the ring horizon
+    d = jnp.floor(u ** (-model.tail) - 1.0)
+    return jnp.clip(d, 0, model.horizon - 1).astype(jnp.int32)
+
+
+def make_async_sampler(base_sampler, model, clients_per_round: int):
+    """Wrap a plain round sampler into the async ``(batch, sizes, delays)``
+    contract the buffered engine expects. Delays key off the cohort SLOT
+    index (0..K-1), not true client ids — use
+    ``FederatedDataset.make_async_round_sampler`` for persistent per-client
+    stragglers; this wrapper is for fixed-data samplers (tests, toys)."""
+    model = resolve_latency(model)
+    slots = jnp.arange(clients_per_round, dtype=jnp.int32)
+
+    def sampler(k_sel, k_aug):
+        batch, sizes = base_sampler(k_sel, k_aug)
+        dk = jax.random.fold_in(k_sel, _LATENCY_SALT)
+        return batch, sizes, sample_delays(model, dk, slots)
+
+    sampler.latency = model
+    sampler.clients_per_round = clients_per_round
+    return sampler

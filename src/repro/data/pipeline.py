@@ -136,6 +136,42 @@ class FederatedDataset:
         self._samplers[clients_per_round] = sampler
         return sampler
 
+    def make_async_round_sampler(self, clients_per_round: int, latency=None):
+        """``make_round_sampler``'s semi-synchronous twin: a jax-traceable
+        ``sampler(k_sel, k_aug) -> (batch, sizes, delays)`` for the
+        buffered engine (``EngineConfig.async_k``).
+
+        ``delays`` (K,) int32 are per-contribution arrival delays in
+        scheduler ticks, drawn from the ``latency`` model
+        (:mod:`repro.data.latency`) on the TRUE sampled client ids — a
+        heavy-tail model's stragglers therefore persist across rounds.
+        The delay key is a ``fold_in`` salt off ``k_sel`` (no extra
+        split), so cohort selection and augmentation are bit-identical to
+        ``make_round_sampler`` for the same keys: zero-latency async runs
+        see exactly the sync engine's batches.
+        """
+        from repro.data import latency as latency_lib
+        model = latency_lib.resolve_latency(latency)
+        data, cindex = self._stage()
+        num_clients, n = self.num_clients, self.samples_per_client
+        k_round = clients_per_round
+
+        def sampler(k_sel, k_aug):
+            sel = jax.random.choice(k_sel, num_clients, (k_round,),
+                                    replace=False)
+            idx = cindex[sel].reshape(-1)                    # (K*n,)
+            gathered = {kk: v[idx] for kk, v in data.items()}
+            out = self._two_views(k_aug, gathered, k_round, n)
+            sizes = jnp.full((k_round,), n, jnp.int32)
+            dk = jax.random.fold_in(k_sel, latency_lib._LATENCY_SALT)
+            delays = latency_lib.sample_delays(model, dk,
+                                               sel.astype(jnp.int32))
+            return out, sizes, delays
+
+        sampler.latency = model
+        sampler.clients_per_round = k_round
+        return sampler
+
     def make_streaming_sampler(self, clients_per_round: int,
                                cohort_chunk: int):
         """A chunkable sampler for the streaming engine path

@@ -33,7 +33,9 @@ from repro import comm, hierarchy, objectives as objectives_lib
 from repro.checkpoint import restore_checkpoint, save_checkpoint
 from repro.configs.base import (DualEncoderConfig, TrainConfig, get_config,
                                 get_dual_encoder_config)
+from repro.core import buffer as buffer_lib
 from repro.core import eval as eval_lib, fed_sim, round_engine
+from repro.data import latency as latency_lib
 from repro.data import pipeline, synthetic
 from repro.launch import steps as steps_lib
 from repro.models import dual_encoder
@@ -108,6 +110,39 @@ def validate_flags(ap, args) -> None:
         _forbid_ignored_flags(
             ap, args, ["stats_kernel", "chunk_rounds", "cohort_chunk"],
             f"--mode {args.mode} does not run the scan engine")
+    if args.async_k:
+        if args.mode != "engine":
+            raise SystemExit(
+                f"--async-k buffers contributions inside the scan engine; "
+                f"--mode {args.mode} runs strictly synchronous rounds "
+                f"(the fused pod step and the protocol loop have no "
+                f"buffered scheduler) — use --mode engine")
+        if args.cohort_chunk:
+            raise SystemExit(
+                "--async-k with --cohort-chunk: the staleness buffer and "
+                "the streamed cohort are two schedulers for the same "
+                "round and are not composed — drop one")
+        if args.channel == "dp":
+            raise SystemExit(
+                "--async-k refuses --channel dp: DP noise calibration "
+                "across staleness-weighted multi-tick aggregates is "
+                "undefined (repro.core.buffer) — run DP on the "
+                "synchronous engine")
+        if args.stats_kernel != "off":
+            raise SystemExit(
+                "--async-k scatters per-client contributions by arrival "
+                "delay; --stats-kernel aggregates the flattened cohort "
+                "and never materializes them — drop one")
+        if not 1 <= args.async_k <= args.clients_per_round:
+            raise SystemExit(
+                f"--async-k {args.async_k} must be in [1, "
+                f"--clients-per-round {args.clients_per_round}]")
+    else:
+        _forbid_ignored_flags(
+            ap, args, ["staleness", "latency_tail"],
+            "--staleness / --latency-tail shape the buffered "
+            "(--async-k) engine's arrival model; the synchronous engine "
+            "ignores them")
     if args.edges:
         if args.clients_per_round % args.edges:
             raise SystemExit(
@@ -238,6 +273,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "of this many clients (engine mode; peak memory "
                          "O(chunk) instead of O(cohort), unlocking "
                          "thousands of clients/round; 0 = materialized)")
+    ap.add_argument("--async-k", type=int, default=0,
+                    help="semi-synchronous FedBuff-style engine "
+                         "(repro.core.buffer): apply the server update "
+                         "once this many client contributions have "
+                         "ARRIVED — contributions are staleness-weighted "
+                         "and buffered as they land, so throughput is "
+                         "bounded by the server fold rate, not the "
+                         "slowest client (0 = synchronous rounds)")
+    ap.add_argument("--staleness", default="unit",
+                    choices=list(buffer_lib.STALENESS_FNS),
+                    help="staleness down-weight s(tau) of a contribution "
+                         "arriving tau ticks after dispatch: 'unit' = no "
+                         "down-weighting, 'poly' = (1+tau)^-1/2 (the "
+                         "FedBuff choice), 'inv' = 1/(1+tau)")
+    ap.add_argument("--latency-tail", type=float, default=0.0,
+                    help="heavy-tail straggler severity (Pareto exponent "
+                         "of the persistent per-client arrival-delay "
+                         "distribution, repro.data.latency); 0 = every "
+                         "contribution arrives the tick it was dispatched")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients-per-round", type=int, default=16)
     ap.add_argument("--samples-per-client", type=int, default=2)
@@ -364,6 +418,11 @@ def main():
 
     if args.mode == "engine":
         chunk = args.chunk_rounds or args.eval_every or 25
+        latency = None
+        if args.async_k and args.latency_tail > 0:
+            latency = latency_lib.LatencyModel(
+                "heavytail", horizon=8, tail=args.latency_tail,
+                seed=args.seed)
         ecfg = round_engine.EngineConfig(
             algorithm="dcco", objective=objective, lam=args.lam,
             client_lr=args.client_lr,
@@ -371,22 +430,44 @@ def main():
             cohort_chunk=args.cohort_chunk,
             stats_kernel=args.stats_kernel, channel=channel,
             server_update=opt, prox_mu=args.fedprox_mu,
-            scaffold=args.scaffold)
+            scaffold=args.scaffold, async_k=args.async_k,
+            staleness_fn=args.staleness, latency=latency)
         if args.cohort_chunk:
             sampler = ds.make_streaming_sampler(args.clients_per_round,
                                                 args.cohort_chunk)
+        elif args.async_k:
+            sampler = ds.make_async_round_sampler(args.clients_per_round,
+                                                  latency)
         else:
             sampler = ds.make_round_sampler(args.clients_per_round)
         engine = round_engine.RoundEngine(apply, opt, sampler, ecfg)
+        buffer_state = None
+        if args.resume and engine._async_real:
+            # second pass over the blob: the buffer template needs the
+            # built engine (stat shapes come from eval_shape on the
+            # sampler), which needs the dataset — both exist only now
+            try:
+                b, _ = restore_checkpoint(
+                    args.resume,
+                    {"buffer": engine._init_async_state(params)})
+                buffer_state = b["buffer"]
+            except KeyError:
+                print("resume checkpoint holds no buffer state (written "
+                      "by the synchronous engine) — starting the buffered "
+                      "run with an empty buffer", flush=True)
 
         def on_segment(round_end, carry, m):
             history.extend(float(x) for x in np.asarray(m.loss))
             wire_total[0] += float(np.sum(np.asarray(m.wire_bytes)))
             acc = evaluate(carry.params)
             dt = time.time() - t0
+            extra = ""
+            if args.async_k:
+                extra = (f" updates={int(np.sum(np.asarray(m.applied)))}"
+                         f"/{m.applied.shape[0]}t")
             print(f"round {round_end:5d} loss={history[-1]:9.4f} "
                   f"enc_std={float(m.encoding_std[-1]):.4f} "
-                  f"probe_acc={acc:.3f} "
+                  f"probe_acc={acc:.3f}{extra} "
                   f"({dt / (round_end - start_round):.2f}s/round)", flush=True)
 
         params, opt_state, _ = engine.run(
@@ -394,7 +475,7 @@ def main():
             args.rounds - start_round, start_round=start_round,
             on_segment=on_segment, ckpt_dir=args.ckpt_dir,
             ckpt_every=args.ckpt_every, ckpt_name=args.arch,
-            drift_state=drift_state)
+            drift_state=drift_state, buffer_state=buffer_state)
         _report(args, history, evaluate, params, channel, wire_total[0])
         return
 

@@ -1,0 +1,455 @@
+"""Semi-synchronous buffered round engine (EngineConfig.async_k,
+repro.core.buffer + repro.data.latency):
+
+  * the provably-synchronous configuration (K = cohort, zero latency, unit
+    staleness) is BIT-identical (== 0.0) to the sync engine for every
+    registered objective — the collapse idiom of the hierarchy tests;
+  * the forced real buffered path (async_collapse=False) matches the sync
+    engine to float regrouping only — the Eq.-3 exactness is math, the
+    collapse only preserves the bits;
+  * the staleness-weighted buffer fold is linear in contributions and
+    permutation / partition invariant: any arrival order equals the flat
+    Eq.-3 weighted sum (property tests via tests/_hypothesis_compat);
+  * fault injection: heavy-tail stragglers + DropoutChannel outages leave
+    the buffer renormalization finite (no NaN);
+  * build-time guards and validate_flags rejections fire loudly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import comm, hierarchy, utils
+from repro.core import buffer as buffer_lib
+from repro.core import round_engine
+from repro.core.round_engine import EngineConfig, RoundEngine
+from repro.data import latency as latency_lib
+from repro.launch import train as train_lib
+from repro.objectives import OBJECTIVES, get_objective
+from repro.optim import optimizers as opt_lib
+
+LAM = 5.0
+COHORT = 8
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(0)
+    params = {"w1": jax.random.normal(key, (10, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    data = {"v1": jax.random.normal(jax.random.PRNGKey(1), (8, 3, 10)),
+            "v2": jax.random.normal(jax.random.PRNGKey(2), (8, 3, 10))}
+    sizes = jnp.array([3, 1, 2, 3, 3, 2, 1, 3], jnp.int32)
+    return params, apply, data, sizes
+
+
+def _base_sampler(data, sizes):
+    return lambda k_sel, k_aug: (data, sizes)
+
+
+def _run(apply, params, sampler, rounds=4, **cfg_kw):
+    cfg_kw.setdefault("lam", LAM)
+    cfg_kw.setdefault("chunk_rounds", 4)
+    opt = opt_lib.adam(1e-2)
+    eng = RoundEngine(apply, opt, sampler, EngineConfig(**cfg_kw))
+    p, o, m = eng.run(params, opt.init(params), jax.random.PRNGKey(3),
+                      rounds)
+    return eng, p, m
+
+
+# ---------------------------------------------------------------------------
+# equivalence against the sync scan
+# ---------------------------------------------------------------------------
+
+class TestSyncEquivalence:
+    @pytest.mark.parametrize("name", OBJECTIVES)
+    def test_sync_config_bit_identical(self, toy, name):
+        """The acceptance property: async_k = cohort size, zero latency,
+        unit staleness == the sync RoundEngine, bit for bit, per
+        registered objective (the buffered round IS the sync round, so it
+        is computed as one — the collapse_ideal idiom)."""
+        params, apply, data, sizes = toy
+        obj = get_objective(name, **({"lam": LAM} if name == "dcco" else {}))
+        base = _base_sampler(data, sizes)
+        _, p0, m0 = _run(apply, params, base, objective=obj)
+        asamp = latency_lib.make_async_sampler(base, None, COHORT)
+        _, p1, m1 = _run(apply, params, asamp, objective=obj,
+                         async_k=COHORT)
+        assert utils.tree_max_abs_diff(p0, p1) == 0.0
+        np.testing.assert_array_equal(np.asarray(m0.loss),
+                                      np.asarray(m1.loss))
+        # collapsed async rounds apply an update every tick, like sync
+        assert np.all(np.asarray(m1.applied) == 1.0)
+
+    def test_forced_real_buffer_matches_sync_to_regrouping(self, toy):
+        """async_collapse=False forces the genuine buffered machinery
+        (ring scatter, pop, mass-renormalized apply): equal to the sync
+        engine up to float regrouping only."""
+        params, apply, data, sizes = toy
+        base = _base_sampler(data, sizes)
+        _, p0, m0 = _run(apply, params, base)
+        asamp = latency_lib.make_async_sampler(base, None, COHORT)
+        eng, p1, m1 = _run(apply, params, asamp, async_k=COHORT,
+                           async_collapse=False)
+        assert eng._async_real
+        assert utils.tree_max_abs_diff(p0, p1) < 1e-6
+        assert utils.tree_max_abs_diff(p0, p1) > 0.0 or True
+        np.testing.assert_allclose(np.asarray(m0.loss),
+                                   np.asarray(m1.loss), atol=1e-5)
+        assert np.all(np.asarray(m1.applied) == 1.0)
+        assert int(eng.buffer_state.applied_total) == 4
+
+    def test_buffered_heavytail_trains_and_counts_staleness(self, toy):
+        """K < cohort under heavy-tail latency: updates apply on
+        K-triggers, the staleness metric reports the applied aggregate's
+        mean delay, and training stays finite."""
+        params, apply, data, sizes = toy
+        lat = latency_lib.LatencyModel("heavytail", horizon=6, tail=0.8)
+        asamp = latency_lib.make_async_sampler(
+            _base_sampler(data, sizes), lat, COHORT)
+        eng, p1, m1 = _run(apply, params, asamp, rounds=12, async_k=4,
+                           staleness_fn="poly", latency=lat)
+        assert all(np.isfinite(np.asarray(v)).all()
+                   for v in jax.tree.leaves(p1))
+        applied = np.asarray(m1.applied)
+        assert 0 < applied.sum() <= 12
+        assert int(eng.buffer_state.applied_total) == int(applied.sum())
+        stale = np.asarray(m1.staleness)
+        assert np.all(stale >= 0.0) and np.isfinite(stale).all()
+        # heavy-tail delays + poly weighting must surface real staleness
+        assert stale.max() > 0.0
+
+
+# ---------------------------------------------------------------------------
+# buffer fold properties (Eq.-3 linearity)
+# ---------------------------------------------------------------------------
+
+def _random_contributions(rng, k=8):
+    st_k = {"a": jnp.asarray(rng.normal(size=(k, 4)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(k, 3, 2)), jnp.float32)}
+    deltas = {"w": jnp.asarray(rng.normal(size=(k, 5)), jnp.float32)}
+    losses = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    w_eff = jnp.asarray(rng.uniform(0.05, 1.0, size=(k,)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(k,)), jnp.float32)
+    return st_k, deltas, losses, w_eff, mask
+
+
+def _zero_pending(horizon, k=8):
+    spec = {"a": (4,), "b": (3, 2)}
+    params = {"w": jnp.zeros((5,), jnp.float32)}
+    return buffer_lib.init_state(spec, params, horizon).pending
+
+
+def _ring_total(pending):
+    """Sum every ring slot — the order-free total of all in-flight mass."""
+    return jax.tree.map(lambda x: x.sum(axis=0), pending)
+
+
+class TestBufferFoldProperties:
+    @settings(deadline=None, max_examples=20)
+    @given(seed=st.integers(0, 10_000), horizon=st.integers(1, 6))
+    def test_scatter_totals_equal_flat_weighted_sum(self, seed, horizon):
+        """Scattering a cohort into delay buckets re-associates but never
+        changes the flat Eq.-3 weighted sum: summing the ring equals
+        tensordot(w_eff, x) leaf-wise."""
+        rng = np.random.default_rng(seed)
+        st_k, deltas, losses, w_eff, mask = _random_contributions(rng)
+        delays = jnp.asarray(rng.integers(0, horizon, size=(8,)), jnp.int32)
+        pending = buffer_lib.dispatch_fold(
+            _zero_pending(horizon), st_k, deltas, losses, w_eff, mask,
+            delays)
+        tot = _ring_total(pending)
+        for leaf, flat in [
+                (tot.stats["a"], jnp.tensordot(w_eff, st_k["a"], 1)),
+                (tot.stats["b"], jnp.tensordot(w_eff, st_k["b"], 1)),
+                (tot.delta["w"], jnp.tensordot(w_eff, deltas["w"], 1)),
+                (tot.loss, jnp.dot(w_eff, losses)),
+                (tot.mass, jnp.sum(w_eff)),
+                (tot.count, jnp.sum(mask))]:
+            np.testing.assert_allclose(np.asarray(leaf), np.asarray(flat),
+                                       atol=1e-5)
+
+    @settings(deadline=None, max_examples=20)
+    @given(seed=st.integers(0, 10_000), horizon=st.integers(2, 6))
+    def test_fold_permutation_invariant(self, seed, horizon):
+        """Any arrival order folds to the same buffers: permuting the
+        contribution axis leaves the per-slot partial sums unchanged to
+        fp tolerance."""
+        rng = np.random.default_rng(seed)
+        st_k, deltas, losses, w_eff, mask = _random_contributions(rng)
+        delays = jnp.asarray(rng.integers(0, horizon, size=(8,)), jnp.int32)
+        perm = jnp.asarray(rng.permutation(8))
+        p_id = buffer_lib.dispatch_fold(
+            _zero_pending(horizon), st_k, deltas, losses, w_eff, mask,
+            delays)
+        p_perm = buffer_lib.dispatch_fold(
+            _zero_pending(horizon),
+            jax.tree.map(lambda x: x[perm], st_k),
+            jax.tree.map(lambda x: x[perm], deltas),
+            losses[perm], w_eff[perm], mask[perm], delays[perm])
+        assert utils.tree_max_abs_diff(p_id._asdict(),
+                                       p_perm._asdict()) < 1e-5
+
+    @settings(deadline=None, max_examples=20)
+    @given(seed=st.integers(0, 10_000), split=st.integers(1, 7))
+    def test_fold_linear_in_contribution_groups(self, seed, split):
+        """Folding a cohort in two dispatch groups == folding it in one:
+        the buffer fold is additive in contributions (linearity), so any
+        partition of arrivals yields the same state."""
+        horizon = 4
+        rng = np.random.default_rng(seed)
+        st_k, deltas, losses, w_eff, mask = _random_contributions(rng)
+        delays = jnp.asarray(rng.integers(0, horizon, size=(8,)), jnp.int32)
+        whole = buffer_lib.dispatch_fold(
+            _zero_pending(horizon), st_k, deltas, losses, w_eff, mask,
+            delays)
+        lo = slice(0, split)
+        hi = slice(split, 8)
+        parts = _zero_pending(horizon)
+        for sl in (lo, hi):
+            parts = buffer_lib.dispatch_fold(
+                parts, jax.tree.map(lambda x: x[sl], st_k),
+                jax.tree.map(lambda x: x[sl], deltas),
+                losses[sl], w_eff[sl], mask[sl], delays[sl])
+        assert utils.tree_max_abs_diff(whole._asdict(),
+                                       parts._asdict()) < 1e-5
+
+    def test_ring_pop_conserves_mass(self):
+        """Popping the ring moves slot 0 into the arrived buffer and
+        shifts the rest — nothing is created or lost."""
+        rng = np.random.default_rng(0)
+        st_k, deltas, losses, w_eff, mask = _random_contributions(rng)
+        delays = jnp.asarray(rng.integers(0, 4, size=(8,)), jnp.int32)
+        pending = buffer_lib.dispatch_fold(
+            _zero_pending(4), st_k, deltas, losses, w_eff, mask, delays)
+        total_before = _ring_total(pending)
+        buf = buffer_lib.init_state(
+            {"a": (4,), "b": (3, 2)}, {"w": jnp.zeros((5,))}, 4).buffer
+        for _ in range(4):
+            arrived, pending = buffer_lib.ring_pop(pending)
+            buf = buffer_lib.buffer_add(buf, arrived)
+        assert utils.tree_max_abs_diff(buf._asdict(),
+                                       total_before._asdict()) < 1e-6
+        assert float(jnp.abs(_ring_total(pending).mass)) == 0.0
+
+    def test_empty_buffer_aggregate_is_finite(self):
+        """Mass-floored renormalization: an empty (or outage-starved)
+        buffer aggregates to zeros, never NaN."""
+        state = buffer_lib.init_state({"a": (4,)}, {"w": jnp.zeros((5,))}, 3)
+        avg_stats, avg_delta, tau = buffer_lib.buffer_aggregate(state.buffer)
+        assert np.isfinite(np.asarray(avg_stats["a"])).all()
+        assert np.isfinite(np.asarray(avg_delta["w"])).all()
+        assert float(tau) == 0.0
+
+
+class TestStalenessRegistry:
+    def test_registered_weights(self):
+        tau = jnp.asarray([0.0, 3.0])
+        np.testing.assert_allclose(
+            buffer_lib.resolve_staleness("unit")(tau), [1.0, 1.0])
+        np.testing.assert_allclose(
+            buffer_lib.resolve_staleness("poly")(tau), [1.0, 0.5])
+        np.testing.assert_allclose(
+            buffer_lib.resolve_staleness("inv")(tau), [1.0, 0.25])
+        fn = lambda t: t * 0 + 2.0  # noqa: E731
+        assert buffer_lib.resolve_staleness(fn) is fn
+        with pytest.raises(ValueError, match="unknown staleness"):
+            buffer_lib.resolve_staleness("bogus")
+
+
+class TestLatencyModel:
+    def test_resolve_and_validate(self):
+        assert latency_lib.resolve_latency(None).kind == "zero"
+        assert latency_lib.resolve_latency("heavytail").horizon == 8
+        with pytest.raises(ValueError, match="unknown latency kind"):
+            latency_lib.resolve_latency("bogus")
+        with pytest.raises(ValueError, match="horizon must be >= 1"):
+            latency_lib.resolve_latency(latency_lib.LatencyModel(horizon=0))
+        with pytest.raises(ValueError, match="severity must be > 0"):
+            latency_lib.resolve_latency(
+                latency_lib.LatencyModel("heavytail", 4, tail=0.0))
+
+    def test_heavytail_delays_are_per_client_persistent(self):
+        """The same client id draws the same delay in every round — slow
+        clients are consistently slow (the straggler regime)."""
+        model = latency_lib.LatencyModel("heavytail", horizon=8, tail=0.7)
+        ids = jnp.arange(64, dtype=jnp.int32)
+        d1 = latency_lib.sample_delays(model, jax.random.PRNGKey(1), ids)
+        d2 = latency_lib.sample_delays(model, jax.random.PRNGKey(2), ids)
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+        assert int(d1.max()) > 0 and int(d1.min()) == 0
+        assert np.all((np.asarray(d1) >= 0) & (np.asarray(d1) < 8))
+
+    def test_zero_latency_sampler_keeps_sync_streams(self, toy):
+        """The async sampler's delay key is a fold_in side stream: batch
+        and sizes are bit-identical to the base sampler's."""
+        _, _, data, sizes = toy
+        base = _base_sampler(data, sizes)
+        asamp = latency_lib.make_async_sampler(base, None, COHORT)
+        k1, k2 = jax.random.PRNGKey(5), jax.random.PRNGKey(6)
+        b0, s0 = base(k1, k2)
+        b1, s1, delays = asamp(k1, k2)
+        assert utils.tree_max_abs_diff(b0, b1) == 0.0
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        assert np.all(np.asarray(delays) == 0)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+class TestFaultInjection:
+    def test_dropout_outage_under_stragglers_stays_finite(self, toy):
+        """Heavy-tail stragglers + a high-rate DropoutChannel outage: the
+        mass-floored buffer renormalization never NaNs, dropped clients
+        contribute neither mass nor K-trigger count, and wire bytes stay
+        truthful per contribution."""
+        params, apply, data, sizes = toy
+        lat = latency_lib.LatencyModel("heavytail", horizon=6, tail=0.9)
+        asamp = latency_lib.make_async_sampler(
+            _base_sampler(data, sizes), lat, COHORT)
+        eng, p1, m1 = _run(apply, params, asamp, rounds=10, async_k=3,
+                           staleness_fn="inv", latency=lat,
+                           channel=comm.DropoutChannel(0.8))
+        for leaf in jax.tree.leaves(p1):
+            assert np.isfinite(np.asarray(leaf)).all()
+        assert np.isfinite(np.asarray(m1.loss)).all()
+        assert np.isfinite(np.asarray(m1.staleness)).all()
+        assert np.all(np.asarray(m1.wire_bytes) >= 0.0)
+        buf = eng.buffer_state.buffer
+        for leaf in jax.tree.leaves(buf._asdict()):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+    def test_collapsing_hierarchy_composes_bit_identically(self, toy):
+        """An ideal (collapsing) two-level tree through the buffered
+        engine == the flat channel-less buffered engine — hierarchy
+        composes when its hops are exact."""
+        params, apply, data, sizes = toy
+        base = _base_sampler(data, sizes)
+        asamp = latency_lib.make_async_sampler(base, None, COHORT)
+        _, p0, _ = _run(apply, params, asamp, async_k=COHORT,
+                        async_collapse=False)
+        _, p1, _ = _run(apply, params, asamp, async_k=COHORT,
+                        async_collapse=False,
+                        channel=hierarchy.HierarchicalChannel(4))
+        assert utils.tree_max_abs_diff(p0, p1) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# build-time guards
+# ---------------------------------------------------------------------------
+
+class TestGuards:
+    def _cfg(self, **kw):
+        kw.setdefault("async_k", 4)
+        return EngineConfig(lam=LAM, **kw)
+
+    def _build(self, toy, sampler=None, **cfg_kw):
+        params, apply, data, sizes = toy
+        if sampler is None:
+            sampler = latency_lib.make_async_sampler(
+                _base_sampler(data, sizes), None, COHORT)
+        return RoundEngine(apply, opt_lib.adam(1e-2), sampler,
+                           self._cfg(**cfg_kw))
+
+    def test_plain_sampler_refused(self, toy):
+        params, apply, data, sizes = toy
+        with pytest.raises(ValueError, match="latency-aware sampler"):
+            self._build(toy, sampler=_base_sampler(data, sizes))
+
+    def test_latency_mismatch_refused(self, toy):
+        lat = latency_lib.LatencyModel("heavytail", horizon=6, tail=0.8)
+        with pytest.raises(ValueError, match="must agree"):
+            self._build(toy, latency=lat)     # sampler draws zero-latency
+
+    def test_async_k_out_of_range_refused(self, toy):
+        with pytest.raises(ValueError, match="async_k=9 must be in"):
+            self._build(toy, async_k=9)
+
+    def test_cohort_chunk_refused(self, toy):
+        with pytest.raises(ValueError, match="two schedulers"):
+            self._build(toy, cohort_chunk=4)
+
+    def test_cohort_axis_refused(self, toy):
+        with pytest.raises(ValueError, match="shard the cohort or buffer"):
+            self._build(toy, cohort_axis="data")
+
+    def test_stats_kernel_refused(self, toy):
+        with pytest.raises(ValueError, match="per-client payloads"):
+            self._build(toy, stats_kernel="interpret")
+
+    def test_non_stats_algorithm_refused(self, toy):
+        with pytest.raises(ValueError, match="two-phase stats round only"):
+            self._build(toy, algorithm="fedavg_cco")
+
+    def test_dp_channel_refused(self, toy):
+        with pytest.raises(ValueError, match="noise calibration"):
+            self._build(toy, channel=comm.get_channel("dp"))
+
+    def test_lossy_hierarchy_refused(self, toy):
+        ch = hierarchy.HierarchicalChannel(
+            4, client_channel=comm.QuantizedChannel(8))
+        assert not ch.collapses
+        with pytest.raises(ValueError, match="per-CLIENT contributions"):
+            self._build(toy, channel=ch)
+
+    def test_unknown_staleness_refused(self, toy):
+        with pytest.raises(ValueError, match="unknown staleness"):
+            self._build(toy, staleness_fn="bogus")
+
+
+class TestValidateFlags:
+    """PR-3 convention: no silently-ignored flags — every async flag
+    combination that cannot run is rejected with a tested message."""
+
+    def _validate(self, argv):
+        ap = train_lib.build_parser()
+        args = ap.parse_args(argv)
+        train_lib.validate_flags(ap, args)
+
+    def test_async_with_fused_mode_rejected(self):
+        with pytest.raises(SystemExit,
+                           match="runs strictly synchronous rounds"):
+            self._validate(["--async-k", "4", "--mode", "fused"])
+
+    def test_async_with_protocol_mode_rejected(self):
+        with pytest.raises(SystemExit,
+                           match="runs strictly synchronous rounds"):
+            self._validate(["--async-k", "4", "--mode", "protocol"])
+
+    def test_async_with_cohort_chunk_rejected(self):
+        with pytest.raises(SystemExit, match="two schedulers"):
+            self._validate(["--async-k", "4", "--cohort-chunk", "4"])
+
+    def test_async_with_dp_channel_rejected(self):
+        with pytest.raises(SystemExit, match="refuses --channel dp"):
+            self._validate(["--async-k", "4", "--channel", "dp"])
+
+    def test_async_with_stats_kernel_rejected(self):
+        with pytest.raises(SystemExit, match="never materializes"):
+            self._validate(["--async-k", "4", "--stats-kernel",
+                            "interpret"])
+
+    def test_async_k_out_of_range_rejected(self):
+        with pytest.raises(SystemExit, match=r"must be in \[1"):
+            self._validate(["--async-k", "20",
+                            "--clients-per-round", "16"])
+
+    def test_latency_tail_without_async_rejected(self):
+        with pytest.raises(SystemExit, match="would be silently ignored"):
+            self._validate(["--latency-tail", "0.5"])
+
+    def test_staleness_without_async_rejected(self):
+        with pytest.raises(SystemExit, match="would be silently ignored"):
+            self._validate(["--staleness", "poly"])
+
+    def test_valid_async_config_passes(self):
+        self._validate(["--async-k", "8", "--latency-tail", "0.7",
+                        "--staleness", "poly", "--channel", "int8"])

@@ -469,6 +469,76 @@ class TestEngineDrift:
         assert float(np.sum(np.asarray(ma.wire_bytes))) > 0
         assert float(np.sum(np.asarray(mb.wire_bytes))) > 0
 
+    def test_async_checkpoint_roundtrips_buffer_and_drift(self, toy,
+                                                          tmp_path):
+        """The buffered (async_k) engine's resume path: SCAFFOLD variates,
+        an int8 channel, heavy-tail stragglers AND a half-full staleness
+        buffer all checkpointed mid-run, restored, and resumed — the
+        resumed trajectory equals the uninterrupted one, and every buffer
+        field (ring partial sums, mass, K-trigger count, staleness
+        counters, applied_total) round-trips through the msgpack blob."""
+        from repro.checkpoint import restore_checkpoint
+        from repro.core import buffer as buffer_lib
+        from repro.data import latency as latency_lib
+        params, apply, data, sizes = toy
+        opt = opt_lib.sgd(0.1)
+        lat = latency_lib.LatencyModel("heavytail", horizon=4, tail=0.8)
+        sampler = latency_lib.make_async_sampler(
+            lambda k1, k2: (data, sizes), lat, 8)
+
+        def build():
+            cfg = round_engine.EngineConfig(
+                algorithm="dcco", lam=LAM, chunk_rounds=2, client_lr=0.05,
+                local_steps=2, scaffold=True, async_k=3,
+                staleness_fn="poly", latency=lat,
+                channel=comm.QuantizedChannel(8))
+            return round_engine.RoundEngine(apply, opt, sampler, cfg)
+
+        rng = jax.random.PRNGKey(17)
+        eng_ref = build()
+        p_ref, s_ref, m_ref = eng_ref.run(params, opt.init(params), rng, 6)
+
+        eng_a = build()
+        pa, sa, ma = eng_a.run(params, opt.init(params), rng, 4,
+                               ckpt_dir=str(tmp_path), ckpt_every=2,
+                               ckpt_name="async_ch")
+        tmpl = {"params": params, "opt": opt.init(params),
+                "drift": scaffold_init(params, 8),
+                "buffer": jax.tree.map(jnp.zeros_like, eng_a.buffer_state)}
+        blob, step = restore_checkpoint(str(tmp_path / "async_ch.msgpack"),
+                                        tmpl)
+        assert step == 4
+        assert isinstance(blob["buffer"], buffer_lib.AsyncState)
+        restored, live = blob["buffer"], eng_a.buffer_state
+        assert utils.tree_max_abs_diff(restored.buffer._asdict(),
+                                       live.buffer._asdict()) < 1e-7
+        assert utils.tree_max_abs_diff(restored.pending._asdict(),
+                                       live.pending._asdict()) < 1e-7
+        assert int(restored.applied_total) == int(live.applied_total)
+        # heavy-tail delays leave REAL in-flight mass at the cut — the
+        # round-trip above is not vacuously comparing zeros
+        assert float(jnp.sum(restored.pending.mass)) > 0.0
+
+        eng_b = build()
+        pb, sb, mb = eng_b.run(blob["params"], blob["opt"], rng, 2,
+                               start_round=step, drift_state=blob["drift"],
+                               buffer_state=blob["buffer"])
+        assert utils.tree_max_abs_diff(pb, p_ref) < 1e-6
+        assert utils.tree_max_abs_diff(eng_b.drift_state.c,
+                                       eng_ref.drift_state.c) < 1e-6
+        assert int(eng_b.buffer_state.applied_total) == \
+            int(eng_ref.buffer_state.applied_total)
+        assert utils.tree_max_abs_diff(
+            eng_b.buffer_state.buffer._asdict(),
+            eng_ref.buffer_state.buffer._asdict()) < 1e-6
+        np.testing.assert_allclose(np.asarray(mb.loss),
+                                   np.asarray(m_ref.loss)[4:], rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(mb.applied),
+                                      np.asarray(m_ref.applied)[4:])
+        assert float(np.sum(np.asarray(ma.wire_bytes))) > 0
+        assert float(np.sum(np.asarray(mb.wire_bytes))) > 0
+
     def test_fedavg_body_supports_scaffold(self, toy):
         params, apply, data, sizes = toy
         su = get_server_update("fedadam", server_lr=0.05)
