@@ -29,6 +29,18 @@ cancels machine speed and isolates what this repo controls:
     ``--max-regress`` below the baseline's, and fails HARD (regardless of
     the baseline) if the buffered engine ever stops beating the sync scan
     (ratio <= 1.0) — the buffered path's reason to exist.
+  * mips fused memory — XLA's compiled temp-allocation bytes for the
+    naive materialize-then-top_k program over the fused MIPS scan
+    (``retrieval_serving/naive_temp_bytes`` /
+    ``retrieval_serving/fused_temp_bytes``), same compiler + process.
+    Fails on regression past ``--max-regress``, and fails HARD if the
+    fused path's temps ever reach the (Q, N) score-matrix bytes
+    (``retrieval_serving/score_matrix_bytes``) — materializing the score
+    matrix is the failure mode the kernel exists to avoid.
+  * mips roofline fraction — the fused search's achieved fraction of the
+    analytic bound (costmodel.mips_cost) evaluated at THIS machine's
+    calibrated peaks (``retrieval_serving/roofline_fraction_pct``); both
+    the calibration and the measurement come from the same process.
   * streaming overhead — the streamed round (``population_scale/
     streaming_c{N}``) over the materialized round (``population_scale/
     materialized_c{N}``) at the largest cohort N both paths ran: the
@@ -101,6 +113,30 @@ def async_speedup(rows: dict, which: str) -> float:
         raise SystemExit(f"bad buffered_ticks_per_update value {buf} "
                          f"in {which}")
     return sync / buf
+
+
+def mips_memory_ratio(rows: dict, which: str):
+    """(naive_temp / fused_temp, fused_temp, score_matrix_bytes) from the
+    retrieval_serving compiled-memory rows: XLA's own temp-allocation plan
+    for the naive materialize-then-top_k program vs the fused MIPS scan,
+    same compiler, same process — machine-portable by construction."""
+    naive = _us(rows, "retrieval_serving/naive_temp_bytes", which,
+                "retrieval_serving")
+    fused = _us(rows, "retrieval_serving/fused_temp_bytes", which,
+                "retrieval_serving")
+    score = _us(rows, "retrieval_serving/score_matrix_bytes", which,
+                "retrieval_serving")
+    if fused <= 0 or score <= 0:
+        raise SystemExit(
+            f"bad retrieval_serving memory rows in {which} (fused_temp="
+            f"{fused}, score_matrix={score}) — compiled memory analysis "
+            f"was unavailable when BENCH.json was produced")
+    return naive / fused, fused, score
+
+
+def mips_roofline_fraction(rows: dict, which: str) -> float:
+    return _us(rows, "retrieval_serving/roofline_fraction_pct", which,
+               "retrieval_serving")
 
 
 def streaming_overhead(rows: dict, which: str) -> float:
@@ -190,6 +226,33 @@ def main(argv=None) -> int:
     elif asp_new < afloor:
         print("FAIL: buffered-engine straggler speedup regressed past "
               "the gate")
+        failed = True
+
+    mr_new, fused_new, score_new = mips_memory_ratio(new,
+                                                     "the new BENCH.json")
+    mr_base, _, _ = mips_memory_ratio(base, "the baseline")
+    mfloor = mr_base * (1.0 - args.max_regress)
+    print(f"mips fused-vs-naive compiled temp memory: baseline "
+          f"{mr_base:.2f}x, new {mr_new:.2f}x, floor {mfloor:.2f}x")
+    if fused_new >= score_new:
+        print(f"FAIL: the fused MIPS search's compiled temp allocation "
+              f"({fused_new:.0f} B) reached the (Q, N) score-matrix size "
+              f"({score_new:.0f} B) — the kernel materialized the score "
+              f"matrix it exists to avoid")
+        failed = True
+    elif mr_new < mfloor:
+        print("FAIL: the fused MIPS search's memory advantage over the "
+              "naive program regressed past the gate")
+        failed = True
+
+    rf_new = mips_roofline_fraction(new, "the new BENCH.json")
+    rf_base = mips_roofline_fraction(base, "the baseline")
+    rffloor = rf_base * (1.0 - args.max_regress)
+    print(f"mips calibrated fraction-of-roofline: baseline "
+          f"{rf_base:.1f}%, new {rf_new:.1f}%, floor {rffloor:.1f}%")
+    if rf_new < rffloor:
+        print("FAIL: the fused MIPS search fell further below this "
+              "machine's calibrated roofline than the gate allows")
         failed = True
 
     so_new = streaming_overhead(new, "the new BENCH.json")

@@ -321,6 +321,29 @@ def decode_cost(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool) -> Cost
         "model_flops_6nd": 2.0 * counts["active"] * b / chips})
 
 
+def mips_cost(qn: int, n: int, d: int, k: int, *,
+              store_bytes: int = F32) -> Cost:
+    """Analytic cost of fused MIPS top-k serving (kernels/mips_topk.py):
+    the (Q, d) x (d, N) score matmul (2*Q*N*d FLOPs) plus the running
+    top-k's k select rounds over every score tile (~Q*N*k compare/select
+    ops). HBM traffic is the FUSED path's: the corpus is read once
+    (``store_bytes`` per element — 2 for a bf16 index), queries once, and
+    only the (Q, k) results are written; the naive path's extra
+    write+read round-trip of the (Q, N) score matrix is recorded in
+    ``notes["naive_hbm_bytes"]``, which is what the fused kernel's
+    memory win is measured against."""
+    flops = 2.0 * qn * n * d + 1.0 * qn * n * k
+    out_bytes = qn * k * (F32 + 4)               # values f32 + indices i32
+    fused = n * d * store_bytes + qn * d * F32 + out_bytes
+    score = 1.0 * qn * n * F32
+    return Cost(flops, fused, 0.0, {
+        "naive_hbm_bytes": fused + 2.0 * score,  # write + re-read (Q, N)
+        "score_matrix_bytes": score,
+        "intensity_fused": flops / fused,
+        "intensity_naive": flops / (fused + 2.0 * score),
+    })
+
+
 def shape_cost(cfg: ModelConfig, shape_name: str, *, multi_pod: bool,
                de_proj=(1024, 1024, 1024)) -> Cost:
     shape = INPUT_SHAPES[shape_name]

@@ -25,12 +25,18 @@ microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
                     update strategy (fedavg_sgd / fedavgm / fedadam /
                     fedyogi / fedadam+scaffold), probe accuracy per cell
                     (repro.server).
-  roofline        — emits the analytic roofline rows (see roofline.py).
+  retrieval_serving— fused MIPS top-k serving vs the naive materialize-
+                    then-top_k program: compiled temp memory (gated),
+                    calibrated fraction-of-roofline (gated), QueryServer
+                    qps/p50/p99 vs corpus size.
+  roofline        — emits the analytic roofline rows (see roofline.py),
+                    including the MIPS serving shapes.
 
 Set ``BENCH_SMOKE=1`` to shrink the timed sweeps to CI-smoke sizes (the
 bench-regression gate in CI runs ``round_engine`` + ``comm_sweep`` +
-``objective_sweep`` + ``stats_kernel`` + ``population_scale`` this way
-and compares against benchmarks/baseline.json via compare.py).
+``objective_sweep`` + ``stats_kernel`` + ``population_scale`` +
+``retrieval_serving`` this way and compares against
+benchmarks/baseline.json via compare.py).
 
 All model-scale numbers are CPU-host timings of reduced configs — relative
 comparisons only; absolute TPU numbers come from the §Roofline analysis.
@@ -786,6 +792,110 @@ def dvicreg_bench(rounds=20):
          f"probe={acc:.3f}(init={acc0:.3f});loss={float(m.loss):.2f}")
 
 
+def retrieval_serving(qn=64, n=4096, d=64, k=10,
+                      corpus_sizes=(1024, 4096, 16384), serve_batches=20):
+    """Retrieval serving: the fused MIPS top-k path vs the naive
+    materialize-then-top_k program, plus QueryServer throughput/latency
+    vs corpus size.
+
+    Three row groups, two of them gated (benchmarks/compare.py):
+
+      * compiled memory — XLA's own allocation plan (temp bytes) for both
+        programs at the bench shape (Q=64, N=4096). The naive program
+        materializes the (Q, N) f32 score matrix (temp >= Q*N*4 bytes);
+        the fused path scans the corpus in chunks and keeps only the
+        running (Q, k) state. GATED: the naive/fused temp ratio must not
+        regress, and the fused temp must stay strictly under the score-
+        matrix bytes (the subsystem's reason to exist) — both sides come
+        from the same compiler in the same process, so the ratio is
+        machine-portable.
+      * calibrated fraction-of-roofline — the fused search's measured
+        time vs the analytic bound (costmodel.mips_cost) evaluated with
+        THIS machine's calibrated peaks (an in-process jitted matmul for
+        flops/s, a big-array copy for bytes/s). GATED as a ratio of two
+        same-process measurements; the TPU-spec analytic row rides along
+        informationally.
+      * QueryServer qps/p50/p99 vs corpus size — informational; the
+        serving numbers a dashboard would track.
+    """
+    from benchmarks import costmodel
+    from repro.kernels.mips_topk import mips_topk_chunked
+    from repro.launch.mesh import HardwareSpec as HW
+    from repro.retrieval import CorpusIndex, QueryServer, l2_normalize
+    key = jax.random.PRNGKey(0)
+    q = l2_normalize(jax.random.normal(key, (qn, d), jnp.float32))
+    c = l2_normalize(jax.random.normal(jax.random.PRNGKey(1), (n, d),
+                                       jnp.float32))
+    naive = jax.jit(lambda q, c: jax.lax.top_k(q @ c.T, k))
+    fused = jax.jit(lambda q, c: mips_topk_chunked(q, c, k=k, chunk=512))
+
+    def temp_bytes(fn):
+        """XLA's compiled temp allocation; degrades to 0 with a stderr
+        notice on jax-version drift (the gate then fails loudly rather
+        than the memory evidence vanishing silently)."""
+        try:
+            mem = fn.lower(q, c).compile().memory_analysis()
+            return int(mem.temp_size_in_bytes)
+        except Exception as e:  # pragma: no cover - jax-version drift
+            print(f"retrieval_serving: compiled memory analysis "
+                  f"unavailable ({type(e).__name__}: {e})", file=sys.stderr)
+            return 0
+
+    score_b = qn * n * 4
+    naive_b, fused_b = temp_bytes(naive), temp_bytes(fused)
+    emit("retrieval_serving/score_matrix_bytes", float(score_b),
+         f"q{qn}_n{n}_d{d}_k{k}")
+    emit("retrieval_serving/naive_temp_bytes", float(naive_b),
+         f"materializes_QN={naive_b >= score_b}")
+    emit("retrieval_serving/fused_temp_bytes", float(fused_b),
+         f"naive_vs_fused={naive_b / max(fused_b, 1):.2f}x;"
+         f"of_score_matrix={fused_b / score_b:.3f}")
+
+    us_naive = _timeit(lambda: naive(q, c), n=10)
+    us_fused = _timeit(lambda: fused(q, c), n=10)
+    emit("retrieval_serving/naive_search", us_naive, f"q{qn}_n{n}_d{d}_k{k}")
+    emit("retrieval_serving/fused_search", us_fused,
+         f"fused_vs_naive_time={us_fused / us_naive:.2f}x")
+
+    # calibrate this machine's achievable peaks in-process, then score the
+    # fused search against the analytic bound at those peaks
+    mm_dim = 1024
+    a = jax.random.normal(key, (mm_dim, mm_dim), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (mm_dim, mm_dim),
+                          jnp.float32)
+    matmul = jax.jit(lambda a, b: a @ b)
+    flops_s = 2.0 * mm_dim ** 3 / (_timeit(lambda: matmul(a, b), n=10) / 1e6)
+    big = jnp.zeros((16, 1 << 20), jnp.float32)          # 64 MB
+    copy = jax.jit(lambda x: x * 1.0000001)
+    bytes_s = 2.0 * big.nbytes / (_timeit(lambda: copy(big), n=10) / 1e6)
+    cost = costmodel.mips_cost(qn, n, d, k)
+    bound_us = max(cost.flops_dev / flops_s,
+                   cost.hbm_bytes_dev / bytes_s) * 1e6
+    emit("retrieval_serving/roofline_fraction_pct",
+         100.0 * bound_us / us_fused,
+         f"bound_us={bound_us:.1f};calib_gflops={flops_s / 1e9:.1f};"
+         f"calib_GBps={bytes_s / 1e9:.1f}")
+    ro = cost.roofline()
+    emit("retrieval_serving/analytic_tpu_bound",
+         ro["step_s_lower_bound"] * 1e6,
+         f"dom={ro['dominant']};intensity={cost.notes['intensity_fused']:.1f};"
+         f"spec={HW.PEAK_FLOPS_BF16 / 1e12:.0f}TF")
+
+    qkey = jax.random.PRNGKey(3)
+    qpool = l2_normalize(jax.random.normal(qkey, (serve_batches, 64, d),
+                                           jnp.float32))
+    for nn in corpus_sizes:
+        idx = CorpusIndex(l2_normalize(jax.random.normal(
+            jax.random.fold_in(qkey, nn), (nn, d), jnp.float32)))
+        srv = QueryServer(idx, k=k, batch=64).warmup()
+        for i in range(serve_batches):
+            srv.query(qpool[i])
+        s = srv.stats()
+        emit(f"retrieval_serving/qserver_n{nn}", s["p50_us"],
+             f"qps={s['qps']:.0f};p99_us={s['p99_us']:.0f};"
+             f"batches={s['batches']}")
+
+
 def roofline_bench():
     rows = roofline_mod.build_table()
     doms = {}
@@ -796,6 +906,12 @@ def roofline_bench():
              f"dom={r['dominant']};useful={r['useful_ratio']:.2f}")
     emit("roofline/summary", 0.0,
          ";".join(f"{k}={v}" for k, v in sorted(doms.items())))
+    for r in roofline_mod.build_mips_table():
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             r["step_lower_bound_s"] * 1e6,
+             f"dom={r['dominant']};"
+             f"fused_vs_naive_bound={r['fused_vs_naive_bound']:.2f}x;"
+             f"intensity={r['intensity_fused']:.1f}")
 
 
 BENCHES = {
@@ -813,6 +929,7 @@ BENCHES = {
     "dvicreg": dvicreg_bench,
     "objective_sweep": objective_sweep,
     "population_scale": population_scale,
+    "retrieval_serving": retrieval_serving,
     "roofline": roofline_bench,
 }
 
@@ -834,6 +951,9 @@ SMOKE_KW = {
     # check that mega-cohorts actually fit on a shared CPU runner
     "population_scale": {"rounds": 2, "cohorts": (64, 256, 4096),
                          "chunk": 64, "materialize_max": 256},
+    # the gated memory + roofline-fraction rows keep the full bench shape
+    # (the Q=64 x N=4096 acceptance size); only the latency sweep shrinks
+    "retrieval_serving": {"corpus_sizes": (1024, 4096), "serve_batches": 8},
 }
 
 

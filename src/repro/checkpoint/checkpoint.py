@@ -42,6 +42,22 @@ def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
     os.replace(tmp, path)
 
 
+def restore_checkpoint_flat(path: str):
+    """Templateless restore: ``({path: np.ndarray}, step)`` keyed by the
+    '/'-joined tree paths the checkpoint was saved with. For consumers that
+    own their layout (e.g. ``repro.retrieval.CorpusIndex``) and can rebuild
+    structure from the keys — ``restore_checkpoint`` stays the API when a
+    ``like`` template tree exists."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat = {
+        p: np.frombuffer(rec["data"],
+                         dtype=rec["dtype"]).reshape(rec["shape"])
+        for p, rec in zip(payload["paths"], payload["leaves"])
+    }
+    return flat, payload["step"]
+
+
 def restore_checkpoint(path: str, like: Any, shardings: Optional[Any] = None):
     """Restore into the structure of `like`; optionally device_put onto
     matching shardings (same treedef)."""

@@ -30,6 +30,44 @@ def ridge_linear_probe(train_z, train_y, test_z, test_y, num_classes: int,
     return (pred == test_y).mean()
 
 
+def recall_at_k(retrieved_relevant, ks=(1, 5, 10)):
+    """Recall@k over a (Q, K) boolean relevance matrix of ranked retrievals
+    (column j = "the rank-j item is relevant to query i"). Returns
+    {k: fraction of queries with >= 1 relevant item in the top k} as f32
+    scalars. Every k must be <= K — silently truncated recall would read
+    as a real score."""
+    rel = jnp.asarray(retrieved_relevant)
+    for k in ks:
+        if k > rel.shape[1]:
+            raise ValueError(f"recall@{k} needs >= {k} ranked items, "
+                             f"got {rel.shape[1]}")
+    return {k: jnp.any(rel[:, :k], axis=1).astype(F32).mean() for k in ks}
+
+
+def mean_reciprocal_rank(retrieved_relevant):
+    """MRR over a (Q, K) boolean relevance matrix of ranked retrievals:
+    mean of 1/rank of each query's FIRST relevant item (0 contribution for
+    queries with none in the top K)."""
+    rel = jnp.asarray(retrieved_relevant)
+    first = jnp.argmax(rel, axis=1)                 # first True (0 if none)
+    found = jnp.any(rel, axis=1)
+    return jnp.where(found, 1.0 / (first.astype(F32) + 1.0), 0.0).mean()
+
+
+def retrieval_metrics(retrieved_idx, query_labels, corpus_labels,
+                      ks=(1, 5, 10)):
+    """Label-match retrieval quality of a ranked (Q, K) index matrix.
+
+    An item is relevant to a query when their labels agree — the protocol
+    of the paper's deployed use case (class-mate retrieval on the synthetic
+    benchmarks). Returns {"recall_at_<k>": ..., "mrr": ...} f32 scalars;
+    MRR is computed within the K retrieved ranks."""
+    rel = corpus_labels[retrieved_idx] == query_labels[:, None]
+    out = {f"recall_at_{k}": v for k, v in recall_at_k(rel, ks).items()}
+    out["mrr"] = mean_reciprocal_rank(rel)
+    return out
+
+
 def knn_probe(train_z, train_y, test_z, test_y, k: int = 5,
               num_classes: int = None):
     """Cosine k-NN accuracy — second, parameter-free probe.

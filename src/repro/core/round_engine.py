@@ -128,6 +128,16 @@ class EngineConfig(NamedTuple):
                                     # bit-identical baselines, same idiom as
                                     # HierarchicalChannel.collapse_ideal;
                                     # False forces the real buffered path
+    # --- periodic retrieval eval (repro.retrieval) ---
+    retrieval_eval: Any = None      # traceable params -> {metric: scalar}
+                                    # (repro.retrieval.make_retrieval_eval:
+                                    # recall@k / MRR on a held-out corpus);
+                                    # runs INSIDE the scan body so the
+                                    # whole experiment stays one program
+    retrieval_every: int = 1        # evaluate on rounds where
+                                    # round % retrieval_every == 0; skipped
+                                    # rounds emit NaN (lax.cond, so the
+                                    # encoder FLOPs are actually skipped)
 
 
 class EngineCarry(NamedTuple):
@@ -152,6 +162,10 @@ class EngineMetrics(NamedTuple):
                                     # buffered engine applies on K-triggers)
     staleness: jnp.ndarray = 0.0    # mean staleness (ticks) of the applied
                                     # aggregate, 0 when no update applied
+    retrieval: Any = ()             # {"recall_at_k": (rounds,), "mrr":
+                                    # (rounds,)} when EngineConfig.
+                                    # retrieval_eval is set (NaN on rounds
+                                    # the periodic eval skipped), else {}
 
 
 # ---------------------------------------------------------------------------
@@ -751,6 +765,16 @@ class RoundEngine:
         if config.chunk_rounds < 1:
             raise ValueError(
                 f"chunk_rounds must be >= 1, got {config.chunk_rounds}")
+        if config.retrieval_every < 1:
+            raise ValueError(
+                f"retrieval_every must be >= 1, got {config.retrieval_every}")
+        if config.retrieval_eval is not None and \
+                not callable(config.retrieval_eval):
+            raise ValueError(
+                "retrieval_eval must be a traceable params -> {metric: "
+                "scalar} callable (repro.retrieval.make_retrieval_eval)")
+        self._retrieval_template = None  # eval_shape of retrieval_eval,
+                                         # resolved lazily on first run()
         self.config = config
         self.sampler = sampler
         self.drift_state = None      # final drift carry of the last run()
@@ -852,16 +876,36 @@ class RoundEngine:
                 params, opt_state, drift, m = self.round_fn(
                     c.params, c.opt_state, c.drift, batch, sizes, k_ch)
                 applied, stale = jnp.ones((), F32), jnp.zeros((), F32)
+            rmet = self._retrieval_metrics(params, r)
             return (EngineCarry(params, opt_state, c.rng, drift, buffer),
                     EngineMetrics(m.loss, m.encoding_std,
                                   jnp.asarray(m.wire_bytes, F32),
-                                  applied, stale))
+                                  applied, stale, rmet))
 
         unroll = self.config.scan_unroll or (
             8 if jax.default_backend() == "cpu" else 1)
         xs = start + jnp.arange(num_rounds)
         return jax.lax.scan(body, carry, xs,
                             unroll=min(unroll, num_rounds))
+
+    def _retrieval_metrics(self, params, r):
+        """The periodic in-scan retrieval eval on round ``r``'s params: the
+        configured eval on rounds hitting the cadence, a NaN-filled
+        template otherwise (lax.cond — the skipped branch costs nothing at
+        runtime). () when no retrieval eval is configured."""
+        eval_fn = self.config.retrieval_eval
+        if eval_fn is None:
+            return ()
+
+        def run_eval(p):
+            return jax.tree.map(lambda x: jnp.asarray(x, F32), eval_fn(p))
+
+        def skip_eval(_p):
+            return jax.tree.map(lambda s: jnp.full(s.shape, jnp.nan, F32),
+                                self._retrieval_template)
+
+        return jax.lax.cond((r % self.config.retrieval_every) == 0,
+                            run_eval, skip_eval, params)
 
     def _segment_fn(self, num_rounds: int):
         if num_rounds == self.config.chunk_rounds:
@@ -896,6 +940,12 @@ class RoundEngine:
         seg_metrics)`` fires after each segment; checkpoints are written at
         the first segment boundary at or past each ``ckpt_every`` multiple.
 
+        With ``EngineConfig.retrieval_eval`` the returned (and per-segment)
+        ``EngineMetrics.retrieval`` dict carries per-round recall@k / MRR
+        (NaN on rounds the ``retrieval_every`` cadence skipped) — computed
+        in-scan on the post-update params, alongside whatever probe the
+        ``on_segment`` callback runs.
+
         With ``EngineConfig.scaffold``, the control variates ride the scan
         carry: pass ``drift_state=`` to resume from saved variates (zeros
         otherwise — the cohort size is inferred from the sampler via
@@ -916,6 +966,14 @@ class RoundEngine:
         retained references raise "Array has been deleted" later. The
         segment metrics are not donated and are safe to keep.
         """
+        if self.config.retrieval_eval is not None and \
+                self._retrieval_template is None:
+            # metric names/shapes of the periodic eval (no FLOPs) — the
+            # NaN template the scan emits on skipped rounds
+            self._retrieval_template = jax.eval_shape(
+                lambda p: jax.tree.map(lambda x: jnp.asarray(x, F32),
+                                       self.config.retrieval_eval(p)),
+                params)
         drift = () if drift_state is None else drift_state
         if self.config.scaffold and drift_state is None:
             shapes = jax.eval_shape(
@@ -939,7 +997,10 @@ class RoundEngine:
                 carry, jnp.asarray(start_round + done, jnp.int32))
             done += seg
             for col, v in zip(cols, m):
-                col.append(jnp.asarray(v, F32))
+                # the retrieval field is a dict of per-round arrays (or ()
+                # when unused); everything else is a plain (seg,) array
+                col.append(v if isinstance(v, (dict, tuple))
+                           else jnp.asarray(v, F32))
             round_end = start_round + done
             if on_segment is not None:
                 on_segment(round_end, carry, m)
@@ -958,7 +1019,16 @@ class RoundEngine:
         if self.config.channel is not None:
             # host-side bookkeeping (e.g. the DP epsilon accountant)
             self.config.channel.finalize_rounds(done)
-        metrics = EngineMetrics(*[
-            jnp.concatenate(col) if col else jnp.zeros((0,))
-            for col in cols])
+        fields = []
+        for name, col in zip(EngineMetrics._fields, cols):
+            if name == "retrieval":
+                if col and isinstance(col[0], dict):
+                    fields.append({k: jnp.concatenate([c[k] for c in col])
+                                   for k in col[0]})
+                else:
+                    fields.append({})
+            else:
+                fields.append(jnp.concatenate(col) if col
+                              else jnp.zeros((0,)))
+        metrics = EngineMetrics(*fields)
         return carry.params, carry.opt_state, metrics

@@ -45,6 +45,22 @@ def segment_sum_ref(rows, seg_ids, num_segments: int, weights=None):
     return jax.ops.segment_sum(rows, seg_ids, num_segments=num_segments)
 
 
+def mips_topk_ref(q, corpus, k: int):
+    """Naive maximum-inner-product top-k — the oracle for ``mips_topk``.
+
+    Materializes the full (Q, N) score matrix (one f32 dot per element,
+    full depth — the same contraction the kernel computes per tile) and
+    ranks it with ``jax.lax.top_k``, whose stable sort breaks ties toward
+    the lowest corpus index — the order the kernel's lowest-index-first
+    selection reproduces bit-for-bit. Returns ((Q, k) f32, (Q, k) i32).
+    """
+    s = jax.lax.dot_general(q.astype(F32), corpus.astype(F32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)
+    vals, idxs = jax.lax.top_k(s, k)
+    return vals, idxs.astype(jnp.int32)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         scale: float | None = None):
     """q: (B,H,Sq,Dh), k/v: (B,KVH,Skv,Dh) -> (B,H,Sq,Dh).

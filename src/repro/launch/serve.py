@@ -9,6 +9,16 @@ architecture, runnable on CPU with smoke configs.
 pretrained tower, pass ``--ckpt /path/to/<arch>.msgpack`` — a checkpoint
 written by ``launch/train.py`` / the round engine's segment checkpointing;
 it is restored via ``repro.checkpoint.restore_checkpoint`` before prefill.
+
+``--retrieval`` switches to the dual-encoder serving path instead (paper
+Sec. 1's deployed use case): build a ``repro.retrieval.CorpusIndex`` per
+``--corpus-sizes`` entry (chunked encode, O(chunk) activations), answer
+batched top-k queries through the fused MIPS search behind a
+``QueryServer``, and report queries/sec and p50/p99 latency vs corpus
+size:
+
+  PYTHONPATH=src python -m repro.launch.serve --retrieval \\
+      --corpus-sizes 512,2048 --serve-batches 8
 """
 from __future__ import annotations
 
@@ -19,9 +29,54 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import restore_checkpoint
-from repro.configs.base import get_config
+from repro.configs.base import DualEncoderConfig, get_config
 from repro.launch import steps as steps_lib
 from repro.models import transformer
+
+
+def run_retrieval(args) -> None:
+    """Retrieval serving: index build + QueryServer latency sweep."""
+    from repro.data import synthetic
+    from repro.models import dual_encoder
+    from repro.retrieval import CorpusIndex, QueryServer, l2_normalize
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    de = DualEncoderConfig(proj_dims=(64, 64))
+    key = jax.random.PRNGKey(args.seed)
+    params = dual_encoder.init_dual_encoder(key, cfg, de)
+    if args.ckpt:
+        blob, step = restore_checkpoint(args.ckpt, {"params": params})
+        params = blob["params"]
+        print(f"restored dual encoder from {args.ckpt} @ {step}")
+
+    def embed(p, batch):
+        z, _ = dual_encoder.encode(cfg, de, p, batch)
+        return z
+
+    sizes = [int(s) for s in args.corpus_sizes.split(",")]
+    max_n = max(sizes)
+    toks, _ = synthetic.synthetic_labeled_tokens(
+        max_n, 4, args.prompt_len, vocab=cfg.vocab_size, seed=args.seed)
+    qtoks, _ = synthetic.synthetic_labeled_tokens(
+        args.batch * args.serve_batches, 4, args.prompt_len,
+        vocab=cfg.vocab_size, seed=args.seed + 1)
+    qz = l2_normalize(embed(params, {"tokens": jnp.asarray(qtoks)}))
+    print(f"retrieval serving: {args.arch} d={qz.shape[1]} "
+          f"k={args.k} batch={args.batch}")
+    for n in sizes:
+        t0 = time.time()
+        idx = CorpusIndex.build(embed, params,
+                                {"tokens": jnp.asarray(toks[:n])},
+                                chunk=min(256, n))
+        jax.block_until_ready(idx.embeddings)
+        t_build = time.time() - t0
+        srv = QueryServer(idx, k=args.k, batch=args.batch).warmup()
+        for i in range(args.serve_batches):
+            srv.query(qz[i * args.batch:(i + 1) * args.batch])
+        s = srv.stats()
+        print(f"  corpus {n:6d}: built {t_build:6.2f}s | "
+              f"qps={s['qps']:8.0f} p50={s['p50_us']:7.0f}us "
+              f"p99={s['p99_us']:7.0f}us ({s['batches']} batches)")
 
 
 def main():
@@ -34,8 +89,25 @@ def main():
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--retrieval", action="store_true",
+                    help="serve dual-encoder retrieval (CorpusIndex + "
+                         "fused MIPS QueryServer) instead of generative "
+                         "decode; reports qps and p50/p99 latency per "
+                         "--corpus-sizes entry")
+    ap.add_argument("--corpus-sizes", default="512,2048",
+                    help="comma-separated corpus sizes for --retrieval")
+    ap.add_argument("--serve-batches", type=int, default=8,
+                    help="timed query batches per corpus size "
+                         "(--retrieval)")
+    ap.add_argument("--k", type=int, default=10,
+                    help="retrieved neighbours per query (--retrieval)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.retrieval:
+        if args.batch == ap.get_default("batch"):
+            args.batch = 16        # a serving batch, not a decode batch
+        return run_retrieval(args)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(args.seed)

@@ -110,6 +110,30 @@ def validate_flags(ap, args) -> None:
         _forbid_ignored_flags(
             ap, args, ["stats_kernel", "chunk_rounds", "cohort_chunk"],
             f"--mode {args.mode} does not run the scan engine")
+    if args.retrieval_eval:
+        if args.mode != "engine":
+            raise SystemExit(
+                f"--retrieval-eval runs inside the scan engine's round "
+                f"loop; --mode {args.mode} has no in-scan eval slot — "
+                f"use --mode engine")
+        if args.retrieval_every < 1:
+            raise SystemExit(f"--retrieval-every {args.retrieval_every} "
+                             f"must be >= 1")
+        if args.retrieval_corpus < 10:
+            raise SystemExit(
+                f"--retrieval-corpus {args.retrieval_corpus} is smaller "
+                f"than the largest reported cutoff (recall@10)")
+        held_out = args.retrieval_corpus + args.retrieval_queries
+        if held_out > args.dataset_size:
+            raise SystemExit(
+                f"--retrieval-corpus {args.retrieval_corpus} + "
+                f"--retrieval-queries {args.retrieval_queries} = "
+                f"{held_out} exceeds --dataset-size {args.dataset_size}")
+    else:
+        _forbid_ignored_flags(
+            ap, args, ["retrieval_every", "retrieval_corpus",
+                       "retrieval_queries", "retrieval_dtype"],
+            "retrieval flags configure the --retrieval-eval loop")
     if args.async_k:
         if args.mode != "engine":
             raise SystemExit(
@@ -292,6 +316,26 @@ def build_parser() -> argparse.ArgumentParser:
                          "of the persistent per-client arrival-delay "
                          "distribution, repro.data.latency); 0 = every "
                          "contribution arrives the tick it was dispatched")
+    ap.add_argument("--retrieval-eval", action="store_true",
+                    help="periodic in-training retrieval eval "
+                         "(repro.retrieval): encode a held-out corpus + "
+                         "query split with the current params each "
+                         "--retrieval-every rounds (inside the scan, via "
+                         "the fused MIPS top-k search) and report "
+                         "recall@{1,5,10} / MRR alongside the probe "
+                         "(engine mode)")
+    ap.add_argument("--retrieval-every", type=int, default=5,
+                    help="rounds between in-scan retrieval evals "
+                         "(--retrieval-eval); skipped rounds emit NaN")
+    ap.add_argument("--retrieval-corpus", type=int, default=256,
+                    help="held-out items indexed as the retrieval corpus")
+    ap.add_argument("--retrieval-queries", type=int, default=64,
+                    help="held-out query items scored against the corpus")
+    ap.add_argument("--retrieval-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="storage dtype of the in-eval corpus embeddings "
+                         "(bfloat16 halves index residency; scores still "
+                         "accumulate in f32)")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients-per-round", type=int, default=16)
     ap.add_argument("--samples-per-client", type=int, default=2)
@@ -423,6 +467,26 @@ def main():
             latency = latency_lib.LatencyModel(
                 "heavytail", horizon=8, tail=args.latency_tail,
                 seed=args.seed)
+        retrieval_eval = None
+        if args.retrieval_eval:
+            from repro import retrieval as retrieval_lib
+            leaf = "images" if "images" in ds.data else "tokens"
+            data_arr = jnp.asarray(ds.data[leaf])
+            lab_arr = jnp.asarray(labels)
+            nc, nq = args.retrieval_corpus, args.retrieval_queries
+            # held-out split: the first nc items are indexed as the
+            # corpus, the next nq serve as queries (label-match relevance)
+
+            def embed(p, batch):
+                z, _ = dual_encoder.encode(cfg, de_cfg, p, batch)
+                return z
+
+            retrieval_eval = retrieval_lib.make_retrieval_eval(
+                embed, {leaf: data_arr[:nc]}, lab_arr[:nc],
+                {leaf: data_arr[nc:nc + nq]}, lab_arr[nc:nc + nq],
+                chunk=min(256, nc),
+                index_dtype=(jnp.bfloat16 if args.retrieval_dtype
+                             == "bfloat16" else jnp.float32))
         ecfg = round_engine.EngineConfig(
             algorithm="dcco", objective=objective, lam=args.lam,
             client_lr=args.client_lr,
@@ -431,7 +495,9 @@ def main():
             stats_kernel=args.stats_kernel, channel=channel,
             server_update=opt, prox_mu=args.fedprox_mu,
             scaffold=args.scaffold, async_k=args.async_k,
-            staleness_fn=args.staleness, latency=latency)
+            staleness_fn=args.staleness, latency=latency,
+            retrieval_eval=retrieval_eval,
+            retrieval_every=args.retrieval_every)
         if args.cohort_chunk:
             sampler = ds.make_streaming_sampler(args.clients_per_round,
                                                 args.cohort_chunk)
@@ -465,6 +531,17 @@ def main():
             if args.async_k:
                 extra = (f" updates={int(np.sum(np.asarray(m.applied)))}"
                          f"/{m.applied.shape[0]}t")
+            if args.retrieval_eval:
+                # latest evaluated round in this segment (skipped = NaN)
+                r1 = np.asarray(m.retrieval["recall_at_1"])
+                live = np.flatnonzero(~np.isnan(r1))
+                if live.size:
+                    i = live[-1]
+                    extra += (
+                        f" recall@1={r1[i]:.3f}"
+                        f" recall@10="
+                        f"{np.asarray(m.retrieval['recall_at_10'])[i]:.3f}"
+                        f" mrr={np.asarray(m.retrieval['mrr'])[i]:.3f}")
             print(f"round {round_end:5d} loss={history[-1]:9.4f} "
                   f"enc_std={float(m.encoding_std[-1]):.4f} "
                   f"probe_acc={acc:.3f}{extra} "

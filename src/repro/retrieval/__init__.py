@@ -1,0 +1,18 @@
+"""Retrieval serving subsystem: corpus index + fused MIPS search + eval.
+
+The serving half of the dual-encoder story (paper Sec. 1): encode an item
+corpus once (:class:`CorpusIndex`, O(chunk)-memory build, fp32/bf16
+normalized storage, msgpack persistence), answer batched top-k queries
+through the fused Pallas MIPS kernel (``kernels/mips_topk.py`` — no (Q, N)
+score materialization on any backend), measure serving throughput/latency
+(:class:`QueryServer`), and score retrieval quality during training
+(``make_retrieval_eval`` -> recall@k / MRR via core/eval.py, run
+periodically by the RoundEngine alongside the probe).
+"""
+from repro.retrieval.index import (  # noqa: F401
+    CorpusIndex,
+    encode_corpus_chunked,
+    l2_normalize,
+    make_retrieval_eval,
+)
+from repro.retrieval.server import QueryServer  # noqa: F401

@@ -1,0 +1,149 @@
+"""Corpus index: the offline half of dual-encoder retrieval serving.
+
+A deployed dual encoder answers nearest-neighbour queries against a corpus
+encoded ONCE (paper Sec. 1's use case). ``CorpusIndex`` owns that encoded
+corpus:
+
+  * **chunked build** — the corpus is encoded ``chunk`` items at a time
+    under ``lax.map`` (the PR-5 streaming idiom: peak activation memory is
+    O(chunk), not O(corpus) — the encoder forward never sees more than one
+    chunk);
+  * **normalized storage** — embeddings are L2-normalized (cosine == inner
+    product, the MIPS kernel's contract) and stored fp32 or bf16
+    (``dtype=jnp.bfloat16`` halves index residency; search upcasts tiles
+    to f32 on the fly);
+  * **msgpack persistence** — ``save``/``load`` via ``repro.checkpoint``,
+    so an index snapshot rides the same format as engine checkpoints;
+  * **search** — ``mips_topk`` (kernels/mips_topk.py) backend-dispatched:
+    fused Pallas kernel on accelerators, running-top-k chunked scan on
+    CPU; no path materializes the (Q, N) score matrix.
+
+``make_retrieval_eval`` packages an index-build + search + label-match
+metrics (core/eval.py) into one traceable ``params -> metrics`` function —
+the periodic in-training eval the RoundEngine runs alongside the probe.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore_checkpoint_flat, save_checkpoint
+from repro.core import eval as eval_lib
+from repro.kernels.mips_topk import mips_topk
+
+F32 = jnp.float32
+
+
+def l2_normalize(z, eps: float = 1e-8):
+    z = z.astype(F32)
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), eps)
+
+
+def encode_corpus_chunked(encode_fn: Callable, params, corpus, *,
+                          chunk: int = 256, normalize: bool = True,
+                          dtype=jnp.float32):
+    """Encode a corpus pytree (leading axis = items) in O(chunk) activation
+    memory: pad the item axis up to a chunk multiple (repeating item 0 —
+    sliced off after), reshape to (num_chunks, chunk, ...), and ``lax.map``
+    the encoder over chunks. Returns (N, d) embeddings in ``dtype``."""
+    n = jax.tree.leaves(corpus)[0].shape[0]
+    ch = min(chunk, n)
+    pad = (-n) % ch
+
+    def pad_leaf(x):
+        if not pad:
+            return jnp.asarray(x)
+        x = jnp.asarray(x)
+        return jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)], axis=0)
+
+    stacked = jax.tree.map(
+        lambda x: pad_leaf(x).reshape((-1, ch) + x.shape[1:]), corpus)
+
+    def enc(batch):
+        z = encode_fn(params, batch).astype(F32)
+        if normalize:
+            z = l2_normalize(z)
+        return z.astype(dtype)
+
+    z = jax.lax.map(enc, stacked)              # (num_chunks, ch, d)
+    return z.reshape((-1,) + z.shape[2:])[:n]
+
+
+class CorpusIndex:
+    """An encoded corpus: (N, d) normalized embeddings + top-k search."""
+
+    def __init__(self, embeddings, *, normalized: bool = True):
+        if embeddings.ndim != 2:
+            raise ValueError(f"embeddings must be (N, d), "
+                             f"got {embeddings.shape}")
+        self.embeddings = embeddings
+        self.normalized = normalized
+
+    @property
+    def num_items(self) -> int:
+        return self.embeddings.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.embeddings.shape[1]
+
+    # -- build ---------------------------------------------------------------
+    @classmethod
+    def build(cls, encode_fn: Callable, params, corpus, *, chunk: int = 256,
+              normalize: bool = True, dtype=jnp.float32) -> "CorpusIndex":
+        """Encode ``corpus`` (pytree, leading axis = items) with
+        ``encode_fn(params, chunk_batch) -> (chunk, d)`` in O(chunk)
+        activation memory; store as ``dtype`` (fp32 or bf16)."""
+        z = encode_corpus_chunked(encode_fn, params, corpus, chunk=chunk,
+                                  normalize=normalize, dtype=dtype)
+        return cls(z, normalized=normalize)
+
+    # -- search --------------------------------------------------------------
+    def search(self, queries, k: int, *, backend: str = "auto", **kw):
+        """Top-k inner-product search: queries (Q, d) -> ((Q, k) f32
+        scores, (Q, k) i32 item indices). bf16-stored embeddings upcast to
+        f32 inside the score tiles; pass mips_topk's block/chunk kwargs
+        through ``kw``."""
+        return mips_topk(queries.astype(F32), self.embeddings, k,
+                         backend=backend, **kw)
+
+    # -- persistence (repro.checkpoint msgpack) ------------------------------
+    def save(self, path: str) -> None:
+        save_checkpoint(path, {
+            "embeddings": self.embeddings,
+            "normalized": jnp.asarray(int(self.normalized), jnp.int32),
+        }, step=self.num_items)
+
+    @classmethod
+    def load(cls, path: str) -> "CorpusIndex":
+        flat, _ = restore_checkpoint_flat(path)
+        return cls(jnp.asarray(flat["embeddings"]),
+                   normalized=bool(int(flat["normalized"])))
+
+
+def make_retrieval_eval(encode_fn: Callable, corpus, corpus_labels, queries,
+                        query_labels, *, ks=(1, 5, 10), chunk: int = 256,
+                        backend: str = "auto", index_dtype=jnp.float32,
+                        **search_kw) -> Callable[[Any], dict]:
+    """Build the periodic in-training retrieval eval: a traceable
+    ``eval_fn(params) -> {"recall_at_k": ..., "mrr": ...}``.
+
+    Re-encodes the held-out corpus and queries with the CURRENT params
+    (chunked, O(chunk) activations), runs ``mips_topk`` at k = max(ks),
+    and scores label-match relevance (core/eval.py). Runs under jit inside
+    the engine's scan, so everything stays on device."""
+    kmax = max(ks)
+    corpus_labels = jnp.asarray(corpus_labels)
+    query_labels = jnp.asarray(query_labels)
+
+    def eval_fn(params):
+        cz = encode_corpus_chunked(encode_fn, params, corpus, chunk=chunk,
+                                   normalize=True, dtype=index_dtype)
+        qz = l2_normalize(encode_fn(params, queries))
+        _, idx = mips_topk(qz, cz, kmax, backend=backend, **search_kw)
+        return eval_lib.retrieval_metrics(idx, query_labels, corpus_labels,
+                                          ks=ks)
+
+    return eval_fn

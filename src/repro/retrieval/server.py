@@ -1,0 +1,79 @@
+"""Batched retrieval query server: the online half of serving.
+
+Wraps a :class:`repro.retrieval.CorpusIndex` behind a fixed-batch jitted
+search (one compiled program per (batch, k) shape — ragged request batches
+pad up to ``batch`` and slice back, the usual serving shape discipline) and
+keeps per-batch latency samples so a run reports the numbers a serving
+dashboard needs: queries/sec and p50/p99 latency vs corpus size.
+Wall-clock is measured host-side around a ``block_until_ready`` so a
+latency sample covers the full dispatch + compute + readback path a caller
+would see.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+class QueryServer:
+    """Fixed-batch top-k query serving over a CorpusIndex."""
+
+    def __init__(self, index, *, k: int = 10, batch: int = 64,
+                 backend: str = "auto", **search_kw):
+        self.index = index
+        self.k = k
+        self.batch = batch
+        self._lat_us: list[float] = []
+        self._queries = 0
+
+        def search(q):
+            return index.search(q, k, backend=backend, **search_kw)
+
+        self._search = jax.jit(search)
+
+    def warmup(self):
+        """Compile the serving program outside the measured path."""
+        q = jnp.zeros((self.batch, self.index.dim), F32)
+        jax.block_until_ready(self._search(q))
+        return self
+
+    def query(self, queries):
+        """Serve one request batch: (B, d) with B <= batch -> ((B, k)
+        scores, (B, k) indices). Pads B up to the compiled batch, records
+        one end-to-end latency sample."""
+        b = queries.shape[0]
+        if b > self.batch:
+            raise ValueError(f"request batch {b} exceeds the compiled "
+                             f"serving batch {self.batch}")
+        if b < self.batch:
+            queries = jnp.pad(queries, ((0, self.batch - b), (0, 0)))
+        t0 = time.perf_counter()
+        vals, idxs = jax.block_until_ready(self._search(queries))
+        self._lat_us.append((time.perf_counter() - t0) * 1e6)
+        self._queries += b
+        return vals[:b], idxs[:b]
+
+    def stats(self) -> Optional[dict]:
+        """Serving stats over every recorded batch: queries/sec and
+        p50/p99 per-batch latency (us). None before any query."""
+        if not self._lat_us:
+            return None
+        lat = np.asarray(self._lat_us)
+        total_s = float(lat.sum()) / 1e6
+        return {
+            "batches": len(self._lat_us),
+            "queries": self._queries,
+            "qps": self._queries / max(total_s, 1e-12),
+            "p50_us": float(np.percentile(lat, 50)),
+            "p99_us": float(np.percentile(lat, 99)),
+        }
+
+    def reset_stats(self):
+        self._lat_us.clear()
+        self._queries = 0

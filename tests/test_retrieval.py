@@ -1,0 +1,328 @@
+"""Retrieval subsystem: fused MIPS top-k kernel vs oracle, corpus index
+persistence, recall@k / MRR metrics, query server, engine wiring.
+
+The kernel contract under test is strict: in interpret mode the Pallas
+kernel and the chunked-scan fallback must match ``ref.mips_topk_ref``
+(full-score ``jax.lax.top_k``) BIT-FOR-BIT — values and indices — because
+the kernel keeps the full feature depth per dot (no d-axis re-association)
+and its running-top-k picks the lowest corpus index on ties, exactly like
+lax.top_k's stable sort.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eval as eval_lib
+from repro.core import round_engine
+from repro.kernels import ref
+from repro.kernels.mips_topk import (mips_topk, mips_topk_chunked,
+                                     mips_topk_pallas)
+from repro.retrieval import (CorpusIndex, QueryServer, encode_corpus_chunked,
+                             l2_normalize, make_retrieval_eval)
+
+from _hypothesis_compat import given, settings, st
+
+
+def _qc(key, qn, n, d):
+    kq, kc = jax.random.split(key)
+    q = jax.random.normal(kq, (qn, d), jnp.float32)
+    c = jax.random.normal(kc, (n, d), jnp.float32)
+    return q, c
+
+
+def _assert_bitwise(got, want):
+    gv, gi = got
+    wv, wi = want
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert gi.dtype == jnp.int32
+
+
+class TestMipsTopkKernel:
+    @pytest.mark.parametrize("qn,n,d,k", [
+        (128, 512, 64, 10),    # exactly one tile each way
+        (64, 4096, 32, 8),     # untiled Q, tiled N (the bench shape)
+        (256, 1024, 128, 5),   # tiled both ways
+        (3, 17, 16, 3),        # ragged everything (padding paths)
+        (130, 700, 48, 7),     # ragged on top of multi-tile
+        (8, 8, 8, 8),          # k == N
+        (1, 33, 24, 1),        # k == 1
+    ])
+    def test_matches_oracle_bitwise(self, qn, n, d, k, rng_key):
+        q, c = _qc(jax.random.fold_in(rng_key, qn * n), qn, n, d)
+        want = ref.mips_topk_ref(q, c, k)
+        _assert_bitwise(
+            mips_topk_pallas(q, c, k=k, block_q=128, block_n=512,
+                             interpret=True), want)
+
+    @pytest.mark.parametrize("bq,bn", [(128, 512), (64, 256), (32, 128)])
+    def test_block_shape_invariance(self, bq, bn, rng_key):
+        q, c = _qc(rng_key, 96, 900, 64)
+        want = ref.mips_topk_ref(q, c, 6)
+        _assert_bitwise(mips_topk_pallas(q, c, k=6, block_q=bq, block_n=bn,
+                                         interpret=True), want)
+
+    @pytest.mark.parametrize("chunk", [512, 100, 17, 10_000])
+    def test_chunked_fallback_bitwise(self, chunk, rng_key):
+        q, c = _qc(rng_key, 40, 333, 48)
+        _assert_bitwise(mips_topk_chunked(q, c, k=9, chunk=chunk),
+                        ref.mips_topk_ref(q, c, 9))
+
+    def test_tie_break_lowest_index(self, rng_key):
+        # duplicated corpus rows: every retrieved score block of equal
+        # values must list indices ascending, matching lax.top_k's stable
+        # sort — on both the kernel and the chunked-scan paths
+        base = jax.random.normal(rng_key, (50, 32), jnp.float32)
+        c = jnp.concatenate([base, base, base])       # each row thrice
+        q = base[:8]
+        want = ref.mips_topk_ref(q, c, 7)
+        _assert_bitwise(mips_topk_pallas(q, c, k=7, interpret=True), want)
+        _assert_bitwise(mips_topk_chunked(q, c, k=7, chunk=40), want)
+        # self-match: the duplicate with the LOWEST index (the original
+        # in block 0) must rank first
+        np.testing.assert_array_equal(np.asarray(want[1][:, 0]),
+                                      np.arange(8))
+
+    @settings(max_examples=20, deadline=None)
+    @given(qn=st.integers(min_value=1, max_value=80),
+           n=st.integers(min_value=12, max_value=700),
+           d=st.integers(min_value=4, max_value=96),
+           k=st.integers(min_value=1, max_value=12),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_property_both_backends_match_oracle(self, qn, n, d, k, seed):
+        q, c = _qc(jax.random.PRNGKey(seed), qn, n, d)
+        want = ref.mips_topk_ref(q, c, k)
+        _assert_bitwise(mips_topk_pallas(q, c, k=k, interpret=True), want)
+        _assert_bitwise(mips_topk_chunked(q, c, k=k, chunk=128), want)
+
+    def test_dispatcher(self, rng_key):
+        q, c = _qc(rng_key, 16, 200, 32)
+        want = ref.mips_topk_ref(q, c, 4)
+        # auto on CPU -> chunked scan; interpret -> Pallas interpreter
+        _assert_bitwise(mips_topk(q, c, 4, backend="auto"), want)
+        _assert_bitwise(mips_topk(q, c, 4, backend="chunked"), want)
+        _assert_bitwise(mips_topk(q, c, 4, backend="pallas",
+                                  interpret=True), want)
+        with pytest.raises(ValueError, match="backend"):
+            mips_topk(q, c, 4, backend="faiss")
+
+    def test_shape_validation(self, rng_key):
+        q, c = _qc(rng_key, 8, 64, 16)
+        with pytest.raises(ValueError):
+            mips_topk_chunked(q, jnp.zeros((64, 8)), k=4)
+        with pytest.raises(ValueError):
+            mips_topk_chunked(q, c, k=0)
+        with pytest.raises(ValueError):
+            mips_topk_chunked(q, c, k=65)
+
+    def test_never_materializes_score_matrix(self):
+        """Acceptance gate: at the bench shape (Q=64, N=4096) the compiled
+        fused path's temporaries stay well under the (Q, N) score matrix
+        the naive program materializes (naive temp >= Q*N*4 bytes)."""
+        qn, n, d, k = 64, 4096, 32, 8
+        q = jnp.zeros((qn, d), jnp.float32)
+        c = jnp.zeros((n, d), jnp.float32)
+
+        def naive(q, c):
+            return jax.lax.top_k(q @ c.T, k)
+
+        def analyze(fn):
+            m = jax.jit(fn).lower(q, c).compile().memory_analysis()
+            if m is None or not hasattr(m, "temp_size_in_bytes"):
+                pytest.skip("compiled memory analysis unavailable")
+            return m.temp_size_in_bytes
+
+        qn_bytes = qn * n * 4
+        assert analyze(naive) >= qn_bytes
+        fused = analyze(lambda q, c: mips_topk_chunked(q, c, k=k, chunk=512))
+        assert fused < qn_bytes / 2
+
+
+class TestRetrievalMetrics:
+    def test_recall_hand_computed(self):
+        # 3 queries, top-4 relevance flags laid out by hand
+        rel = jnp.asarray([[1, 0, 0, 0],     # hit at rank 1
+                           [0, 0, 1, 0],     # first hit at rank 3
+                           [0, 0, 0, 0]])    # never hits
+        r = eval_lib.recall_at_k(rel, ks=(1, 2, 4))
+        assert float(r[1]) == pytest.approx(1 / 3)
+        assert float(r[2]) == pytest.approx(1 / 3)
+        assert float(r[4]) == pytest.approx(2 / 3)
+        # MRR = mean(1/1, 1/3, 0)
+        assert float(eval_lib.mean_reciprocal_rank(rel)) == pytest.approx(
+            (1 + 1 / 3 + 0) / 3)
+
+    def test_recall_rejects_overdeep_cutoff(self):
+        with pytest.raises(ValueError):
+            eval_lib.recall_at_k(jnp.zeros((2, 5)), ks=(10,))
+
+    def test_retrieval_metrics_label_match(self):
+        corpus_labels = jnp.asarray([0, 0, 1, 1, 2])
+        query_labels = jnp.asarray([1, 2])
+        retrieved = jnp.asarray([[2, 0, 3],   # rel: 1,0,1 -> rr 1
+                                 [0, 1, 3]])  # rel: 0,0,0 -> rr 0
+        m = eval_lib.retrieval_metrics(retrieved, query_labels,
+                                       corpus_labels, ks=(1, 3))
+        assert float(m["recall_at_1"]) == pytest.approx(0.5)
+        assert float(m["recall_at_3"]) == pytest.approx(0.5)
+        assert float(m["mrr"]) == pytest.approx(0.5)
+
+
+def _toy_encoder(params, batch):
+    return batch["x"] @ params["w"]
+
+
+def _toy_setup(key, n, d_in=12, d_out=16):
+    kw, kx = jax.random.split(key)
+    params = {"w": jax.random.normal(kw, (d_in, d_out), jnp.float32)}
+    corpus = {"x": jax.random.normal(kx, (n, d_in), jnp.float32)}
+    return params, corpus
+
+
+class TestCorpusIndex:
+    def test_chunked_encode_matches_direct(self, rng_key):
+        params, corpus = _toy_setup(rng_key, 70)
+        z = encode_corpus_chunked(_toy_encoder, params, corpus, chunk=16)
+        want = l2_normalize(_toy_encoder(params, corpus))
+        assert z.shape == (70, 16)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_search_matches_oracle(self, rng_key):
+        params, corpus = _toy_setup(rng_key, 96)
+        idx = CorpusIndex.build(_toy_encoder, params, corpus, chunk=32)
+        q = l2_normalize(jax.random.normal(jax.random.PRNGKey(7), (9, 16)))
+        _assert_bitwise(idx.search(q, 5),
+                        ref.mips_topk_ref(q, idx.embeddings, 5))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_save_restore_roundtrip(self, dtype, rng_key, tmp_path):
+        params, corpus = _toy_setup(rng_key, 48)
+        idx = CorpusIndex.build(_toy_encoder, params, corpus, chunk=16,
+                                dtype=dtype)
+        path = str(tmp_path / "index.msgpack")
+        idx.save(path)
+        back = CorpusIndex.load(path)
+        assert back.embeddings.dtype == dtype
+        assert back.normalized == idx.normalized
+        assert back.num_items == 48 and back.dim == 16
+        np.testing.assert_array_equal(
+            np.asarray(back.embeddings.astype(jnp.float32)),
+            np.asarray(idx.embeddings.astype(jnp.float32)))
+        q = l2_normalize(jax.random.normal(jax.random.PRNGKey(3), (4, 16)))
+        _assert_bitwise(back.search(q, 3), idx.search(q, 3))
+
+    def test_make_retrieval_eval_separable_clusters(self, rng_key):
+        # two well-separated clusters in input space with an identity-ish
+        # encoder: every query's nearest neighbours share its label
+        n, d = 40, 12
+        centers = jnp.asarray([10.0, -10.0])
+        labels = jnp.arange(n) % 2
+        kx = jax.random.normal(rng_key, (n, d), jnp.float32)
+        x = kx * 0.01 + centers[labels][:, None]
+        params = {"w": jnp.eye(d, 16)}
+        fn = make_retrieval_eval(_toy_encoder, {"x": x[:32]}, labels[:32],
+                                 {"x": x[32:]}, labels[32:],
+                                 ks=(1, 5, 10), chunk=8)
+        m = jax.jit(fn)(params)
+        assert set(m) == {"recall_at_1", "recall_at_5", "recall_at_10",
+                          "mrr"}
+        for v in m.values():
+            assert float(v) == pytest.approx(1.0)
+
+
+class TestQueryServer:
+    def test_serving_and_stats(self, rng_key):
+        params, corpus = _toy_setup(rng_key, 64)
+        idx = CorpusIndex.build(_toy_encoder, params, corpus, chunk=32)
+        srv = QueryServer(idx, k=4, batch=8).warmup()
+        assert srv.stats() is None                    # warmup not measured
+        q = l2_normalize(jax.random.normal(jax.random.PRNGKey(5), (5, 16)))
+        vals, idxs = srv.query(q)                     # ragged batch pads
+        assert vals.shape == (5, 4) and idxs.shape == (5, 4)
+        _assert_bitwise((vals, idxs), ref.mips_topk_ref(q, idx.embeddings, 4))
+        srv.query(l2_normalize(
+            jax.random.normal(jax.random.PRNGKey(6), (8, 16))))
+        s = srv.stats()
+        assert s["batches"] == 2 and s["queries"] == 13
+        assert s["qps"] > 0 and s["p99_us"] >= s["p50_us"] > 0
+        with pytest.raises(ValueError, match="exceeds"):
+            srv.query(jnp.zeros((9, 16)))
+        srv.reset_stats()
+        assert srv.stats() is None
+
+
+def _toy_engine(retrieval_eval=None, retrieval_every=2, chunk_rounds=4):
+    from repro.optim import optimizers as opt_lib
+
+    params = {"w1": jax.random.normal(jax.random.PRNGKey(0), (10, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+    def enc(p, x):
+        return jnp.tanh(x @ p["w1"]) @ p["w2"]
+
+    def apply(p, batch):
+        return enc(p, batch["v1"]), enc(p, batch["v2"])
+
+    pool = {"v1": jax.random.normal(jax.random.PRNGKey(1), (20, 3, 10)),
+            "v2": jax.random.normal(jax.random.PRNGKey(2), (20, 3, 10))}
+
+    def sampler(k_sel, k_aug):
+        sel = jax.random.choice(k_sel, 20, (6,), replace=False)
+        return (jax.tree.map(lambda x: x[sel], pool),
+                jnp.full((6,), 3, jnp.int32))
+
+    opt = opt_lib.sgd(0.1)
+    cfg = round_engine.EngineConfig(
+        algorithm="dcco", lam=5.0, chunk_rounds=chunk_rounds,
+        retrieval_eval=retrieval_eval, retrieval_every=retrieval_every)
+    eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+    return eng, params, opt.init(params), enc
+
+
+class TestEngineRetrievalWiring:
+    def _reval(self, enc):
+        x = jax.random.normal(jax.random.PRNGKey(11), (40, 10), jnp.float32)
+        labels = jnp.arange(40) % 4
+
+        def embed(p, batch):
+            return enc(p, batch["x"])
+
+        return make_retrieval_eval(
+            embed, {"x": x[:32]}, labels[:32], {"x": x[32:]}, labels[32:],
+            ks=(1, 5, 10), chunk=16)
+
+    def test_engine_emits_recall_and_mrr(self):
+        eng, params, opt_state, enc = _toy_engine()
+        eng.config = eng.config._replace(retrieval_eval=self._reval(enc))
+        _, _, m = eng.run(params, opt_state, jax.random.PRNGKey(0), 4)
+        assert set(m.retrieval) == {"recall_at_1", "recall_at_5",
+                                    "recall_at_10", "mrr"}
+        for v in m.retrieval.values():
+            arr = np.asarray(v)
+            assert arr.shape == (4,)
+            # cadence 2: rounds 0 and 2 evaluated, 1 and 3 NaN-skipped
+            assert not np.isnan(arr[[0, 2]]).any()
+            assert np.isnan(arr[[1, 3]]).all()
+            assert (arr[~np.isnan(arr)] >= 0).all()
+
+    def test_retrieval_does_not_perturb_training(self):
+        """The in-scan eval is observation only: params and losses must be
+        bit-identical with and without it configured."""
+        eng0, params, opt_state, enc = _toy_engine()
+        p0, _, m0 = eng0.run(params, opt_state, jax.random.PRNGKey(0), 4)
+        eng1, params, opt_state, enc = _toy_engine()
+        eng1.config = eng1.config._replace(retrieval_eval=self._reval(enc))
+        p1, _, m1 = eng1.run(params, opt_state, jax.random.PRNGKey(0), 4)
+        assert m0.retrieval == {}
+        np.testing.assert_array_equal(np.asarray(m0.loss),
+                                      np.asarray(m1.loss))
+        for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            _toy_engine(retrieval_eval=lambda p: {}, retrieval_every=0)
+        with pytest.raises(ValueError):
+            _toy_engine(retrieval_eval=1)
