@@ -48,6 +48,23 @@ cancels machine speed and isolates what this repo controls:
     a change that makes streaming pathologically slower than the
     materialized path (ratio grows more than ``--max-regress`` over the
     baseline's) fails.
+  * mixed-precision speedup + parity — the modeled f32/bf16 step-time
+    bound ratio (``mixed_precision/{f32,bf16}_step_model``, both computed
+    by the same cost model in the same process at TPU peaks) must stay
+    > 1.0 HARD and must not regress; the measured probe accuracies
+    (``mixed_precision/probe_{f32,bf16}``, acc x 1000 in the us field)
+    must agree within an absolute tolerance — the numerics-contract
+    check that bf16 never leaked into the Eq.-3 statistics accumulation.
+  * comm round cost — the quantized round's total wall-clock (measured
+    encode/decode compute + modeled federated-uplink wire time,
+    ``comm_round/{dense,int8}_round_model``) must satisfy int8 <= dense
+    HARD (compression must never cost wall-clock — the PR-8 fix for the
+    regression the old comm_sweep baseline exposed) and the int8/dense
+    ratio must not regress.
+  * kernel roofline fractions — calibrated fraction-of-roofline for the
+    remaining Pallas-kernel computations (``kernel_roofline/{cco_stats,
+    segment_sum,quantize}_fraction_pct``), same same-process calibration
+    as the mips gate; each must not regress past ``--max-regress``.
 
 A gated ratio whose rows are missing from either file fails with the
 missing row NAMED and the command that produces it — never a raw
@@ -166,6 +183,37 @@ def streaming_overhead(rows: dict, which: str) -> float:
     return stream_us / mat_us
 
 
+def mixed_precision_terms(rows: dict, which: str):
+    """(modeled f32/bf16 bound ratio, probe_f32, probe_bf16) — the modeled
+    ratio is two same-process cost-model evaluations; the probes are
+    acc x 1000 measured values (see run.py mixed_precision)."""
+    f32 = _us(rows, "mixed_precision/f32_step_model", which,
+              "mixed_precision")
+    bf16 = _us(rows, "mixed_precision/bf16_step_model", which,
+               "mixed_precision")
+    if bf16 <= 0:
+        raise SystemExit(f"bad bf16_step_model value {bf16} in {which}")
+    p32 = _us(rows, "mixed_precision/probe_f32", which, "mixed_precision")
+    p16 = _us(rows, "mixed_precision/probe_bf16", which, "mixed_precision")
+    return f32 / bf16, p32, p16
+
+
+def comm_round_ratio(rows: dict, which: str) -> float:
+    """int8/dense total-round-cost ratio (measured channel compute +
+    modeled federated-uplink wire time, both sides from the same process
+    and the same wire model)."""
+    dense = _us(rows, "comm_round/dense_round_model", which, "comm_round")
+    int8 = _us(rows, "comm_round/int8_round_model", which, "comm_round")
+    if dense <= 0:
+        raise SystemExit(f"bad dense_round_model value {dense} in {which}")
+    return int8 / dense
+
+
+KERNEL_FRACTION_ROWS = ("kernel_roofline/cco_stats_fraction_pct",
+                        "kernel_roofline/segment_sum_fraction_pct",
+                        "kernel_roofline/quantize_fraction_pct")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("new", help="fresh BENCH.json")
@@ -264,6 +312,66 @@ def main(argv=None) -> int:
         print("FAIL: the streaming engine's time overhead over the "
               "materialized path regressed past the gate")
         failed = True
+
+    mp_new, p32_new, p16_new = mixed_precision_terms(new,
+                                                     "the new BENCH.json")
+    mp_base, _, _ = mixed_precision_terms(base, "the baseline")
+    mp_floor = max(mp_base * (1.0 - args.max_regress), 1.0)
+    print(f"mixed-precision modeled step speedup (f32/bf16 bound): baseline "
+          f"{mp_base:.2f}x, new {mp_new:.2f}x, floor {mp_floor:.2f}x")
+    if mp_new <= 1.0:
+        print("FAIL: the modeled bf16 step is no longer faster than f32 — "
+              "the mixed-precision path lost its reason to exist")
+        failed = True
+    elif mp_new < mp_floor:
+        print("FAIL: the modeled bf16-vs-f32 speedup regressed past "
+              "the gate")
+        failed = True
+    # parity is an ABSOLUTE tolerance on this run's own two probes (acc x
+    # 1000): 60 milli-acc covers the stochastic-training jitter of the
+    # tiny bench encoder while still catching a broken accumulation path
+    # (bf16 stats collapse parity by hundreds of milli-acc)
+    parity_tol = 60.0
+    print(f"mixed-precision probe parity: f32 {p32_new / 1000:.3f}, "
+          f"bf16 {p16_new / 1000:.3f}, |d| {abs(p16_new - p32_new) / 1000:.3f}"
+          f" (tol {parity_tol / 1000:.3f})")
+    if abs(p16_new - p32_new) > parity_tol:
+        print("FAIL: bf16-compute probe accuracy diverged from f32 past "
+              "the parity tolerance — check that the Eq.-3 statistics "
+              "accumulation is still f32 (cast_encoder_apply contract)")
+        failed = True
+
+    cr_new = comm_round_ratio(new, "the new BENCH.json")
+    cr_base = comm_round_ratio(base, "the baseline")
+    cr_ceil = min(cr_base * (1.0 + args.max_regress), 1.0)
+    print(f"comm round int8/dense total cost: baseline {cr_base:.3f}, "
+          f"new {cr_new:.3f}, ceiling {cr_ceil:.3f}")
+    if cr_new > 1.0:
+        print("FAIL: the int8 comm round costs more wall-clock than dense "
+              "— compression must never cost wall-clock")
+        failed = True
+    elif cr_new > cr_ceil:
+        print("FAIL: the int8 comm round's advantage over dense regressed "
+              "past the gate")
+        failed = True
+
+    # a fraction row divides two same-process timings (calibration /
+    # kernel), so it carries roughly double a single timing's scheduler
+    # noise even best-of-timed — the gate gets double the allowance. It
+    # exists to catch a kernel falling off its roofline (an accidental
+    # algorithmic or fusion regression), not a loaded runner.
+    frac_regress = min(2.0 * args.max_regress, 0.95)
+    for row in KERNEL_FRACTION_ROWS:
+        kf_new = _us(new, row, "the new BENCH.json", "kernel_roofline")
+        kf_base = _us(base, row, "the baseline", "kernel_roofline")
+        kf_floor = kf_base * (1.0 - frac_regress)
+        kname = row.split("/")[1].replace("_fraction_pct", "")
+        print(f"{kname} calibrated fraction-of-roofline: baseline "
+              f"{kf_base:.1f}%, new {kf_new:.1f}%, floor {kf_floor:.1f}%")
+        if kf_new < kf_floor:
+            print(f"FAIL: the {kname} kernel computation fell further below "
+                  f"this machine's calibrated roofline than the gate allows")
+            failed = True
 
     if failed:
         print("If this is a runner-environment shift rather than a code "

@@ -17,6 +17,24 @@ tokens FLOPs (+ attention quadratic term). Baseline training policy
 (dry-run): exact-DCCO microbatching (stats fwd + grad fwd) + layer-scan
 remat + per-view checkpoint => 6 fwd units per step vs the un-rematted
 ideal of 3 — the MODEL_FLOPS/HLO ratio surfaces exactly this.
+
+UNITS — every quantity in this module is per device per step unless a
+name says otherwise:
+
+  *_flops         FLOPs (multiply-add counts x2, the 2ND convention)
+  *_bytes         bytes moved through HBM (reads + writes)
+  coll_bytes_dev  bytes on the slowest wire link (ring model)
+  intensity_*     FLOPs / HBM byte (arithmetic intensity)
+  roofline() t_*  seconds, = work / HardwareSpec peak (TPU v5e); the
+                  returned step_s_lower_bound is the max of the three —
+                  an ideal-overlap lower bound, never a prediction
+
+Element sizes are the BF16/F32 constants below (bytes per element).
+``train_cost(compute_bytes=...)`` selects the ENCODER compute dtype's
+element size; the f32-only terms (optimizer state, gradient
+reduce-scatter, Eq.-3 statistics all-reduce) are hardwired to F32 —
+that asymmetry IS the mixed-precision numerics contract
+(docs/performance.md) expressed in the cost model.
 """
 from __future__ import annotations
 
@@ -147,13 +165,28 @@ def _recurrent_layers(cfg, kind):
 
 @dataclasses.dataclass
 class Cost:
+    """One program's analytic roofline terms (units: see module docstring).
+
+    ``flops_dev``/``hbm_bytes_dev`` are per-device compute and HBM
+    traffic; ``coll_bytes_dev`` is the wire bytes crossing the slowest
+    link under a ring model; ``notes`` carries named sub-terms (same
+    units) for reporting — they never feed the roofline directly.
+    """
     flops_dev: float
     hbm_bytes_dev: float
     coll_bytes_dev: float        # ring-model wire bytes on the slowest link
     notes: Dict[str, float]
 
-    def roofline(self):
-        t_c = self.flops_dev / HW.PEAK_FLOPS_BF16
+    def roofline(self, peak_flops: float = None):
+        """Ideal-overlap time lower bounds in seconds at TPU v5e peaks.
+
+        ``peak_flops`` selects the compute ceiling — default the bf16 MXU
+        peak; pass ``HW.PEAK_FLOPS_F32`` when the modeled program runs its
+        matmuls in f32 (the mixed-precision comparison in
+        benchmarks/run.py `mixed_precision` does exactly this).
+        """
+        peak = HW.PEAK_FLOPS_BF16 if peak_flops is None else peak_flops
+        t_c = self.flops_dev / peak
         t_m = self.hbm_bytes_dev / HW.HBM_BW
         t_x = self.coll_bytes_dev / HW.ICI_BW
         dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
@@ -167,11 +200,12 @@ def _mesh_sizes(multi_pod: bool):
     return (2 if multi_pod else 1, 16, 16)   # (pod, data, model)
 
 
-def _params_dev_bytes(cfg, counts, model_par=16):
+def _params_dev_bytes(cfg, counts, model_par=16, dtype_bytes=BF16):
     """Approx per-device param bytes: sharded fraction / model_par +
     replicated remainder. We treat attention+FFN+experts+embed as sharded
     (divisibility caveats ignored at this granularity), SSM/xLSTM mixers
-    replicated per the baseline policy."""
+    replicated per the baseline policy. ``dtype_bytes`` is the compute
+    dtype's element size (the master f32 copy lives in opt_traffic)."""
     total = counts["total"] + counts["proj_head"]
     rec = sum(_recurrent_layers(cfg, k) for k in ("mamba2", "mlstm", "slstm"))
     rec_frac = 0.0
@@ -179,14 +213,21 @@ def _params_dev_bytes(cfg, counts, model_par=16):
         rec_frac = min(0.9, rec / max(cfg.num_layers, 1))
     sharded = (total * (1 - rec_frac)) / model_par
     replicated = total * rec_frac
-    return (sharded + replicated) * BF16
+    return (sharded + replicated) * dtype_bytes
 
 
 def train_cost(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
                de_proj=(1024, 1024, 1024), num_microbatches: int = 16,
-               fwd_units: float = 6.0) -> Cost:
+               fwd_units: float = 6.0, compute_bytes: int = BF16) -> Cost:
     """Baseline DCCO train step (two views, exact microbatching, remat,
-    per-view checkpoint -> fwd_units = 6; see module docstring)."""
+    per-view checkpoint -> fwd_units = 6; see module docstring).
+
+    ``compute_bytes`` is the encoder compute dtype's element size (BF16
+    default, F32 for a full-precision encoder): it scales weight/
+    activation/TP-collective/MoE-a2a traffic. Optimizer state, the grad
+    reduce-scatter, and the Eq.-3 statistics all-reduce stay F32 in BOTH
+    settings — the precision-critical accumulation path never narrows.
+    """
     pod, dp, mp = _mesh_sizes(multi_pod)
     chips = pod * dp * mp
     counts = param_counts(cfg, de_proj)
@@ -208,25 +249,26 @@ def train_cost(cfg: ModelConfig, shape: InputShape, *, multi_pod: bool,
     flops = fwd_units * (mm + attn + rec) + 2 * (proj + stats)
 
     # HBM: weights re-read every microbatch x pass + activation traffic
-    pbytes = _params_dev_bytes(cfg, counts, mp)
+    pbytes = _params_dev_bytes(cfg, counts, mp, compute_bytes)
     weight_traffic = fwd_units * num_microbatches * pbytes
     act_traffic = fwd_units * tokens_local * cfg.d_model * cfg.num_layers \
-        * 8 * BF16  # ~8 tensor touches per layer
+        * 8 * compute_bytes  # ~8 tensor touches per layer
     opt_traffic = 3 * (counts["total"] + counts["proj_head"]) * F32 / (chips / mp)
     hbm = weight_traffic + act_traffic + opt_traffic
 
     # collectives (wire bytes, ring model):
     n_total = counts["total"] + counts["proj_head"]
     zero_rs = 2.0 * n_total * F32 / chips * 2      # grad reduce-scatter (f32)
-    zero_ag = n_total * BF16 / chips * 2           # param all-gather
+    zero_ag = n_total * compute_bytes / chips * 2  # param all-gather
     # per-layer TP all-reduces (attn-out + ffn-out) per pass, ring factor 2
     tp_ar = (2 * cfg.num_layers * fwd_units * b_local * views * s
-             * cfg.d_model * BF16) * 2
+             * cfg.d_model * compute_bytes) * 2
     stats_ar = 2 * num_microbatches * (d_out * d_out + 4 * d_out) * F32 * 2
     a2a = 0.0
     if cfg.moe is not None and cfg.moe.num_experts > 0:
         a2a = (2 * fwd_units * (cfg.num_layers - cfg.num_prologue)
-               * b_local * views * s * cfg.moe.top_k * cfg.d_model * BF16 / mp)
+               * b_local * views * s * cfg.moe.top_k * cfg.d_model
+               * compute_bytes / mp)
     coll = zero_rs + zero_ag + tp_ar + stats_ar + a2a
     return Cost(flops, hbm, coll, {
         "mm_flops": fwd_units * mm, "attn_flops": fwd_units * attn,
@@ -342,6 +384,86 @@ def mips_cost(qn: int, n: int, d: int, k: int, *,
         "intensity_fused": flops / fused,
         "intensity_naive": flops / (fused + 2.0 * score),
     })
+
+
+def cco_stats_cost(n: int, d: int, *, second_moments: bool = False,
+                   in_bytes: int = F32) -> Cost:
+    """Analytic cost of the one-pass encoding-statistics kernel
+    (kernels/cco_stats.py; oracle kernels/ref.cco_stats_ref).
+
+    zf, zg: (N, d). FLOPs: the (d, d) cross moment is a 2*N*d*d matmul
+    (x3 with ``second_moments``: cov_f and cov_g too) plus ~6*N*d
+    elementwise/reduce work for the means and squares. HBM (fused): both
+    inputs read ONCE (``in_bytes`` per element — 2 when the encoder runs
+    bf16) and only the O(d^2) statistics written; the naive multi-pass
+    path re-reads the inputs once per statistic, recorded in
+    ``notes["naive_hbm_bytes"]``.
+    """
+    n_mats = 3 if second_moments else 1
+    flops = n_mats * 2.0 * n * d * d + 6.0 * n * d
+    out = (4 * d + n_mats * d * d) * F32
+    fused = 2.0 * n * d * in_bytes + out
+    passes = 4 + n_mats                          # mean/sq per view + mats
+    return Cost(flops, fused, 0.0, {
+        "naive_hbm_bytes": passes * n * d * in_bytes + out,
+        "intensity_fused": flops / fused,
+    })
+
+
+def segment_sum_cost(k: int, d: int, e: int) -> Cost:
+    """Analytic cost of the weighted segment-sum fold
+    (kernels/segment_sum.py; oracle kernels/ref.segment_sum_ref).
+
+    rows: (K, d) per-client stat rows scattered into E edge aggregates.
+    FLOPs: one weight multiply + one accumulate per element = 2*K*d. HBM:
+    rows + f32 weights + i32 segment ids read once, (E, d) aggregates
+    written — a pure streaming pass (intensity < 1 FLOP/byte, memory-bound
+    by construction at any size).
+    """
+    flops = 2.0 * k * d
+    hbm = k * d * F32 + k * (F32 + 4) + e * d * F32
+    return Cost(flops, hbm, 0.0, {"intensity_fused": flops / hbm})
+
+
+def quantize_cost(k: int, n: int, bits: int = 8) -> Cost:
+    """Analytic cost of the fused quantize->dequantize wire pass
+    (kernels/quantize.py; formula repro.comm.quantize._qdq_formula).
+
+    flat, u: (K, n) — K clients x n payload elements — plus per-client
+    scales. ~6 elementwise ops per element (divide, add-uniform, floor,
+    two-sided clip, dequant multiply). HBM (fused): payload + uniforms
+    read once, dequantized payload written once = 3 passes; the unfused
+    jnp path materializes the scaled/rounded/clipped intermediates, an
+    extra round-trip per op recorded in ``notes["naive_hbm_bytes"]``.
+    ``bits`` sets the wire size in ``notes["wire_bytes"]`` (what ships,
+    packed codes + one f32 scale per client row) — on-chip all arithmetic
+    is f32 regardless.
+    """
+    flops = 6.0 * k * n
+    fused = 3.0 * k * n * F32 + 2 * k * F32
+    return Cost(flops, fused, 0.0, {
+        "naive_hbm_bytes": 9.0 * k * n * F32,    # +3 intermediate trips
+        "intensity_fused": flops / fused,
+        "wire_bytes": k * (n * bits / 8.0 + 4.0),
+    })
+
+
+def comm_round_cost(payload_elems: int, bits: int = 32,
+                    uplink_bw: float = None) -> Dict[str, float]:
+    """Federated uplink model for ONE client's round payload.
+
+    ``payload_elems`` f32 elements quantized to ``bits`` (32 = dense) ship
+    over a ``uplink_bw``-bytes/s client connection (default
+    HardwareSpec.FED_UPLINK_BW, a 20 Mbit/s residential uplink — the
+    paper's clients are phones, not datacenter hosts). Clients upload in
+    parallel, so the round's wire time is one client's payload time.
+    Returns wire_bytes and wire_s. The quantized path also pays the
+    encode/decode compute — benchmarks/run.py `comm_round` measures that
+    part and adds it to this wire model for the gated total.
+    """
+    bw = HW.FED_UPLINK_BW if uplink_bw is None else uplink_bw
+    wire = payload_elems * bits / 8.0 + (4.0 if bits < 32 else 0.0)
+    return {"wire_bytes": wire, "wire_s": wire / bw}
 
 
 def shape_cost(cfg: ModelConfig, shape_name: str, *, multi_pod: bool,

@@ -1,0 +1,74 @@
+"""Docs-vs-baseline drift lint (CI).
+
+docs/performance.md documents the calibrated fraction-of-roofline rows by
+their literal `benchmarks/baseline.json` row names — that table is how a
+reader finds which kernels are gated. Names are easy to let rot when a
+bench is renamed or a kernel row is added, so CI holds the two sources
+to each other:
+
+  * every calibrated fraction row in baseline.json
+    (`kernel_roofline/*_fraction_pct` plus the PR-7
+    `retrieval_serving/roofline_fraction_pct`) must appear verbatim in
+    docs/performance.md;
+  * every such row name mentioned in docs/performance.md must exist in
+    baseline.json (no stale doc rows).
+
+Usage: python benchmarks/docs_lint.py  (exit 0 clean, 1 on drift)
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE = os.path.join(HERE, "baseline.json")
+PERF_DOC = os.path.join(HERE, "..", "docs", "performance.md")
+
+# the calibrated-fraction row families the doc's table must track
+FRACTION_ROW = re.compile(
+    r"\b(?:kernel_roofline/[a-z0-9_]+|retrieval_serving/"
+    r"roofline_fraction_pct)\b")
+
+
+def fraction_rows_in_baseline(path: str = BASELINE) -> set:
+    with open(path) as f:
+        rows = json.load(f)["rows"]
+    return {r["name"] for r in rows
+            if r["name"].startswith("kernel_roofline/")
+            or r["name"] == "retrieval_serving/roofline_fraction_pct"}
+
+
+def fraction_rows_in_doc(path: str = PERF_DOC) -> set:
+    with open(path) as f:
+        return set(FRACTION_ROW.findall(f.read()))
+
+
+def main() -> int:
+    in_baseline = fraction_rows_in_baseline()
+    in_doc = fraction_rows_in_doc()
+    missing = sorted(in_baseline - in_doc)
+    stale = sorted(in_doc - in_baseline)
+    if missing:
+        print("docs/performance.md is missing gated roofline rows present "
+              "in benchmarks/baseline.json:")
+        for name in missing:
+            print(f"  {name}")
+    if stale:
+        print("docs/performance.md mentions roofline rows that do not "
+              "exist in benchmarks/baseline.json:")
+        for name in stale:
+            print(f"  {name}")
+    if missing or stale:
+        print("fix: update the calibrated-row table in docs/performance.md "
+              "(and/or regenerate the baseline — see that page's "
+              "'Regenerating the baseline' section)")
+        return 1
+    print(f"docs_lint: OK — {len(in_baseline)} calibrated roofline rows "
+          "in sync")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,16 @@ For each (arch x shape) on the single-pod mesh it reports:
     see costmodel.py docstring) and the HLO collective inventory
   * one-line "what moves the dominant term" advice
 
+UNITS: all *_s columns are SECONDS (analytic lower bounds at TPU v5e
+peaks, ideal overlap — never wall-clock predictions); *_bytes are HBM
+bytes; intensity_* is FLOPs/byte; fused_vs_naive_bound is a unitless
+bound-time ratio. The CALIBRATED fraction-of-roofline numbers (percent of
+the machine-under-test's measured peaks actually achieved) do not live
+here — they are measured in benchmarks/run.py (`retrieval_serving`,
+`kernel_roofline`) against matmul/copy-calibrated peaks of the machine
+running the bench, and gated in compare.py. This module is the analytic
+(TPU-target) half of that story; see docs/performance.md.
+
 Usage: PYTHONPATH=src python -m benchmarks.roofline [--json out.json]
 """
 from __future__ import annotations
@@ -120,7 +130,61 @@ def build_mips_table(shapes=MIPS_SHAPES):
     return rows
 
 
+# federated-kernel shapes: cohort-scale statistics / folds / wire payloads
+# (K clients, d encoding dims, E edges, n payload elements)
+KERNEL_SHAPES = {
+    "cco_stats": ((4096, 512), (65536, 1024)),           # (N rows, d)
+    "segment_sum": ((4096, 4160, 64), (65536, 4160, 256)),  # (K, d, E)
+    "quantize": ((256, 55_000, 8), (4096, 55_000, 8)),   # (K, n, bits)
+}
+
+
+def build_kernel_table(shapes=None):
+    """Analytic roofline rows for the remaining Pallas kernels —
+    `cco_stats`, `segment_sum`, `quantize` (costmodel.*_cost) — the
+    analytic companion to the measured fraction-of-roofline rows the
+    `kernel_roofline` bench emits. Every one of these kernels is a
+    streaming pass (intensity well below the TPU ridge point of ~240
+    FLOPs/byte), so 'memory' dominance below is the expected verdict;
+    the fused_vs_naive_bound column is the bound-time win of fusing away
+    the naive path's intermediate HBM round-trips."""
+    shapes = KERNEL_SHAPES if shapes is None else shapes
+    rows = []
+    for name, shape_list in shapes.items():
+        for shape in shape_list:
+            if name == "cco_stats":
+                n, d = shape
+                cost = costmodel.cco_stats_cost(n, d)
+                label = f"n{n}_d{d}"
+            elif name == "segment_sum":
+                k, d, e = shape
+                cost = costmodel.segment_sum_cost(k, d, e)
+                label = f"k{k}_d{d}_e{e}"
+            else:
+                k, n, bits = shape
+                cost = costmodel.quantize_cost(k, n, bits)
+                label = f"k{k}_n{n}_b{bits}"
+            ro = cost.roofline()
+            naive_ro = costmodel.Cost(cost.flops_dev,
+                                      cost.notes["naive_hbm_bytes"], 0.0,
+                                      {}).roofline()
+            rows.append({
+                "arch": name, "shape": label,
+                "compute_s": ro["compute_s"], "memory_s": ro["memory_s"],
+                "collective_s": 0.0, "dominant": ro["dominant"],
+                "step_lower_bound_s": ro["step_s_lower_bound"],
+                "naive_lower_bound_s": naive_ro["step_s_lower_bound"],
+                "fused_vs_naive_bound":
+                    naive_ro["step_s_lower_bound"] / ro["step_s_lower_bound"],
+                "intensity_fused": cost.notes["intensity_fused"],
+                "notes": cost.notes,
+            })
+    return rows
+
+
 def render_markdown(rows):
+    """Pipe-table rendering of ``build_table`` rows (seconds / ratios —
+    see the module docstring for units)."""
     out = ["| arch | shape | compute_s | memory_s | collective_s | dominant | "
            "6ND/flops | bound step_s |",
            "|---|---|---|---|---|---|---|---|"]

@@ -8,4 +8,5 @@ from repro.comm.channel import (  # noqa: F401
     CHANNELS, Channel, ChannelContext, DenseChannel, DPGaussianChannel,
     DropoutChannel, QuantizedChannel, get_channel)
 from repro.comm.quantize import (  # noqa: F401
-    dequantize, quant_dequant, quant_dequant_clients, quantize)
+    dequantize, quant_dequant, quant_dequant_clients, quant_dequant_payload,
+    quantize)

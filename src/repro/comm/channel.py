@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.comm.accountant import GaussianAccountant
 from repro.comm.quantize import (payload_bytes as quant_payload_bytes,
-                                 qmax_for_bits, quant_dequant_clients)
+                                 qmax_for_bits, quant_dequant_payload)
 
 F32 = jnp.float32
 
@@ -194,11 +194,13 @@ class QuantizedChannel(Channel):
             # same policy as the engine's stats_kernel="pallas": fall back
             # to the (exact) interpreter so the flag works everywhere
             impl = "interpret"
-        leaves, treedef = jax.tree.flatten(tree_k)
-        keys = _leaf_keys(ctx.key, phase, len(leaves))
-        out = [quant_dequant_clients(k, leaf, self.bits, impl)
-               for k, leaf in zip(keys, leaves)]
-        return jax.tree.unflatten(treedef, out)
+        # one fused pass over the whole payload tree — same wire semantics
+        # (per-client per-tensor scales) as quantizing leaf by leaf, but
+        # ONE uniform draw + ONE formula/kernel pass instead of a threefry
+        # dispatch per leaf (the int8/int4 wall-clock regression was this
+        # per-leaf loop over ~50 parameter leaves every phase)
+        key = jax.random.fold_in(ctx.key, PHASE_SALT[phase])
+        return quant_dequant_payload(key, tree_k, self.bits, impl)
 
     def payload_bytes(self, tree) -> float:
         return float(sum(

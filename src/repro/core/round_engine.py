@@ -74,6 +74,60 @@ F32 = jnp.float32
 ALGORITHMS = ("dcco", "fedavg_cco", "fedavg_contrastive", "fedavg_byol",
               "centralized")
 
+# EngineConfig.compute_dtype spellings -> canonical jnp dtype. Only the
+# encoder forward/backward runs in the compute dtype; every Eq.-3 statistic
+# accumulation, loss, optimizer state, and master parameter stays f32
+# (see cast_encoder_apply).
+COMPUTE_DTYPES = {
+    "float32": jnp.float32, "f32": jnp.float32, "fp32": jnp.float32,
+    "bfloat16": jnp.bfloat16, "bf16": jnp.bfloat16,
+}
+
+
+def resolve_compute_dtype(compute_dtype):
+    """Canonicalize an EngineConfig.compute_dtype spelling to a jnp dtype."""
+    if compute_dtype in COMPUTE_DTYPES:
+        return COMPUTE_DTYPES[compute_dtype]
+    raise ValueError(f"unknown compute_dtype {compute_dtype!r}; expected one "
+                     f"of {sorted(COMPUTE_DTYPES)}")
+
+
+def cast_encoder_apply(encoder_apply: Callable, compute_dtype) -> Callable:
+    """Mixed-precision wrapper: run the encoder forward/backward in
+    ``compute_dtype`` while the Eq.-3 statistics stay f32.
+
+    The paper's losses are computed from *sums of per-sample encoding
+    statistics* (Eq. 3), and those sums divide near-cancelling quantities
+    (correlation denominators), so the accumulation is the precision-
+    critical path — the encoder forward is not. This wrapper casts float
+    params and float batch leaves to ``compute_dtype`` at the encoder
+    boundary and returns the (low-precision) encodings unchanged;
+    ``cco.moment_stats`` — the ONE accumulator every stats objective
+    shares — upcasts its inputs to f32 before any reduction, so every
+    statistic, loss, delta, and optimizer buffer downstream of this
+    wrapper is f32 regardless of the compute dtype (property-tested in
+    tests/test_mixed_precision.py).
+
+    The cast is linear, so ``grad`` through it yields f32 master-parameter
+    gradients (the classic master-weights recipe); ``float32`` returns
+    ``encoder_apply`` unchanged — statically zero-cost, bit-identical.
+    Integer leaves (token ids, labels) pass through untouched.
+    """
+    dtype = resolve_compute_dtype(compute_dtype)
+    if dtype == jnp.float32:
+        return encoder_apply
+
+    def cast_tree(tree):
+        return jax.tree.map(
+            lambda x: x.astype(dtype)
+            if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x,
+            tree)
+
+    def apply(params, batch):
+        return encoder_apply(cast_tree(params), cast_tree(batch))
+
+    return apply
+
 _CHANNEL_SALT = 0xC0                 # fold_in salt for the per-round comm key
 
 
@@ -100,7 +154,16 @@ class EngineConfig(NamedTuple):
                                     # inter-op parallelism inside while
                                     # bodies), 1 on accelerators
     donate: bool = True             # donate the (params, opt, rng) carry
-    cohort_axis: Optional[str] = None   # mesh axis to shard the K client axis
+    compute_dtype: str = "float32"  # encoder forward/backward dtype
+                                    # ("float32" | "bfloat16"; aliases
+                                    # f32/fp32/bf16). Statistics, losses,
+                                    # deltas, optimizer state, and master
+                                    # params stay f32 regardless — Eq.-3
+                                    # accumulation is the precision-critical
+                                    # path (see cast_encoder_apply)
+    cohort_axis: Any = None         # mesh axis (or tuple of axes — the
+                                    # multi-host data x client mesh) to
+                                    # shard the K client axis over
     stats_kernel: str = "off"       # "off" | "pallas" | "interpret"
     channel: Any = None             # repro.comm Channel; None = ideal wire
     # --- server-optimization & client-drift subsystem (repro.server) ---
@@ -212,14 +275,44 @@ def _resolve_agg_stats_fn(cfg: EngineConfig, objective) -> Optional[Callable]:
 
 
 # ---------------------------------------------------------------------------
-# sharded-cohort stats round (client axis on the mesh's data axis)
+# sharded-cohort stats round (client axis on the mesh's data axis — or, on
+# a multi-host mesh, on a (data, client) tuple of axes)
 # ---------------------------------------------------------------------------
+
+def _axis_names(axis):
+    """Normalize a shard_map axis argument to a tuple of mesh-axis names."""
+    return tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+
+
+def _axis_pspec(axis):
+    """PartitionSpec sharding dim 0 over one axis or a tuple of axes."""
+    names = _axis_names(axis)
+    return P(names[0] if len(names) == 1 else names)
+
+
+def _axis_size(mesh, axis) -> int:
+    size = 1
+    for name in _axis_names(axis):
+        size *= mesh.shape[name]
+    return size
+
+
+def _linear_axis_index(mesh, axis):
+    """The shard's linear index over one axis or a row-major tuple of axes
+    (``jax.lax.axis_index`` takes a single name on the supported jax
+    range, so the multi-axis index is composed explicitly)."""
+    names = _axis_names(axis)
+    idx = jax.lax.axis_index(names[0])
+    for name in names[1:]:
+        idx = idx * mesh.shape[name] + jax.lax.axis_index(name)
+    return idx
+
 
 def stats_round_sharded(encoder_apply: Callable, params, opt_state,
                         server_opt, client_data, client_sizes, mesh, *,
                         objective,
                         client_lr: float = 1.0, local_steps: int = 1,
-                        axis: str = "data", channel=None, channel_key=None,
+                        axis="data", channel=None, channel_key=None,
                         prox_mu: float = 0.0, scaffold_state=None):
     """One two-phase stats round (any StatsObjective) with the (K, n, ...)
     client axis sharded over ``axis``. ``dcco_round_sharded`` is the
@@ -253,7 +346,13 @@ def stats_round_sharded(encoder_apply: Callable, params, opt_state,
     if scaffold_state is not None and channel is not None:
         fed_sim.check_variate_noise(channel)
     n_pad = jax.tree.leaves(client_data)[0].shape[1]
-    nshards = mesh.shape[axis]
+    # a tuple of axes (the multi-host data x client mesh) shards the K
+    # client axis over their product; psum over the tuple is the combined
+    # in-host + cross-host wire aggregation (exact by Eq.-3 linearity —
+    # any summation tree)
+    axis = axis if isinstance(axis, str) else tuple(axis)
+    p_axis = _axis_pspec(axis)
+    nshards = _axis_size(mesh, axis)
     if channel is not None:
         if channel_key is None:
             raise ValueError("channel requires channel_key")
@@ -275,7 +374,8 @@ def stats_round_sharded(encoder_apply: Callable, params, opt_state,
             # (post_aggregate) uses the replicated round key
             w_l, mask_l, ckey, num_part = extra[:4]
             del extra[:4]
-            shard_key = jax.random.fold_in(ckey, jax.lax.axis_index(axis))
+            shard_key = jax.random.fold_in(ckey,
+                                           _linear_axis_index(mesh, axis))
             ctx_l = ChannelContext(shard_key, mask_l, w_l, num_part)
         if scaffold_state is not None:
             # replicated server variate + this shard's slice of the slots
@@ -361,15 +461,15 @@ def stats_round_sharded(encoder_apply: Callable, params, opt_state,
         # weights/mask shard with the client axis; the round key and the
         # participant count are replicated
         extra_args += (ctx.weights, ctx.mask, ctx.key, ctx.num_participants)
-        extra_specs += (P(axis), P(axis), P(), P())
+        extra_specs += (p_axis, p_axis, P(), P())
     if scaffold_state is not None:
         extra_args += (scaffold_state.c, scaffold_state.c_slots)
-        extra_specs += (P(), P(axis))
-        out_specs += (P(axis), P())       # slot variates sharded, agg_dc
+        extra_specs += (P(), p_axis)
+        out_specs += (p_axis, P())        # slot variates sharded, agg_dc
                                           # replicated like any aggregate
     sharded = shard_map_compat(
         local_body, mesh,
-        in_specs=(P(), P(axis), P(axis)) + extra_specs,
+        in_specs=(P(), p_axis, p_axis) + extra_specs,
         out_specs=out_specs)
     outs = sharded(params, client_data, client_sizes, *extra_args)
     avg_delta, loss, agg = outs[:3]
@@ -424,7 +524,9 @@ def make_round_body(encoder_apply: Callable, server_opt, cfg: EngineConfig,
             "sharded cohorts are implemented for the dcco body only")
     # the stats objective driving the dcco / fedavg_cco / centralized
     # bodies; None -> CCO with cfg.lam (bit-identical to the pre-protocol
-    # engine). Resolution happens once, at build time.
+    # engine). Resolution happens once, at build time — as does the
+    # mixed-precision encoder wrap (float32 is the identity).
+    encoder_apply = cast_encoder_apply(encoder_apply, cfg.compute_dtype)
     objective = fed_sim.resolve_objective(cfg.objective, cfg.lam)
     if cfg.objective is not None and cfg.algorithm in (
             "fedavg_contrastive", "fedavg_byol"):
@@ -568,6 +670,7 @@ def make_streaming_round_body(encoder_apply: Callable, server_opt,
             f"sampler chunks {sampler.cohort_chunk} clients but "
             f"EngineConfig.cohort_chunk={cfg.cohort_chunk}")
     num_chunks = sampler.clients_per_round // cfg.cohort_chunk
+    encoder_apply = cast_encoder_apply(encoder_apply, cfg.compute_dtype)
     objective = fed_sim.resolve_objective(cfg.objective, cfg.lam)
     # resolution to a ServerUpdate happens once, inside the round (the
     # same single coercion point as the materialized bodies)
@@ -629,6 +732,7 @@ def make_async_round_body(encoder_apply: Callable, server_opt,
             "stats_kernel aggregates phase-1 stats from the flattened "
             "cohort; the async buffer scatters per-client contributions "
             "by arrival delay — needs per-client payloads")
+    encoder_apply = cast_encoder_apply(encoder_apply, cfg.compute_dtype)
     objective = fed_sim.resolve_objective(cfg.objective, cfg.lam)
     staleness_fn = buffer_lib.resolve_staleness(cfg.staleness_fn)
     server_update = server_update_lib.as_server_update(

@@ -33,14 +33,26 @@ def _qdq_kernel(x_ref, u_ref, scale_ref, out_ref, *, qmax: float):
     out_ref[...] = q * s
 
 
+def _qdq_kernel_2d(x_ref, u_ref, scale_ref, out_ref, *, qmax: float):
+    # column-mapped scales: one full (bk, bn) scale block per payload block
+    # (the fused whole-payload path, where each column carries its leaf's
+    # per-client scale)
+    x = x_ref[...].astype(F32)
+    s = scale_ref[...]
+    q = jnp.clip(jnp.floor(x / s + u_ref[...]), -qmax, qmax)
+    out_ref[...] = q * s
+
+
 @functools.partial(jax.jit,
                    static_argnames=("qmax", "block_k", "block_n", "interpret"))
 def quant_dequant_pallas(flat, u, scales, qmax: float, *, block_k: int = 8,
                          block_n: int = 2048, interpret: bool = False):
-    """flat, u: (K, n); scales: (K,) -> dequantized (K, n) f32.
+    """flat, u: (K, n); scales: (K,) or (K, n) -> dequantized (K, n) f32.
 
-    K and n are padded to block multiples (padded scale rows are 1.0 so the
-    division is benign; padded x/u are 0 -> floor(0+0)=0, sliced away).
+    K and n are padded to block multiples (padded scale rows/columns are
+    1.0 so the division is benign; padded x/u are 0 -> floor(0+0)=0, sliced
+    away). 1-D scales ride a (K, 128) lane-broadcast operand (one VMEM lane
+    tile per row block); 2-D scales are blocked exactly like the payload.
     """
     k, n = flat.shape
     bk = min(block_k, -(-k // 8) * 8)
@@ -49,19 +61,29 @@ def quant_dequant_pallas(flat, u, scales, qmax: float, *, block_k: int = 8,
     n_p = -(-n // bn) * bn
     flat = jnp.pad(flat.astype(F32), ((0, k_p - k), (0, n_p - n)))
     u = jnp.pad(u.astype(F32), ((0, k_p - k), (0, n_p - n)))
-    scales = jnp.pad(scales.astype(F32), (0, k_p - k), constant_values=1.0)
-    scales_b = jnp.broadcast_to(scales[:, None], (k_p, 128))
+    if scales.ndim == 1:
+        scales = jnp.pad(scales.astype(F32), (0, k_p - k),
+                         constant_values=1.0)
+        scales_op = jnp.broadcast_to(scales[:, None], (k_p, 128))
+        kernel = _qdq_kernel
+        scale_spec = pl.BlockSpec((bk, 128), lambda i, j: (i, 0))
+    else:
+        scales_op = jnp.pad(scales.astype(F32),
+                            ((0, k_p - k), (0, n_p - n)),
+                            constant_values=1.0)
+        kernel = _qdq_kernel_2d
+        scale_spec = pl.BlockSpec((bk, bn), lambda i, j: (i, j))
 
     out = pl.pallas_call(
-        functools.partial(_qdq_kernel, qmax=qmax),
+        functools.partial(kernel, qmax=qmax),
         grid=(k_p // bk, n_p // bn),
         in_specs=[
             pl.BlockSpec((bk, bn), lambda i, j: (i, j)),    # payload rows
             pl.BlockSpec((bk, bn), lambda i, j: (i, j)),    # uniforms
-            pl.BlockSpec((bk, 128), lambda i, j: (i, 0)),   # per-row scales
+            scale_spec,                                     # per-row scales
         ],
         out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((k_p, n_p), F32),
         interpret=interpret,
-    )(flat, u, scales_b)
+    )(flat, u, scales_op)
     return out[:k, :n]

@@ -23,6 +23,13 @@ def make_debug_mesh(data: int = 1, model: int = 1):
 class HardwareSpec:
     """TPU v5e constants used by the roofline analysis (benchmarks/roofline)."""
     PEAK_FLOPS_BF16 = 197e12        # per chip
+    PEAK_FLOPS_F32 = 98.5e12        # per chip (MXU f32 runs at half rate)
     HBM_BW = 819e9                  # bytes/s per chip
     ICI_BW = 50e9                   # bytes/s per link
     HBM_BYTES = 16 * 2**30          # 16 GiB per chip
+    # federated-client uplink, NOT a datacenter link: the paper's setting
+    # ships client payloads over consumer connections. 20 Mbit/s is a
+    # conservative residential uplink; benchmarks/run.py `comm_round`
+    # models wire time as payload_bytes / FED_UPLINK_BW (clients upload
+    # in parallel, so the round waits on ONE client's payload).
+    FED_UPLINK_BW = 2.5e6           # bytes/s per client

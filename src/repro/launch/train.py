@@ -42,6 +42,7 @@ from repro.models import dual_encoder
 from repro.optim import optimizers as opt_lib, schedules
 from repro.server import drift as drift_lib
 from repro.server import update as server_update_lib
+from repro.sharding import maybe_initialize_distributed
 
 
 def build_dataset(cfg, args):
@@ -257,6 +258,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="route phase-1 aggregate stats through the fused "
                          "Pallas kernel (engine mode; 'pallas' falls back "
                          "to the interpreter on CPU)")
+    ap.add_argument("--compute-dtype", default="float32",
+                    choices=sorted(round_engine.COMPUTE_DTYPES),
+                    help="encoder forward/backward compute dtype (engine "
+                         "mode). 'bfloat16' halves activation traffic and "
+                         "doubles MXU throughput; the Eq.-3 statistics "
+                         "accumulation, parameters, and server state stay "
+                         "float32 regardless (see docs/performance.md)")
     ap.add_argument("--channel", default="none",
                     choices=["none", "dense", "int8", "quant", "dp",
                              "dropout"],
@@ -382,6 +390,10 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def main():
+    # no-op unless the REPRO_COORDINATOR / REPRO_NUM_PROCESSES /
+    # REPRO_PROCESS_ID launch contract is set (multi-host runs); must
+    # happen before any jax device use
+    maybe_initialize_distributed()
     ap = build_parser()
     args = ap.parse_args()
     validate_flags(ap, args)
@@ -493,6 +505,7 @@ def main():
             local_steps=args.local_steps, chunk_rounds=chunk,
             cohort_chunk=args.cohort_chunk,
             stats_kernel=args.stats_kernel, channel=channel,
+            compute_dtype=args.compute_dtype,
             server_update=opt, prox_mu=args.fedprox_mu,
             scaffold=args.scaffold, async_k=args.async_k,
             staleness_fn=args.staleness, latency=latency,

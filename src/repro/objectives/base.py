@@ -29,6 +29,18 @@ benchmarks — is parametric in the objective: the channels transport the
 objective's stats dict unchanged (payload shapes differ per objective;
 quantization / DP / dropout and wire-bytes accounting compose per leaf),
 and the gradient-equivalence tests run per registered objective.
+
+Precision contract: statistics ACCUMULATE in float32 regardless of the
+encoder's compute dtype. ``cco.moment_stats`` casts its inputs to f32
+before any reduction, so a bf16 encoder forward
+(``EngineConfig.compute_dtype='bfloat16'``) feeds f32 sums — this is
+what keeps Eq.-3 exact under mixed precision: the aggregation is a sum
+over the whole cohort (N up to tens of thousands of samples), and bf16's
+8-bit mantissa would lose low-order per-sample contributions long before
+the cohort is fully accumulated, silently biasing ``sq_*``/``cross``
+(and thus every loss in the family) toward the large-magnitude samples.
+Tests pin both halves: accumulator dtype is f32 for bf16 inputs, and
+bf16-input stats stay within bf16-rounding tolerance of f32 stats.
 """
 from __future__ import annotations
 

@@ -1,0 +1,93 @@
+"""Multi-host mesh plumbing for the sharded-cohort path.
+
+The single-process `shard_map` path (``EngineConfig.cohort_axis``) shards
+the K client axis over the local devices of one process. This module grows
+that to a ``jax.distributed`` mesh: N processes x D local devices become a
+2-D ("data", "client") mesh, and the engine's sharded stats round runs
+with ``cohort_axis=("data", "client")`` — the psum in
+``stats_round_sharded`` accepts the axis tuple, so the cross-host
+aggregate is the same Eq.-3 sum, just re-associated (exact by linearity).
+
+Environment contract (set per process by the launcher):
+
+  REPRO_COORDINATOR    host:port of process 0 (e.g. "127.0.0.1:12345")
+  REPRO_NUM_PROCESSES  world size
+  REPRO_PROCESS_ID     this process's rank in [0, world)
+
+``maybe_initialize_distributed`` is a no-op when REPRO_COORDINATOR is
+unset, so single-process runs (the default, and every existing test) never
+touch jax.distributed. On the CPU backend the gloo collectives
+implementation is selected first — without it XLA:CPU rejects cross-process
+computations outright ("Multiprocess computations aren't implemented on
+the CPU backend"), which is exactly what the 2-process CI smoke runs on.
+
+Combine with ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` (the
+SNIPPETS idiom; see tests/test_multihost.py) to give each CPU process D
+local devices, i.e. a (N, D) data x client mesh.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+COORDINATOR_ENV = "REPRO_COORDINATOR"
+NUM_PROCESSES_ENV = "REPRO_NUM_PROCESSES"
+PROCESS_ID_ENV = "REPRO_PROCESS_ID"
+
+
+def maybe_initialize_distributed(env: Optional[dict] = None) -> bool:
+    """Initialize jax.distributed from the REPRO_* env contract.
+
+    Returns True when a multi-process runtime was initialized, False for
+    the single-process no-op. Must run before any other jax call that
+    instantiates a backend (jax.devices(), jit, ...).
+    """
+    env = os.environ if env is None else env
+    coordinator = env.get(COORDINATOR_ENV)
+    if not coordinator:
+        return False
+    num_processes = int(env[NUM_PROCESSES_ENV])
+    process_id = int(env[PROCESS_ID_ENV])
+    # XLA:CPU has no native cross-process collectives; gloo provides them
+    # (and is what the 2-process CI smoke exercises). Set unconditionally:
+    # probing the backend first (jax.default_backend()) would instantiate
+    # it, and initialize() must run before ANY backend exists. The option
+    # only takes effect if/when a CPU client is created.
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return True
+
+
+def make_multihost_mesh(axis_names: Tuple[str, str] = ("data", "client")):
+    """Global (process_count, local_device_count) mesh over ALL devices.
+
+    Axis 0 ("data") spans processes, axis 1 ("client") spans each
+    process's local devices — `jax.devices()` enumerates globally in
+    process order, so the reshape lines hosts up with mesh rows. On one
+    process this degenerates to a (1, D) mesh whose "client" axis is
+    exactly the single-host cohort_axis layout.
+    """
+    devices = np.array(jax.devices())
+    per_host = jax.local_device_count()
+    return Mesh(devices.reshape(jax.process_count(), per_host), axis_names)
+
+
+def host_local_to_global(mesh: Mesh, spec: P, tree):
+    """Assemble per-process host-local shards into global arrays.
+
+    Each process passes ITS slice of the leading (sharded) axis; the
+    result is the logically-concatenated global array laid out per
+    ``spec`` on ``mesh``. Single-process meshes skip the multihost utils
+    (they require an initialized distributed runtime).
+    """
+    if jax.process_count() == 1:
+        sharding = NamedSharding(mesh, spec)
+        return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
+    from jax.experimental import multihost_utils
+    return multihost_utils.host_local_array_to_global_array(tree, mesh, spec)

@@ -1,0 +1,132 @@
+"""Mixed-precision numerics contract (docs/performance.md).
+
+Two halves, both pinned here:
+  * the encoder forward/backward may run in bf16
+    (``EngineConfig.compute_dtype`` / ``cast_encoder_apply``), and
+  * the Eq.-3 statistics ACCUMULATE in f32 regardless — bf16 encodings
+    feed f32 sums (``cco.moment_stats`` casts before reducing), so
+    bf16-compute stats differ from f32-compute stats only by bf16
+    *rounding of the encodings*, never by accumulation error.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import utils
+from repro.core import cco, round_engine
+from repro.optim import optimizers as opt_lib
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def _encodings(seed, n, d):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, (n, d)), jax.random.normal(k2, (n, d)))
+
+
+class TestStatsAccumulationDtype:
+    @given(seed=st.integers(0, 2**16), n=st.integers(2, 64),
+           second=st.booleans())
+    @SET
+    def test_bf16_inputs_accumulate_f32_and_track_f32_stats(self, seed, n,
+                                                            second):
+        """Property: for bf16 encodings, every stat leaf is f32 and within
+        bf16-rounding tolerance of the f32-input stats. n spans a range so
+        a (hypothetical) low-precision accumulator would drift with n; the
+        tolerance does not."""
+        zf, zg = _encodings(seed, n, 8)
+        st32 = cco.moment_stats(zf, zg, second_moments=second)
+        st16 = cco.moment_stats(zf.astype(jnp.bfloat16),
+                                zg.astype(jnp.bfloat16),
+                                second_moments=second)
+        for k, v in st16.items():
+            assert v.dtype == jnp.float32, (k, v.dtype)
+            # bf16 has an 8-bit mantissa: inputs carry ~2^-8 relative
+            # rounding; sums of n of them keep that RELATIVE error (f32
+            # accumulator), so a scale-aware bound is tight and n-free
+            scale = jnp.max(jnp.abs(st32[k])) + 1.0
+            assert float(jnp.max(jnp.abs(v - st32[k]))) < 0.02 * float(scale), k
+
+    def test_f32_inputs_untouched(self):
+        zf, zg = _encodings(0, 16, 8)
+        st = cco.moment_stats(zf, zg)
+        assert all(v.dtype == jnp.float32 for v in st.values())
+
+
+class TestCastEncoderApply:
+    def _apply(self):
+        k = jax.random.PRNGKey(0)
+        params = {"w1": jax.random.normal(k, (10, 16)) * 0.3,
+                  "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+        def apply(p, batch):
+            enc = lambda x: jnp.tanh(x @ p["w1"]) @ p["w2"]  # noqa: E731
+            return enc(batch["v1"]), enc(batch["v2"])
+
+        k1, k2 = jax.random.split(k)
+        batch = {"v1": jax.random.normal(k1, (4, 10)),
+                 "v2": jax.random.normal(k2, (4, 10))}
+        return apply, params, batch
+
+    def test_f32_is_identity(self):
+        apply, params, batch = self._apply()
+        assert round_engine.cast_encoder_apply(apply, "float32") is apply
+        assert round_engine.cast_encoder_apply(apply, "f32") is apply
+
+    def test_bf16_outputs_bf16_params_untouched(self):
+        apply, params, batch = self._apply()
+        wrapped = round_engine.cast_encoder_apply(apply, "bfloat16")
+        zf, zg = wrapped(params, batch)
+        assert zf.dtype == jnp.bfloat16 and zg.dtype == jnp.bfloat16
+        # the wrap casts at the call boundary; the master params it was
+        # handed stay f32 (server state is f32 by contract)
+        assert all(v.dtype == jnp.float32 for v in params.values())
+        zf32, zg32 = apply(params, batch)
+        assert float(jnp.max(jnp.abs(zf.astype(jnp.float32) - zf32))) < 0.05
+
+    def test_unknown_dtype_rejected(self):
+        with pytest.raises(ValueError, match="compute_dtype"):
+            round_engine.resolve_compute_dtype("float16")
+
+
+class TestEngineBf16:
+    def test_engine_bf16_round_trains_finite_with_f32_state(self):
+        """End-to-end: the scan engine at compute_dtype='bfloat16' trains,
+        metrics stay finite, and params/opt state remain f32 (only the
+        encoder call is demoted). Loss tracks the f32 engine loosely —
+        same trajectory up to bf16 encoder rounding."""
+        apply, params, batch0 = self._setup()
+
+        def sampler(k_sel, k_aug):
+            k1, k2 = jax.random.split(k_sel)
+            data = {"v1": jax.random.normal(k1, (8, 3, 10)),
+                    "v2": jax.random.normal(k2, (8, 3, 10))}
+            return data, jnp.full((8,), 3, jnp.int32)
+
+        opt = opt_lib.sgd(0.1)
+        runs = {}
+        for tag in ("float32", "bfloat16"):
+            cfg = round_engine.EngineConfig(algorithm="dcco", lam=5.0,
+                                            chunk_rounds=3, compute_dtype=tag)
+            eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+            p, s, m = eng.run(params, opt.init(params), jax.random.PRNGKey(3),
+                              6)
+            assert bool(jnp.isfinite(m.loss).all()), tag
+            assert all(v.dtype == jnp.float32
+                       for v in jax.tree.leaves(p)), tag
+            runs[tag] = (p, m)
+        diff = utils.tree_max_abs_diff(runs["float32"][0],
+                                       runs["bfloat16"][0])
+        assert 0.0 < float(diff) < 0.1  # differs (bf16 bites), but tracks
+
+    def _setup(self):
+        k = jax.random.PRNGKey(0)
+        params = {"w1": jax.random.normal(k, (10, 16)) * 0.3,
+                  "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+
+        def apply(p, batch):
+            enc = lambda x: jnp.tanh(x @ p["w1"]) @ p["w2"]  # noqa: E731
+            return enc(batch["v1"]), enc(batch["v2"])
+
+        return apply, params, None

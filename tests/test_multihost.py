@@ -1,0 +1,126 @@
+"""2-process jax.distributed smoke of the multi-host cohort mesh.
+
+Each subprocess is one "host" with 2 forced CPU devices
+(--xla_force_host_platform_device_count), joined by the REPRO_* env
+contract (repro.sharding.maybe_initialize_distributed) into a (2, 2)
+("data", "client") global mesh. The sharded DCCO round runs with the
+axis TUPLE — the cross-host psum path — and every process checks the
+result against its own single-device reference round (exact by Eq.-3
+linearity, up to psum reassociation).
+
+The same pattern as TestShardedCohort's subprocess harness
+(tests/test_round_engine.py), grown to two processes: the device count
+must be forced and gloo selected before jax initializes, which can only
+happen in a fresh interpreter.
+"""
+import os
+import socket
+import subprocess
+import sys
+
+import pytest
+
+_DIST_SCRIPT = """
+from repro.sharding import (host_local_to_global, make_multihost_mesh,
+                            maybe_initialize_distributed)
+assert maybe_initialize_distributed(), "REPRO_* env contract not picked up"
+
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+assert jax.process_count() == 2, jax.process_count()
+assert jax.device_count() == 4, jax.device_count()
+
+from repro import comm, utils
+from repro.core import fed_sim, round_engine
+from repro.optim import optimizers as opt_lib
+
+mesh = make_multihost_mesh(("data", "client"))
+assert mesh.devices.shape == (2, 2), mesh.devices.shape
+
+key = jax.random.PRNGKey(0)
+params = {"w1": jax.random.normal(key, (10, 16)) * 0.3,
+          "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+def apply(p, batch):
+    enc = lambda x: jnp.tanh(x @ p["w1"]) @ p["w2"]
+    return enc(batch["v1"]), enc(batch["v2"])
+k1, k2 = jax.random.split(key)
+# full 8-client cohort, identical on every process (same seed)
+data = {"v1": jax.random.normal(k1, (8, 3, 10)),
+        "v2": jax.random.normal(k2, (8, 3, 10))}
+sizes = jnp.array([3, 1, 2, 3, 3, 2, 1, 3], jnp.int32)
+opt = opt_lib.adam(1e-2)
+opt_state = opt.init(params)
+
+# single-device reference (process-local, no collectives)
+p1, s1, m1 = fed_sim.dcco_round(apply, params, opt_state, opt,
+                                data, sizes, lam=5.0)
+
+# assemble globals: each process contributes ITS 4 clients of the K axis
+rank = jax.process_index()
+lo, hi = rank * 4, rank * 4 + 4
+shard = P(("data", "client"))
+data_g = host_local_to_global(
+    mesh, shard, {k: v[lo:hi] for k, v in data.items()})
+sizes_g = host_local_to_global(mesh, shard, sizes[lo:hi])
+params_g = host_local_to_global(mesh, P(), params)
+opt_g = host_local_to_global(mesh, P(), opt_state)
+
+p2, s2, m2 = round_engine.dcco_round_sharded(
+    apply, params_g, opt_g, opt, data_g, sizes_g, mesh, lam=5.0,
+    axis=("data", "client"))
+
+def local_np(tree):
+    # round outputs are replicated -> any addressable shard is the array
+    return jax.tree.map(lambda x: np.asarray(x.addressable_data(0)), tree)
+
+diff = utils.tree_max_abs_diff(local_np(p2), jax.device_get(p1))
+assert diff < 1e-5, diff
+assert abs(float(np.asarray(m2.loss.addressable_data(0)))
+           - float(m1.loss)) < 1e-4
+
+# int8 channel over the 2-host wire: runs, accounts bytes, stays finite
+pq, sq, mq = round_engine.dcco_round_sharded(
+    apply, params_g, opt_g, opt, data_g, sizes_g, mesh, lam=5.0,
+    axis=("data", "client"), channel=comm.QuantizedChannel(8),
+    channel_key=jax.random.PRNGKey(42))
+assert float(np.asarray(mq.wire_bytes.addressable_data(0))) > 0
+assert np.isfinite(float(np.asarray(mq.loss.addressable_data(0))))
+
+print("DIST_OK", flush=True)
+"""
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+class TestMultiHost:
+    @pytest.mark.slow
+    def test_two_process_mesh_matches_single_device(self):
+        port = _free_port()
+        procs = []
+        for rank in range(2):
+            env = dict(os.environ)
+            env.update({
+                "JAX_PLATFORMS": "cpu",
+                "XLA_FLAGS": (env.get("XLA_FLAGS", "") +
+                              " --xla_force_host_platform_device_count=2"
+                              ).strip(),
+                "PYTHONPATH": os.pathsep.join(
+                    [os.path.join(os.path.dirname(__file__), "..", "src"),
+                     env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+                "REPRO_COORDINATOR": f"127.0.0.1:{port}",
+                "REPRO_NUM_PROCESSES": "2",
+                "REPRO_PROCESS_ID": str(rank),
+            })
+            procs.append(subprocess.Popen(
+                [sys.executable, "-c", _DIST_SCRIPT], env=env,
+                stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+        outs = [p.communicate(timeout=420) for p in procs]
+        for rank, (p, (out, err)) in enumerate(zip(procs, outs)):
+            assert p.returncode == 0, (
+                f"rank {rank}: stdout={out}\nstderr={err}")
+            assert "DIST_OK" in out, f"rank {rank}: stdout={out}"
