@@ -65,6 +65,17 @@ cancels machine speed and isolates what this repo controls:
     remaining Pallas-kernel computations (``kernel_roofline/{cco_stats,
     segment_sum,quantize}_fraction_pct``), same same-process calibration
     as the mips gate; each must not regress past ``--max-regress``.
+  * retrieval scale — four retrieval_scale contracts, all same-process
+    ratios or deterministic counts: the modeled S-device sharded search
+    (measured per-shard time + measured merge time) must beat the
+    measured single-device exact search HARD (sharding must never slow a
+    fixed-size search) and the vmap-sharded result must match
+    single-device search bit-for-bit HARD; the IVF tier at its default
+    nprobe must hold recall@10 >= 0.95 of exact HARD while beating the
+    exact tier's latency HARD (ratio > 1, plus no-regress floors on
+    both); the drift-gated refresh must re-encode < 50% of the corpus
+    under the bench's drift scenario HARD with post-refresh top-k parity
+    against a full rebuild HARD.
 
 A gated ratio whose rows are missing from either file fails with the
 missing row NAMED and the command that produces it — never a raw
@@ -207,6 +218,19 @@ def comm_round_ratio(rows: dict, which: str) -> float:
     if dense <= 0:
         raise SystemExit(f"bad dense_round_model value {dense} in {which}")
     return int8 / dense
+
+
+def retrieval_scale_terms(rows: dict, which: str):
+    """(sharded modeled speedup, sharded bitwise-match flag, ivf recall@10
+    x1000, ivf qps ratio, refresh items-ratio x1000, refresh parity x1000)
+    from the retrieval_scale rows — every term a same-process ratio or a
+    deterministic count (see run.py retrieval_scale)."""
+    return tuple(
+        _us(rows, f"retrieval_scale/{row}", which, "retrieval_scale")
+        for row in ("sharded_speedup_modeled", "sharded_exact_match",
+                    "ivf_recall_at10_x1000", "ivf_qps_ratio",
+                    "refresh_items_ratio_x1000",
+                    "refresh_recall_parity_x1000"))
 
 
 KERNEL_FRACTION_ROWS = ("kernel_roofline/cco_stats_fraction_pct",
@@ -372,6 +396,63 @@ def main(argv=None) -> int:
             print(f"FAIL: the {kname} kernel computation fell further below "
                   f"this machine's calibrated roofline than the gate allows")
             failed = True
+
+    (sh_new, bit_new, rec_new, ivf_new,
+     frac_new, par_new) = retrieval_scale_terms(new, "the new BENCH.json")
+    (sh_base, _, _, ivf_base,
+     _, _) = retrieval_scale_terms(base, "the baseline")
+    sh_floor = max(sh_base * (1.0 - args.max_regress), 1.0)
+    print(f"sharded retrieval modeled speedup (S devices vs 1): baseline "
+          f"{sh_base:.2f}x, new {sh_new:.2f}x, floor {sh_floor:.2f}x")
+    if sh_new <= 1.0:
+        print("FAIL: the modeled sharded search (per-shard + merge) no "
+              "longer beats single-device exact search — sharding must "
+              "never slow a fixed-size search down")
+        failed = True
+    elif sh_new < sh_floor:
+        print("FAIL: the sharded search's modeled speedup regressed past "
+              "the gate")
+        failed = True
+    if bit_new != 1.0:
+        print("FAIL: sharded search is no longer bit-identical to "
+              "single-device search (scores+indices incl. tie-breaks) — "
+              "the merge's exactness contract is broken")
+        failed = True
+
+    recall_floor = 950.0  # 0.95 x exact, deterministic (fixed seeds)
+    ivf_floor = max(ivf_base * (1.0 - args.max_regress), 1.0)
+    print(f"ivf recall@10 at default nprobe: new {rec_new / 1000:.3f} "
+          f"(floor {recall_floor / 1000:.2f}); qps-vs-exact: baseline "
+          f"{ivf_base:.2f}x, new {ivf_new:.2f}x, floor {ivf_floor:.2f}x")
+    if rec_new < recall_floor:
+        print("FAIL: the IVF tier's recall@10 at its default nprobe fell "
+              "below 0.95x exact — the pruning traded away too much "
+              "recall")
+        failed = True
+    if ivf_new <= 1.0:
+        print("FAIL: the IVF tier no longer beats exact-search latency — "
+              "an approximate tier that is also slower has no reason to "
+              "exist")
+        failed = True
+    elif ivf_new < ivf_floor:
+        print("FAIL: the IVF tier's latency advantage regressed past "
+              "the gate")
+        failed = True
+
+    # deterministic counts (fixed seeds + thresholds), gated absolutely
+    print(f"refresh re-encode fraction: new {frac_new / 1000:.3f} "
+          f"(ceiling 0.500); post-refresh top-k parity: "
+          f"{par_new / 1000:.3f} (floor 0.990)")
+    if frac_new >= 500.0:
+        print("FAIL: the drift-gated refresh re-encoded >= 50% of the "
+              "corpus under the bench drift scenario — the targeted "
+              "update lost its cost advantage over a full rebuild")
+        failed = True
+    if par_new < 990.0:
+        print("FAIL: the refreshed index's top-k diverged from a full "
+              "rebuild's — the drift gate is skipping items that "
+              "actually moved")
+        failed = True
 
     if failed:
         print("If this is a runner-environment shift rather than a code "

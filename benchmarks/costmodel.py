@@ -386,6 +386,32 @@ def mips_cost(qn: int, n: int, d: int, k: int, *,
     })
 
 
+def ivf_cost(qn: int, n: int, d: int, k: int, *, num_centroids: int,
+             nprobe: int, list_len: int, store_bytes: int = F32) -> Cost:
+    """Analytic cost of IVF-pruned MIPS serving (retrieval/ivf.py): the
+    coarse (Q, d) x (d, C) centroid sweep + its top-nprobe, then ``nprobe``
+    probed lists of ``list_len`` padded rows each streamed through the
+    running top-k (same per-row work as the fused exact kernel). HBM: the
+    centroids and only the probed lists' rows are read — the pruning win
+    over exact search is ``notes["exact_flops"] / flops_dev`` ≈
+    N / (C + nprobe * L). ``notes["scan_rows"]`` is the padded row count
+    actually scored per query; list padding inflates it above the ideal
+    nprobe * N / C."""
+    scan_rows = 1.0 * nprobe * list_len
+    coarse = 2.0 * qn * num_centroids * d + 1.0 * qn * num_centroids * nprobe
+    flops = coarse + 2.0 * qn * scan_rows * d + 1.0 * qn * scan_rows * k
+    out_bytes = qn * k * (F32 + 4)
+    hbm = (num_centroids * d * F32 + qn * scan_rows * (d * store_bytes + 4)
+           + qn * d * F32 + out_bytes)
+    exact = mips_cost(qn, n, d, k, store_bytes=store_bytes)
+    return Cost(flops, hbm, 0.0, {
+        "scan_rows": scan_rows,
+        "exact_flops": exact.flops_dev,
+        "flops_ratio_exact_over_ivf": exact.flops_dev / flops,
+        "intensity": flops / hbm,
+    })
+
+
 def cco_stats_cost(n: int, d: int, *, second_moments: bool = False,
                    in_bytes: int = F32) -> Cost:
     """Analytic cost of the one-pass encoding-statistics kernel

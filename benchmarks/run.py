@@ -58,6 +58,7 @@ comm_sweep round_engine``.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import sys
@@ -938,8 +939,8 @@ def retrieval_serving(qn=64, n=4096, d=64, k=10,
             srv.query(qpool[i])
         s = srv.stats()
         emit(f"retrieval_serving/qserver_n{nn}", s["p50_us"],
-             f"qps={s['qps']:.0f};p99_us={s['p99_us']:.0f};"
-             f"batches={s['batches']}")
+             f"qps={s['qps']:.0f};qps_serial={s['qps_serial']:.0f};"
+             f"p99_us={s['p99_us']:.0f};batches={s['batches']}")
 
 
 def mixed_precision(rounds=10, cpr=16, arch="qwen3-1.7b", shape="train_4k"):
@@ -1151,6 +1152,164 @@ def roofline_bench():
              f"intensity={r['intensity_fused']:.1f}")
 
 
+def retrieval_scale(qn=64, n=8192, d=64, k=10, shards=4,
+                    num_centroids=256, nprobe=4,
+                    nprobe_curve=(1, 2, 4, 8, 16),
+                    refresh_n=4096, refresh_block=64):
+    """Retrieval at scale: sharded exact search, the IVF approximate
+    tier's recall-vs-qps curve, and drift-gated streaming refresh.
+
+    Gated rows (benchmarks/compare.py; every gate is a same-process ratio
+    or a deterministic count — machine-portable):
+
+      * sharded — one shard's local fused search (N/S rows, offset
+        contract) + the S·k candidate merge are timed separately; the
+        modeled S-device parallel time (shard_us + merge_us — the
+        all-gather moves S*Q*k entries, noise at these shapes) must BEAT
+        the measured single-device exact search (HARD: sharding must
+        never slow a fixed-size search down), and the vmap-sharded result
+        must match single-device search bit-for-bit (HARD);
+      * ivf — recall@10 vs the exact ground truth at the default nprobe
+        (HARD floor: >= 0.95, x1000 row) while the pruned search beats
+        the exact tier's latency (HARD ratio > 1). The corpus is
+        clustered (items around num_centroids centers — embedding
+        corpora cluster; uniform-random would be IVF's pathological
+        no-structure case) and the per-nprobe curve rows record the
+        recall-vs-qps tradeoff;
+      * refresh — a two-group linear-encoder scenario where perturbing
+        one weight block drifts exactly a quarter of the corpus: the
+        drift-gated refresh must re-encode < 50% of the items a full
+        rebuild would (HARD, includes probe overhead) while its
+        post-refresh top-k matches the full rebuild's (HARD parity,
+        x1000).
+    """
+    from benchmarks import costmodel
+    from repro.kernels.mips_topk import mips_topk
+    from repro.retrieval import (CorpusIndex, IVFIndex, l2_normalize,
+                                 refresh_embeddings)
+    from repro.retrieval.sharded import (merge_topk, sharded_mips_topk,
+                                         stack_shards)
+
+    # clustered corpus: items around true_c natural clusters (embedding
+    # corpora cluster — k-means then sub-divides each, true_c = C/2),
+    # queries near cluster centers with smaller noise than the items
+    key = jax.random.PRNGKey(0)
+    true_c = max(1, num_centroids // 2)
+    centers = l2_normalize(jax.random.normal(key, (true_c, d), jnp.float32))
+    per = -(-n // true_c)
+    noise = 0.2 * jax.random.normal(jax.random.PRNGKey(1), (n, d),
+                                    jnp.float32)
+    c = l2_normalize(jnp.repeat(centers, per, axis=0)[:n] + noise[:n])
+    qg = jax.random.randint(jax.random.PRNGKey(2), (qn,), 0, true_c)
+    q = l2_normalize(centers[qg] + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(3), (qn, d), jnp.float32))
+
+    # ---- sharded exact tier ------------------------------------------------
+    exact = jax.jit(lambda q, c: mips_topk(q, c, k, backend="chunked"))
+    ev, ei = jax.block_until_ready(exact(q, c))
+    us_exact = _timeit(lambda: exact(q, c), n=5, best_of=4)
+    emit("retrieval_scale/exact_search", us_exact, f"q{qn}_n{n}_d{d}_k{k}")
+
+    shard_stack = stack_shards(c, shards)
+    shard_size = shard_stack.shape[1]
+    local = jax.jit(lambda q, s: mips_topk(
+        q, s, k, backend="chunked", index_offset=jnp.zeros((), jnp.int32),
+        n_total=n))
+    jax.block_until_ready(local(q, shard_stack[0]))
+    us_shard = _timeit(lambda: local(q, shard_stack[0]), n=5, best_of=4)
+    cand_v = jnp.tile(ev[None], (shards, 1, 1))
+    cand_i = jnp.tile(ei[None], (shards, 1, 1))
+    merge = jax.jit(lambda v, i: merge_topk(v, i, k))
+    jax.block_until_ready(merge(cand_v, cand_i))
+    us_merge = _timeit(lambda: merge(cand_v, cand_i), n=5, best_of=4)
+    emit("retrieval_scale/shard_local_search", us_shard,
+         f"rows={shard_size};shards={shards}")
+    emit("retrieval_scale/shard_merge", us_merge,
+         f"candidates={shards * k}_per_query")
+    emit("retrieval_scale/sharded_speedup_modeled",
+         us_exact / (us_shard + us_merge),
+         f"exact_us={us_exact:.0f};shard_us={us_shard:.0f};"
+         f"merge_us={us_merge:.0f};allgather_entries={shards * qn * k}")
+
+    sv, si = jax.block_until_ready(
+        jax.jit(lambda q, s: sharded_mips_topk(
+            q, s, k, n_total=n, backend="chunked"))(q, shard_stack))
+    bit = bool(jnp.array_equal(sv, ev)) and bool(jnp.array_equal(si, ei))
+    emit("retrieval_scale/sharded_exact_match", float(bit),
+         f"bitwise_scores_and_indices;shards={shards}")
+
+    # ---- IVF approximate tier ----------------------------------------------
+    ivf = IVFIndex.from_index(CorpusIndex(c), num_centroids=num_centroids,
+                              nprobe=nprobe, seed=7)
+    truth = set_rows = [set(np.asarray(ei)[i].tolist()) for i in range(qn)]
+
+    def recall_at_k(idx_arr):
+        got = np.asarray(idx_arr)
+        return float(np.mean([len(set(got[i]) & truth[i]) / k
+                              for i in range(qn)]))
+
+    if nprobe > num_centroids:
+        raise ValueError(
+            f"nprobe={nprobe} exceeds num_centroids={num_centroids}; the "
+            f"default-nprobe gate rows would have nothing to measure")
+    us_default = rec_default = None
+    for p in sorted(set(tuple(nprobe_curve) + (nprobe,))):
+        if p > num_centroids:
+            continue
+        run = jax.jit(functools.partial(ivf.search, k=k, nprobe=p))
+        _, pi = jax.block_until_ready(run(q))
+        us_p = _timeit(lambda: run(q), n=5, best_of=4)
+        rec = recall_at_k(pi)
+        emit(f"retrieval_scale/ivf_search_nprobe{p}", us_p,
+             f"recall_at{k}={rec:.3f};qps_vs_exact={us_exact / us_p:.2f}x;"
+             f"scan_rows={p * ivf.list_len}")
+        if p == nprobe:
+            us_default, rec_default = us_p, rec
+    emit("retrieval_scale/ivf_recall_at10_x1000", 1000.0 * rec_default,
+         f"nprobe={nprobe};C={num_centroids};fill={ivf.fill:.2f}")
+    emit("retrieval_scale/ivf_qps_ratio", us_exact / us_default,
+         f"exact_us={us_exact:.0f};ivf_us={us_default:.0f};nprobe={nprobe}")
+    cost = costmodel.ivf_cost(qn, n, d, k, num_centroids=num_centroids,
+                              nprobe=nprobe, list_len=ivf.list_len)
+    emit("retrieval_scale/ivf_cost_flops_ratio",
+         cost.notes["flops_ratio_exact_over_ivf"],
+         f"scan_rows={cost.notes['scan_rows']:.0f};"
+         f"intensity={cost.notes['intensity']:.1f}")
+
+    # ---- drift-gated streaming refresh -------------------------------------
+    # two-group linear encoder: items 0..m-1 read only the first feature
+    # block, the rest only the second — perturbing W's first block drifts
+    # exactly the first quarter of the corpus
+    d_in, m = 32, refresh_n // 4
+    w = jax.random.normal(jax.random.PRNGKey(11), (d_in, d),
+                          jnp.float32) * 0.3
+    feats = jax.random.normal(jax.random.PRNGKey(12), (refresh_n, d_in),
+                              jnp.float32)
+    feats = feats.at[:m, d_in // 2:].set(0.0).at[m:, :d_in // 2].set(0.0)
+    enc = lambda p, x: x @ p  # noqa: E731
+    emb0 = jax.block_until_ready(l2_normalize(enc(w, feats)))
+    w2 = w.at[:d_in // 2].add(0.15 * jax.random.normal(
+        jax.random.PRNGKey(13), (d_in // 2, d), jnp.float32))
+    new_emb, rstats = jax.jit(functools.partial(
+        refresh_embeddings, enc, threshold=1e-3, block=refresh_block,
+        probes_per_block=4))(w2, feats, emb0)
+    frac_items = float(rstats["items_encoded"]) / refresh_n
+    full = l2_normalize(enc(w2, feats))
+    qr = l2_normalize(jax.random.normal(jax.random.PRNGKey(14), (qn, d),
+                                        jnp.float32))
+    _, ri = mips_topk(qr, new_emb, k, backend="chunked")
+    _, fi = mips_topk(qr, full, k, backend="chunked")
+    parity = float(np.mean([
+        len(set(np.asarray(ri)[i]) & set(np.asarray(fi)[i])) / k
+        for i in range(qn)]))
+    emit("retrieval_scale/refresh_items_ratio_x1000", 1000.0 * frac_items,
+         f"items_encoded={float(rstats['items_encoded']):.0f}_of_{refresh_n};"
+         f"blocks={float(rstats['blocks_refreshed']):.0f};"
+         f"probe_overhead_included=True")
+    emit("retrieval_scale/refresh_recall_parity_x1000", 1000.0 * parity,
+         f"top{k}_overlap_vs_full_rebuild;drifted_quarter=True")
+
+
 BENCHES = {
     "table1": table1_cifar,
     "table2": table2_derm,
@@ -1167,6 +1326,7 @@ BENCHES = {
     "objective_sweep": objective_sweep,
     "population_scale": population_scale,
     "retrieval_serving": retrieval_serving,
+    "retrieval_scale": retrieval_scale,
     "mixed_precision": mixed_precision,
     "comm_round": comm_round,
     "kernel_roofline": kernel_roofline,
@@ -1194,6 +1354,11 @@ SMOKE_KW = {
     # the gated memory + roofline-fraction rows keep the full bench shape
     # (the Q=64 x N=4096 acceptance size); only the latency sweep shrinks
     "retrieval_serving": {"corpus_sizes": (1024, 4096), "serve_batches": 8},
+    # the gated ratios (sharded modeled speedup, ivf recall/qps, refresh
+    # fraction/parity) hold at the smaller smoke corpus; only wall time
+    # shrinks
+    "retrieval_scale": {"n": 4096, "num_centroids": 128,
+                        "nprobe_curve": (1, 2, 4, 8), "refresh_n": 2048},
     # modeled rows are shape-exact at any round count; only the measured
     # parity runs shrink (parity is a tolerance check, not a ratio)
     "mixed_precision": {"rounds": 6},

@@ -196,7 +196,13 @@ class EngineConfig(NamedTuple):
                                     # (repro.retrieval.make_retrieval_eval:
                                     # recall@k / MRR on a held-out corpus);
                                     # runs INSIDE the scan body so the
-                                    # whole experiment stays one program
+                                    # whole experiment stays one program.
+                                    # A STATEFUL eval (make_refreshing_
+                                    # retrieval_eval: .stateful, called as
+                                    # (params, state) -> (metrics, state))
+                                    # threads its index state through the
+                                    # scan carry — drift-gated refresh
+                                    # instead of a full re-encode per eval
     retrieval_every: int = 1        # evaluate on rounds where
                                     # round % retrieval_every == 0; skipped
                                     # rounds emit NaN (lax.cond, so the
@@ -212,6 +218,11 @@ class EngineCarry(NamedTuple):
     buffer: Any = ()                # semi-synchronous buffer + in-flight
                                     # ring (buffer_lib.AsyncState when the
                                     # real buffered path runs, else empty)
+    reval: Any = ()                 # stateful retrieval-eval state (the
+                                    # refreshing eval's encoded corpus,
+                                    # else empty) — threaded through the
+                                    # scan so each periodic eval refreshes
+                                    # rather than rebuilds the index
 
 
 class EngineMetrics(NamedTuple):
@@ -876,7 +887,18 @@ class RoundEngine:
                 not callable(config.retrieval_eval):
             raise ValueError(
                 "retrieval_eval must be a traceable params -> {metric: "
-                "scalar} callable (repro.retrieval.make_retrieval_eval)")
+                "scalar} callable (repro.retrieval.make_retrieval_eval) or "
+                "a stateful (params, state) -> (metrics, state) eval "
+                "(repro.retrieval.make_refreshing_retrieval_eval)")
+        self._retrieval_stateful = bool(
+            getattr(config.retrieval_eval, "stateful", False))
+        if self._retrieval_stateful and \
+                not callable(getattr(config.retrieval_eval, "init_state",
+                                     None)):
+            raise ValueError(
+                "a stateful retrieval_eval must expose init_state(params) "
+                "seeding its index state "
+                "(repro.retrieval.make_refreshing_retrieval_eval does)")
         self._retrieval_template = None  # eval_shape of retrieval_eval,
                                          # resolved lazily on first run()
         self.config = config
@@ -980,8 +1002,9 @@ class RoundEngine:
                 params, opt_state, drift, m = self.round_fn(
                     c.params, c.opt_state, c.drift, batch, sizes, k_ch)
                 applied, stale = jnp.ones((), F32), jnp.zeros((), F32)
-            rmet = self._retrieval_metrics(params, r)
-            return (EngineCarry(params, opt_state, c.rng, drift, buffer),
+            rmet, reval = self._retrieval_metrics(params, r, c.reval)
+            return (EngineCarry(params, opt_state, c.rng, drift, buffer,
+                                reval),
                     EngineMetrics(m.loss, m.encoding_std,
                                   jnp.asarray(m.wire_bytes, F32),
                                   applied, stale, rmet))
@@ -992,24 +1015,40 @@ class RoundEngine:
         return jax.lax.scan(body, carry, xs,
                             unroll=min(unroll, num_rounds))
 
-    def _retrieval_metrics(self, params, r):
-        """The periodic in-scan retrieval eval on round ``r``'s params: the
-        configured eval on rounds hitting the cadence, a NaN-filled
-        template otherwise (lax.cond — the skipped branch costs nothing at
-        runtime). () when no retrieval eval is configured."""
+    def _retrieval_metrics(self, params, r, state):
+        """The periodic in-scan retrieval eval on round ``r``'s params:
+        (metrics, state) — the configured eval on rounds hitting the
+        cadence, a NaN-filled template otherwise (lax.cond — the skipped
+        branch costs nothing at runtime). A stateful eval's index state
+        threads through (unchanged on skipped rounds); ((), state) when no
+        retrieval eval is configured."""
         eval_fn = self.config.retrieval_eval
         if eval_fn is None:
-            return ()
+            return (), state
+        on_cadence = (r % self.config.retrieval_every) == 0
+
+        def nan_template():
+            return jax.tree.map(lambda s: jnp.full(s.shape, jnp.nan, F32),
+                                self._retrieval_template)
+
+        if self._retrieval_stateful:
+            def run_eval(p, s):
+                m, s2 = eval_fn(p, s)
+                return jax.tree.map(lambda x: jnp.asarray(x, F32), m), s2
+
+            def skip_eval(_p, s):
+                return nan_template(), s
+
+            return jax.lax.cond(on_cadence, run_eval, skip_eval,
+                                params, state)
 
         def run_eval(p):
             return jax.tree.map(lambda x: jnp.asarray(x, F32), eval_fn(p))
 
         def skip_eval(_p):
-            return jax.tree.map(lambda s: jnp.full(s.shape, jnp.nan, F32),
-                                self._retrieval_template)
+            return nan_template()
 
-        return jax.lax.cond((r % self.config.retrieval_every) == 0,
-                            run_eval, skip_eval, params)
+        return jax.lax.cond(on_cadence, run_eval, skip_eval, params), state
 
     def _segment_fn(self, num_rounds: int):
         if num_rounds == self.config.chunk_rounds:
@@ -1070,14 +1109,27 @@ class RoundEngine:
         retained references raise "Array has been deleted" later. The
         segment metrics are not donated and are safe to keep.
         """
-        if self.config.retrieval_eval is not None and \
-                self._retrieval_template is None:
-            # metric names/shapes of the periodic eval (no FLOPs) — the
-            # NaN template the scan emits on skipped rounds
-            self._retrieval_template = jax.eval_shape(
-                lambda p: jax.tree.map(lambda x: jnp.asarray(x, F32),
-                                       self.config.retrieval_eval(p)),
-                params)
+        reval = ()
+        if self.config.retrieval_eval is not None:
+            if self._retrieval_stateful:
+                # seed the refreshing eval's index state (the one full
+                # chunked encode) from the run's initial params
+                reval = self.config.retrieval_eval.init_state(params)
+            if self._retrieval_template is None:
+                # metric names/shapes of the periodic eval (no FLOPs) — the
+                # NaN template the scan emits on skipped rounds
+                if self._retrieval_stateful:
+                    self._retrieval_template = jax.eval_shape(
+                        lambda p, s: jax.tree.map(
+                            lambda x: jnp.asarray(x, F32),
+                            self.config.retrieval_eval(p, s)[0]),
+                        params, reval)
+                else:
+                    self._retrieval_template = jax.eval_shape(
+                        lambda p: jax.tree.map(
+                            lambda x: jnp.asarray(x, F32),
+                            self.config.retrieval_eval(p)),
+                        params)
         drift = () if drift_state is None else drift_state
         if self.config.scaffold and drift_state is None:
             shapes = jax.eval_shape(
@@ -1086,7 +1138,7 @@ class RoundEngine:
         buffer = () if buffer_state is None else buffer_state
         if self._async_real and buffer_state is None:
             buffer = self._init_async_state(params)
-        carry = EngineCarry(params, opt_state, rng, drift, buffer)
+        carry = EngineCarry(params, opt_state, rng, drift, buffer, reval)
         if self._donate:
             # segments donate their carry; copy once so the CALLER's buffers
             # survive the run (donation then recycles only engine-internal

@@ -94,16 +94,65 @@ def _mips_kernel(q_ref, c_ref, v_ref, i_ref, v_scr, i_scr,
         i_ref[...] = i_scr[...]
 
 
+def _mips_kernel_offset(off_ref, q_ref, c_ref, v_ref, i_ref, v_scr, i_scr,
+                        *, k: int, bq: int, bn: int, n_total: int,
+                        n_local: int):
+    """The shard-local variant: rows are a contiguous slice of a global
+    corpus starting at ``off_ref[0, 0]`` (SMEM scalar), ``n_local`` is the
+    UNPADDED local row count and ``n_total`` the GLOBAL corpus size. Two
+    kinds of rows must mask to (NEG_INF, BIG_IDX): local block-padding
+    rows (local position >= n_local — for a non-last shard their global
+    position is a valid index belonging to the NEXT shard, so the global
+    check alone cannot catch them) and rows past the global end (the
+    ragged last shard). Emitted indices are global, so a cross-shard merge
+    inherits the lowest-global-index tie order for free."""
+    ik = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        v_scr[...] = jnp.full_like(v_scr, NEG_INF)
+        i_scr[...] = jnp.full_like(i_scr, BIG_IDX)
+
+    q = q_ref[...].astype(F32)                     # (bq, d)
+    c = c_ref[...].astype(F32)                     # (bn, d)
+    s = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)       # (bq, bn)
+    local_pos = ik * bn + jax.lax.broadcasted_iota(I32, (bq, bn), 1)
+    n_pos = off_ref[0, 0] + local_pos
+    valid = (local_pos < n_local) & (n_pos < n_total)
+    s = jnp.where(valid, s, NEG_INF)
+    n_idx = jnp.where(valid, n_pos, BIG_IDX)
+
+    cand_v = jnp.concatenate([v_scr[...], s], axis=1)         # (bq, k + bn)
+    cand_i = jnp.concatenate([i_scr[...], n_idx], axis=1)
+    new_v, new_i = _select_topk(cand_v, cand_i, k)
+    v_scr[...] = new_v
+    i_scr[...] = new_i
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        v_ref[...] = v_scr[...]
+        i_ref[...] = i_scr[...]
+
+
 @functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
-                                             "interpret"))
+                                             "interpret", "n_total"))
 def mips_topk_pallas(q, corpus, *, k: int, block_q: int = 128,
-                     block_n: int = 512, interpret: bool = False):
+                     block_n: int = 512, interpret: bool = False,
+                     index_offset=None, n_total: int | None = None):
     """q: (Q, d), corpus: (N, d) -> ((Q, k) f32 scores, (Q, k) i32 indices).
 
     Scores are plain inner products (callers normalize for cosine). Ragged
     Q/N pad up to block multiples; padded corpus rows are masked to
     (NEG_INF, BIG_IDX) positionally in-kernel, padded query rows are
     sliced off the output.
+
+    ``index_offset`` (traced i32 scalar) switches to the shard-local
+    variant: ``corpus`` is rows [offset, offset + N) of a global corpus of
+    ``n_total`` rows (static), emitted indices are global, and both local
+    block-padding rows and rows past the global end mask to sentinels.
+    ``index_offset=None`` (default) compiles the exact pre-offset program.
     """
     qn, d = q.shape
     n, d2 = corpus.shape
@@ -121,14 +170,33 @@ def mips_topk_pallas(q, corpus, *, k: int, block_q: int = 128,
         corpus = jnp.pad(corpus, ((0, n_pad), (0, 0)))
     grid = ((qn + q_pad) // bq, (n + n_pad) // bn)
 
-    kernel = functools.partial(_mips_kernel, k=k, bq=bq, bn=bn, n_total=n)
+    nt = n if n_total is None else n_total
+    if index_offset is None:
+        # offset == 0, so global position == local position: folding the
+        # local row count into n_total masks block padding and the global
+        # end with the kernel's single check.
+        kernel = functools.partial(_mips_kernel, k=k, bq=bq, bn=bn,
+                                   n_total=min(n, nt))
+        in_specs = [
+            pl.BlockSpec((bq, d), lambda iq, ik: (iq, 0)),
+            pl.BlockSpec((bn, d), lambda iq, ik: (ik, 0)),
+        ]
+        operands = (q, corpus)
+    else:
+        kernel = functools.partial(_mips_kernel_offset, k=k, bq=bq, bn=bn,
+                                   n_total=nt, n_local=n)
+        off = jnp.asarray(index_offset, I32).reshape(1, 1)   # SMEM scalar
+        in_specs = [
+            pl.BlockSpec((1, 1), lambda iq, ik: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bq, d), lambda iq, ik: (iq, 0)),
+            pl.BlockSpec((bn, d), lambda iq, ik: (ik, 0)),
+        ]
+        operands = (off, q, corpus)
     vals, idxs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bq, d), lambda iq, ik: (iq, 0)),
-            pl.BlockSpec((bn, d), lambda iq, ik: (ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bq, k), lambda iq, ik: (iq, 0)),
             pl.BlockSpec((bq, k), lambda iq, ik: (iq, 0)),
@@ -142,17 +210,24 @@ def mips_topk_pallas(q, corpus, *, k: int, block_q: int = 128,
             pltpu.VMEM((bq, k), I32),     # running top-k corpus indices
         ],
         interpret=interpret,
-    )(q, corpus)
+    )(*operands)
     return vals[:qn], idxs[:qn]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "chunk"))
-def mips_topk_chunked(q, corpus, *, k: int, chunk: int = 512):
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "n_total"))
+def mips_topk_chunked(q, corpus, *, k: int, chunk: int = 512,
+                      index_offset=None, n_total: int | None = None):
     """Pure-jnp fallback: lax.scan over corpus chunks carrying the running
     top-k — same O(Q*chunk) peak memory and the same lowest-index tie
     order as the kernel (the running list keeps equal values in ascending
     corpus-index order, new chunks append strictly larger indices, and
     ``lax.top_k`` is stable — so the merge preserves the global order).
+
+    ``index_offset``/``n_total`` mirror ``mips_topk_pallas``'s shard-local
+    contract: indices come out global, and chunk-padding rows as well as
+    rows past the global end mask to sentinels. ``index_offset`` may be a traced scalar (it is a
+    ``lax.axis_index`` product under ``shard_map``); ``index_offset=None``
+    (default) traces the exact pre-offset program.
     """
     qn, d = q.shape
     n, d2 = corpus.shape
@@ -167,15 +242,23 @@ def mips_topk_chunked(q, corpus, *, k: int, chunk: int = 512):
     q = q.astype(F32)
     corpus = corpus.astype(F32)
     num_chunks = (n + n_pad) // ch
+    nt = n if n_total is None else n_total
 
     def body(carry, c):
         vals, idxs = carry
         block = jax.lax.dynamic_slice_in_dim(corpus, c * ch, ch)
         s = jax.lax.dot_general(q, block, (((1,), (1,)), ((), ())),
                                 preferred_element_type=F32)   # (Q, ch)
-        pos = c * ch + jnp.arange(ch, dtype=I32)
-        s = jnp.where(pos[None, :] < n, s, NEG_INF)
-        pos = jnp.where(pos < n, pos, BIG_IDX)
+        local_pos = c * ch + jnp.arange(ch, dtype=I32)
+        pos = local_pos
+        if index_offset is not None:
+            pos = pos + jnp.asarray(index_offset, I32)
+        # mask chunk-padding rows by LOCAL position too: under an offset
+        # their global position can be a valid next-shard index, so the
+        # global check alone would emit (0.0, wrong-index) candidates
+        valid = (local_pos < n) & (pos < nt)
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        pos = jnp.where(valid, pos, BIG_IDX)
         cand_v = jnp.concatenate([vals, s], axis=1)
         cand_i = jnp.concatenate(
             [idxs, jnp.broadcast_to(pos[None, :], s.shape).astype(I32)],
@@ -193,7 +276,8 @@ def mips_topk_chunked(q, corpus, *, k: int, chunk: int = 512):
 
 def mips_topk(q, corpus, k: int, *, backend: str = "auto",
               block_q: int = 128, block_n: int = 512, chunk: int = 512,
-              interpret: bool = False):
+              interpret: bool = False, index_offset=None,
+              n_total: int | None = None):
     """Top-k maximum-inner-product search, backend-dispatched.
 
     backend: "auto" (pallas on accelerators, chunked jnp on CPU) |
@@ -201,14 +285,22 @@ def mips_topk(q, corpus, k: int, *, backend: str = "auto",
     Returns ((Q, k) f32 scores, (Q, k) i32 corpus indices), descending
     score, ties by ascending index. Every path keeps peak memory at
     O(Q * block) — the (Q, N) score matrix is never materialized.
+
+    ``index_offset``/``n_total`` select the shard-local variant on every
+    backend (see mips_topk_pallas): ``corpus`` is a contiguous slice of a
+    global ``n_total``-row corpus starting at ``index_offset``, indices
+    come out global — the primitive repro.retrieval.sharded builds its
+    bit-exact cross-shard merge on.
     """
     if backend == "auto":
         backend = "chunked" if jax.default_backend() == "cpu" else "pallas"
     if backend in ("pallas", "interpret"):
         return mips_topk_pallas(q, corpus, k=k, block_q=block_q,
                                 block_n=block_n,
-                                interpret=interpret or backend == "interpret")
+                                interpret=interpret or backend == "interpret",
+                                index_offset=index_offset, n_total=n_total)
     if backend == "chunked":
-        return mips_topk_chunked(q, corpus, k=k, chunk=chunk)
+        return mips_topk_chunked(q, corpus, k=k, chunk=chunk,
+                                 index_offset=index_offset, n_total=n_total)
     raise ValueError(f"unknown mips_topk backend {backend!r}; expected "
                      f"auto | pallas | interpret | chunked")

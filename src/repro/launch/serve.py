@@ -14,11 +14,19 @@ it is restored via ``repro.checkpoint.restore_checkpoint`` before prefill.
 Sec. 1's deployed use case): build a ``repro.retrieval.CorpusIndex`` per
 ``--corpus-sizes`` entry (chunked encode, O(chunk) activations), answer
 batched top-k queries through the fused MIPS search behind a
-``QueryServer``, and report queries/sec and p50/p99 latency vs corpus
-size:
+``QueryServer``, and report wall-clock and serial queries/sec plus
+p50/p99 latency vs corpus size:
 
   PYTHONPATH=src python -m repro.launch.serve --retrieval \\
       --corpus-sizes 512,2048 --serve-batches 8
+
+Scaling tiers (PR 9) compose with ``--retrieval``:
+
+  * ``--shards S`` partitions each index over a ``make_corpus_mesh`` S-
+    device "corpus" axis (``ShardedCorpusIndex`` — bit-identical results;
+    with one device the vmap-simulated shard path runs);
+  * ``--ivf C`` serves the approximate ``IVFIndex`` tier with C k-means
+    centroids; ``--nprobe`` picks the recall-vs-qps operating point.
 """
 from __future__ import annotations
 
@@ -38,8 +46,12 @@ def run_retrieval(args) -> None:
     """Retrieval serving: index build + QueryServer latency sweep."""
     from repro.data import synthetic
     from repro.models import dual_encoder
-    from repro.retrieval import CorpusIndex, QueryServer, l2_normalize
+    from repro.retrieval import (CorpusIndex, IVFIndex, QueryServer,
+                                 ShardedCorpusIndex, l2_normalize)
 
+    if args.shards > 0 and args.ivf > 0:
+        raise SystemExit("--shards and --ivf are separate serving tiers; "
+                         "pick one per run")
     cfg = get_config(args.arch, smoke=args.smoke)
     de = DualEncoderConfig(proj_dims=(64, 64))
     key = jax.random.PRNGKey(args.seed)
@@ -63,20 +75,45 @@ def run_retrieval(args) -> None:
     qz = l2_normalize(embed(params, {"tokens": jnp.asarray(qtoks)}))
     print(f"retrieval serving: {args.arch} d={qz.shape[1]} "
           f"k={args.k} batch={args.batch}")
+    mesh = None
+    if args.shards > 0:
+        from repro.sharding import make_corpus_mesh
+        if args.shards <= jax.device_count():
+            mesh = make_corpus_mesh(args.shards)
+            tier = f"sharded x{args.shards} (mesh)"
+        else:
+            tier = f"sharded x{args.shards} (vmap-simulated)"
+        print(f"  tier: {tier}")
+    elif args.ivf > 0:
+        print(f"  tier: ivf C={args.ivf} nprobe={args.nprobe}")
+
     for n in sizes:
         t0 = time.time()
-        idx = CorpusIndex.build(embed, params,
-                                {"tokens": jnp.asarray(toks[:n])},
-                                chunk=min(256, n))
-        jax.block_until_ready(idx.embeddings)
+        corpus = {"tokens": jnp.asarray(toks[:n])}
+        if args.shards > 0:
+            idx = ShardedCorpusIndex.build(embed, params, corpus,
+                                           num_shards=args.shards,
+                                           mesh=mesh, chunk=min(256, n))
+            jax.block_until_ready(idx.shards)
+        elif args.ivf > 0:
+            idx = IVFIndex.build(embed, params, corpus,
+                                 num_centroids=min(args.ivf, n),
+                                 nprobe=min(args.nprobe, args.ivf),
+                                 chunk=min(256, n))
+            jax.block_until_ready(idx.lists_emb)
+        else:
+            idx = CorpusIndex.build(embed, params, corpus,
+                                    chunk=min(256, n))
+            jax.block_until_ready(idx.embeddings)
         t_build = time.time() - t0
         srv = QueryServer(idx, k=args.k, batch=args.batch).warmup()
         for i in range(args.serve_batches):
             srv.query(qz[i * args.batch:(i + 1) * args.batch])
         s = srv.stats()
         print(f"  corpus {n:6d}: built {t_build:6.2f}s | "
-              f"qps={s['qps']:8.0f} p50={s['p50_us']:7.0f}us "
-              f"p99={s['p99_us']:7.0f}us ({s['batches']} batches)")
+              f"qps={s['qps']:8.0f} (serial {s['qps_serial']:8.0f}) "
+              f"p50={s['p50_us']:7.0f}us p99={s['p99_us']:7.0f}us "
+              f"({s['batches']} batches)")
 
 
 def main():
@@ -101,6 +138,15 @@ def main():
                          "(--retrieval)")
     ap.add_argument("--k", type=int, default=10,
                     help="retrieved neighbours per query (--retrieval)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="partition each index over this many corpus-mesh "
+                         "shards (--retrieval; 0 = unsharded; falls back "
+                         "to vmap-simulated shards past the device count)")
+    ap.add_argument("--ivf", type=int, default=0,
+                    help="serve the approximate IVF tier with this many "
+                         "k-means centroids (--retrieval; 0 = exact)")
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="inverted lists scanned per query (--ivf)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -8,11 +8,30 @@ score materialization on any backend), measure serving throughput/latency
 (:class:`QueryServer`), and score retrieval quality during training
 (``make_retrieval_eval`` -> recall@k / MRR via core/eval.py, run
 periodically by the RoundEngine alongside the probe).
+
+Scaling tiers on the same index (PR 9):
+
+  * :class:`ShardedCorpusIndex` (``sharded.py``) — the corpus partitioned
+    over a mesh "corpus" axis, per-shard fused kernels + an all-gather
+    top-k merge, bit-identical to single-device search;
+  * :class:`IVFIndex` (``ivf.py``) — inverted-file approximate tier with
+    an ``nprobe`` recall-vs-qps knob and an exact fallback;
+  * drift-gated streaming refresh (``CorpusIndex.refresh`` /
+    ``make_refreshing_retrieval_eval``) — re-encode only items that moved
+    past an L2 threshold, so a live index tracks a training checkpoint at
+    a fraction of full re-encode cost.
 """
 from repro.retrieval.index import (  # noqa: F401
     CorpusIndex,
     encode_corpus_chunked,
     l2_normalize,
+    make_refreshing_retrieval_eval,
     make_retrieval_eval,
+    refresh_embeddings,
 )
+from repro.retrieval.ivf import IVFIndex, train_centroids  # noqa: F401
 from repro.retrieval.server import QueryServer  # noqa: F401
+from repro.retrieval.sharded import (  # noqa: F401
+    ShardedCorpusIndex,
+    sharded_mips_topk,
+)

@@ -21,6 +21,19 @@ corpus:
 ``make_retrieval_eval`` packages an index-build + search + label-match
 metrics (core/eval.py) into one traceable ``params -> metrics`` function —
 the periodic in-training eval the RoundEngine runs alongside the probe.
+
+**Streaming refresh** (``refresh_embeddings`` / ``CorpusIndex.refresh`` /
+``make_refreshing_retrieval_eval``): as training moves the encoder, a
+stale index drifts — but between nearby checkpoints most items barely
+move. The drift-gated refresh re-encodes only what moved: a chunked
+probe re-encodes a strided sample (``probes_per_block`` items per
+``block``-item block, ~probes/block of full encode cost), blocks whose
+max probe L2 drift exceeds ``threshold`` get a targeted full re-encode
+under ``lax.cond`` (the untaken branch costs nothing at runtime), and
+everything else keeps its stored rows. ``make_refreshing_retrieval_eval``
+carries the index as engine eval STATE (``eval_fn(params, state) ->
+(metrics, state)``, marked ``.stateful``), so the periodic in-training
+eval tracks the current checkpoint at a fraction of full re-encode cost.
 """
 from __future__ import annotations
 
@@ -71,6 +84,102 @@ def encode_corpus_chunked(encode_fn: Callable, params, corpus, *,
     return z.reshape((-1,) + z.shape[2:])[:n]
 
 
+def _block_stack(tree, block: int):
+    """Pad a corpus pytree's item axis up to a ``block`` multiple
+    (repeating item 0) and reshape to (num_blocks, block, ...). Returns
+    (stacked tree, real item count n)."""
+    n = jax.tree.leaves(tree)[0].shape[0]
+    b = min(block, n)
+    pad = (-n) % b
+
+    def pad_leaf(x):
+        x = jnp.asarray(x)
+        if not pad:
+            return x
+        return jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)], axis=0)
+
+    stacked = jax.tree.map(
+        lambda x: pad_leaf(x).reshape((-1, b) + x.shape[1:]), tree)
+    return stacked, n
+
+
+def refresh_embeddings(encode_fn: Callable, params, corpus, embeddings, *,
+                       threshold: float, block: int = 64,
+                       probes_per_block: int = 4, normalize: bool = True):
+    """Drift-gated partial re-encode of an encoded corpus (traceable).
+
+    Two tiers, both bounded:
+
+      1. **probe** — ``probes_per_block`` strided items per ``block``-item
+         block are re-encoded in one chunked batch (cost ≈
+         probes_per_block/block of a full rebuild) and compared to their
+         stored rows; a block's drift is its max probe L2 distance;
+      2. **targeted re-encode** — a ``lax.scan`` over blocks re-encodes a
+         block under ``lax.cond`` only when its drift exceeds
+         ``threshold``; quiescent blocks keep their stored rows and the
+         untaken encoder branch costs no FLOPs at runtime (the cond is
+         never batched).
+
+    Contiguous blocks mean the scatter-back is a reshape, not a gather —
+    the refreshed (N, d) array is assembled in index order. Returns
+    ``(new_embeddings, stats)`` with traced scalars in ``stats``:
+    ``blocks_refreshed``, ``refresh_fraction`` (of blocks),
+    ``items_encoded`` (probes + refreshed blocks — the actual encode
+    cost), ``max_drift``, ``mean_drift``.
+    """
+    if not 0 < probes_per_block:
+        raise ValueError(f"probes_per_block must be >= 1, "
+                         f"got {probes_per_block}")
+    stacked, n = _block_stack(corpus, block)
+    nb = jax.tree.leaves(stacked)[0].shape[0]
+    b = jax.tree.leaves(stacked)[0].shape[1]
+    d = embeddings.shape[1]
+    pad = nb * b - n
+    emb_pad = embeddings
+    if pad:
+        emb_pad = jnp.concatenate(
+            [emb_pad, jnp.repeat(emb_pad[:1], pad, axis=0)], axis=0)
+    emb_blocks = emb_pad.reshape(nb, b, d)
+
+    p = min(probes_per_block, b)
+    probe_pos = (jnp.arange(p) * (b // p)).astype(jnp.int32)
+
+    def enc(batch):
+        z = encode_fn(params, batch).astype(F32)
+        return l2_normalize(z) if normalize else z
+
+    probe_items = jax.tree.map(
+        lambda x: x[:, probe_pos].reshape((nb * p,) + x.shape[2:]), stacked)
+    z_probe = enc(probe_items).reshape(nb, p, d)
+    drift = jnp.linalg.norm(
+        z_probe - emb_blocks[:, probe_pos].astype(F32), axis=-1)  # (nb, p)
+    # pad slots repeat item 0, whose drift must not refresh the tail block
+    probe_global = jnp.arange(nb)[:, None] * b + probe_pos[None, :]
+    drift = jnp.where(probe_global < n, drift, 0.0)
+    block_drift = drift.max(axis=1)
+    do_refresh = block_drift > threshold
+
+    def body(_, xs):
+        blk_items, blk_emb, do = xs
+        new = jax.lax.cond(
+            do,
+            lambda: enc(blk_items).astype(blk_emb.dtype),
+            lambda: blk_emb)
+        return 0, new
+
+    _, new_blocks = jax.lax.scan(body, 0, (stacked, emb_blocks, do_refresh))
+    new_emb = new_blocks.reshape(nb * b, d)[:n]
+    refreshed = do_refresh.sum().astype(F32)
+    stats = {
+        "blocks_refreshed": refreshed,
+        "refresh_fraction": refreshed / nb,
+        "items_encoded": nb * p + refreshed * b,
+        "max_drift": block_drift.max(),
+        "mean_drift": drift.mean(),
+    }
+    return new_emb, stats
+
+
 class CorpusIndex:
     """An encoded corpus: (N, d) normalized embeddings + top-k search."""
 
@@ -99,6 +208,24 @@ class CorpusIndex:
         z = encode_corpus_chunked(encode_fn, params, corpus, chunk=chunk,
                                   normalize=normalize, dtype=dtype)
         return cls(z, normalized=normalize)
+
+    # -- streaming refresh ---------------------------------------------------
+    def refresh(self, encode_fn: Callable, params, corpus, *,
+                threshold: float, block: int = 64,
+                probes_per_block: int = 4) -> dict:
+        """Drift-gated in-place update toward the CURRENT params: probe a
+        strided sample per block, fully re-encode only blocks whose max
+        probe L2 drift exceeds ``threshold`` (see
+        :func:`refresh_embeddings`). A live ``QueryServer`` holding this
+        index serves the refreshed embeddings on its next query. Returns
+        host-side stats: ``blocks_refreshed``, ``refresh_fraction``,
+        ``items_encoded``, ``max_drift``, ``mean_drift``."""
+        new_emb, stats = refresh_embeddings(
+            encode_fn, params, corpus, self.embeddings,
+            threshold=threshold, block=block,
+            probes_per_block=probes_per_block, normalize=self.normalized)
+        self.embeddings = new_emb
+        return {k: float(v) for k, v in stats.items()}
 
     # -- search --------------------------------------------------------------
     def search(self, queries, k: int, *, backend: str = "auto", **kw):
@@ -146,4 +273,45 @@ def make_retrieval_eval(encode_fn: Callable, corpus, corpus_labels, queries,
         return eval_lib.retrieval_metrics(idx, query_labels, corpus_labels,
                                           ks=ks)
 
+    return eval_fn
+
+
+def make_refreshing_retrieval_eval(
+        encode_fn: Callable, corpus, corpus_labels, queries, query_labels, *,
+        threshold: float, block: int = 64, probes_per_block: int = 4,
+        ks=(1, 5, 10), chunk: int = 256, backend: str = "auto",
+        index_dtype=jnp.float32, **search_kw) -> Callable:
+    """Stateful variant of :func:`make_retrieval_eval`: the encoded corpus
+    is engine eval STATE refreshed drift-gated instead of rebuilt.
+
+    Returns ``eval_fn(params, state) -> (metrics, new_state)`` with
+    ``eval_fn.stateful = True`` and ``eval_fn.init_state(params)`` (the
+    one full chunked encode seeding the state). Each periodic eval then
+    pays probe cost + only the drifted blocks' re-encode (see
+    :func:`refresh_embeddings`) — the RoundEngine threads the state
+    through its scan carry. Metrics gain ``refresh_fraction`` and
+    ``items_encoded`` alongside the usual recall@k/MRR."""
+    kmax = max(ks)
+    corpus_labels = jnp.asarray(corpus_labels)
+    query_labels = jnp.asarray(query_labels)
+
+    def init_state(params):
+        return encode_corpus_chunked(encode_fn, params, corpus, chunk=chunk,
+                                     normalize=True, dtype=index_dtype)
+
+    def eval_fn(params, state):
+        emb, rstats = refresh_embeddings(
+            encode_fn, params, corpus, state, threshold=threshold,
+            block=block, probes_per_block=probes_per_block, normalize=True)
+        emb = emb.astype(index_dtype)
+        qz = l2_normalize(encode_fn(params, queries))
+        _, idx = mips_topk(qz, emb, kmax, backend=backend, **search_kw)
+        metrics = dict(eval_lib.retrieval_metrics(
+            idx, query_labels, corpus_labels, ks=ks))
+        metrics["refresh_fraction"] = rstats["refresh_fraction"]
+        metrics["items_encoded"] = rstats["items_encoded"]
+        return metrics, emb
+
+    eval_fn.stateful = True
+    eval_fn.init_state = init_state
     return eval_fn

@@ -1,0 +1,228 @@
+"""IVF pruning tier: coarse-quantized inverted lists over the encoded
+corpus — the recall-vs-qps knob of retrieval serving.
+
+The exact tier (``CorpusIndex``/``ShardedCorpusIndex``) pays O(N·d) per
+query batch. At corpus scale most of that work scores items nowhere near
+the query, so this module adds the classical IVF structure on top of the
+SAME embeddings:
+
+  * **coarse quantizer** — ``num_centroids`` spherical k-means centroids
+    trained on the encoded corpus (``train_centroids``: Lloyd's under
+    ``lax.scan``, inner-product assignment, re-normalized means —
+    normalized embeddings make cosine == MIPS, the index's contract);
+  * **inverted lists, contiguous + padded** — items are bucketed by
+    nearest centroid into one (C, L, d) embedding block and one (C, L)
+    i32 global-index block, L = the longest list rounded up to a lane
+    multiple; the pad slots carry (0-rows, BIG_IDX) so they mask exactly
+    like the MIPS kernel's padded corpus rows. One gather per probe then
+    lands a whole list as one contiguous tile — no per-item pointer
+    chasing on device;
+  * **nprobe search** — per query, score the C centroids (the only full
+    sweep left, C ≪ N), take the ``nprobe`` closest lists, and stream
+    their tiles through the same running-top-k machinery as the fused
+    kernel: a ``lax.scan`` over groups of ``probe_chunk`` probe ranks
+    carrying the running (Q, k) state, merged by ``_select_topk`` (value
+    desc, lowest GLOBAL index on ties — positional stability is NOT
+    enough here because later probes may hold smaller indices). Work per
+    query drops from O(N·d) to O(C·d + nprobe·L·d), with candidate
+    residency bounded at O(Q·probe_chunk·L·d);
+  * **exact-tier fallback** — the flat embeddings stay resident, and
+    ``search`` routes to ``mips_topk`` whenever the pruned tier cannot
+    honor the request (``nprobe <= 0``, or fewer than k candidate slots
+    in the probed lists); ``search_exact`` forces it.
+
+``nprobe == num_centroids`` scans every list exactly once, so it
+recovers the exact-tier result (the tier-1 property test); smaller
+``nprobe`` trades recall for qps — the ``retrieval_scale`` bench measures
+that curve and CI gates recall@10 at the default ``nprobe``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mips_topk import BIG_IDX, NEG_INF, _select_topk, mips_topk
+from repro.retrieval.index import CorpusIndex, encode_corpus_chunked, \
+    l2_normalize
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@functools.partial(jax.jit, static_argnames=("num_centroids", "iters"))
+def train_centroids(embeddings, *, num_centroids: int, iters: int = 8,
+                    seed: int = 0):
+    """Spherical k-means on (N, d) normalized embeddings -> (C, d)
+    normalized centroids. Lloyd's iterations under ``lax.scan``:
+    inner-product assignment (argmax breaks ties toward the lowest
+    centroid), segment-sum means, empty clusters keep their previous
+    centroid, means re-normalized onto the sphere."""
+    emb = embeddings.astype(F32)
+    n, _ = emb.shape
+    key = jax.random.PRNGKey(seed)
+    cent0 = emb[jax.random.permutation(key, n)[:num_centroids]]
+
+    def step(cent, _):
+        assign = jnp.argmax(emb @ cent.T, axis=1)
+        sums = jax.ops.segment_sum(emb, assign,
+                                   num_segments=num_centroids)
+        counts = jax.ops.segment_sum(jnp.ones((n,), F32), assign,
+                                     num_segments=num_centroids)
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts, 1.0)[:, None], cent)
+        return l2_normalize(new), None
+
+    cent, _ = jax.lax.scan(step, cent0, None, length=iters)
+    return cent
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "nprobe", "n_total", "probe_chunk"))
+def _ivf_search(q, centroids, lists_emb, lists_idx, *, k: int, nprobe: int,
+                n_total: int, probe_chunk: int):
+    """The pruned search program: coarse top-nprobe, then a running-top-k
+    scan over GROUPS of ``probe_chunk`` probe ranks. Each group gathers
+    its lists as one (Q, probe_chunk·L, d) tile and merges once — peak
+    candidate residency is O(Q · probe_chunk · L · d), never the full
+    O(Q · nprobe · L · d), and fewer merge rounds beat a per-probe scan
+    (the per-step select is the fixed cost). ``probe_chunk == nprobe``
+    collapses to a single gather + one merge."""
+    q = q.astype(F32)
+    qn, d = q.shape
+    ll = lists_emb.shape[1]
+    _, probes = jax.lax.top_k(q @ centroids.T, nprobe)       # (Q, nprobe)
+    pc = max(1, min(probe_chunk, nprobe))
+    pad = (-nprobe) % pc
+    if pad:
+        # repeat the last probe to fill the group; duplicated candidates
+        # are harmless — _select_topk takes every position matching the
+        # chosen (value, index) pair in one round
+        probes = jnp.concatenate(
+            [probes, jnp.repeat(probes[:, -1:], pad, axis=1)], axis=1)
+    groups = jnp.transpose(probes.reshape(qn, -1, pc), (1, 0, 2))
+
+    def body(carry, g_col):                                  # g_col: (Q, pc)
+        vals, idxs = carry
+        ce = lists_emb[g_col].astype(F32).reshape(qn, pc * ll, d)
+        ci = lists_idx[g_col].reshape(qn, pc * ll)
+        s = jax.lax.dot_general(q, ce, (((1,), (2,)), ((0,), (0,))),
+                                preferred_element_type=F32)  # (Q, pc·L)
+        s = jnp.where(ci < n_total, s, NEG_INF)
+        cand_v = jnp.concatenate([vals, s], axis=1)
+        cand_i = jnp.concatenate([idxs, ci], axis=1)
+        return _select_topk(cand_v, cand_i, k), None
+
+    init = (jnp.full((qn, k), NEG_INF, F32),
+            jnp.full((qn, k), BIG_IDX, I32))
+    (vals, idxs), _ = jax.lax.scan(body, init, groups)
+    return vals, idxs
+
+
+class IVFIndex:
+    """Inverted-file approximate index over an encoded corpus."""
+
+    def __init__(self, embeddings, centroids, *, nprobe: int = 8,
+                 list_pad: int = 8, normalized: bool = True):
+        if embeddings.ndim != 2:
+            raise ValueError(f"embeddings must be (N, d), "
+                             f"got {embeddings.shape}")
+        self.embeddings = embeddings
+        self.centroids = jnp.asarray(centroids, F32)
+        self.nprobe = int(nprobe)
+        self.normalized = normalized
+        n, d = embeddings.shape
+        c = self.centroids.shape[0]
+        if not 1 <= self.nprobe <= c:
+            raise ValueError(f"nprobe={nprobe} must be in [1, "
+                             f"num_centroids={c}]")
+        # ---- contiguous padded inverted lists (host-side, build time) ----
+        assign = np.asarray(
+            jnp.argmax(embeddings.astype(F32) @ self.centroids.T, axis=1))
+        counts = np.bincount(assign, minlength=c)
+        pad_to = max(1, int(list_pad))
+        ll = int(-(-max(int(counts.max()), 1) // pad_to) * pad_to)
+        lists_idx = np.full((c, ll), BIG_IDX, np.int32)
+        emb_np = np.asarray(embeddings)
+        lists_emb = np.zeros((c, ll, d), emb_np.dtype)
+        for ci in range(c):
+            members = np.nonzero(assign == ci)[0]   # ascending global idx
+            lists_idx[ci, :len(members)] = members
+            lists_emb[ci, :len(members)] = emb_np[members]
+        self.list_len = ll
+        self.list_counts = counts
+        self.lists_idx = jnp.asarray(lists_idx)
+        self.lists_emb = jnp.asarray(lists_emb)
+
+    @property
+    def num_items(self) -> int:
+        return self.embeddings.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.embeddings.shape[1]
+
+    @property
+    def num_centroids(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def fill(self) -> float:
+        """Occupied fraction of the padded (C, L) layout — the memory
+        overhead of contiguous lists is 1/fill."""
+        return self.num_items / float(self.num_centroids * self.list_len)
+
+    # -- build ---------------------------------------------------------------
+    @classmethod
+    def from_index(cls, index: CorpusIndex, *, num_centroids: int,
+                   nprobe: int = 8, iters: int = 8, seed: int = 0,
+                   list_pad: int = 8) -> "IVFIndex":
+        cent = train_centroids(index.embeddings.astype(F32),
+                               num_centroids=num_centroids, iters=iters,
+                               seed=seed)
+        return cls(index.embeddings, cent, nprobe=nprobe, list_pad=list_pad,
+                   normalized=index.normalized)
+
+    @classmethod
+    def build(cls, encode_fn: Callable, params, corpus, *,
+              num_centroids: int, nprobe: int = 8, iters: int = 8,
+              seed: int = 0, chunk: int = 256, normalize: bool = True,
+              dtype=jnp.float32) -> "IVFIndex":
+        z = encode_corpus_chunked(encode_fn, params, corpus, chunk=chunk,
+                                  normalize=normalize, dtype=dtype)
+        cent = train_centroids(z.astype(F32), num_centroids=num_centroids,
+                               iters=iters, seed=seed)
+        return cls(z, cent, nprobe=nprobe, normalized=normalize)
+
+    # -- search --------------------------------------------------------------
+    def search_exact(self, queries, k: int, *, backend: str = "auto", **kw):
+        """The exact tier: full ``mips_topk`` over the flat embeddings."""
+        return mips_topk(queries.astype(F32), self.embeddings, k,
+                         backend=backend, **kw)
+
+    def search(self, queries, k: int, *, nprobe: Optional[int] = None,
+               probe_chunk: int = 8, backend: str = "auto", **kw):
+        """Approximate top-k: queries (Q, d) -> ((Q, k) f32 scores, (Q, k)
+        i32 global item indices), (score desc, lowest-index ties) order.
+
+        ``nprobe`` overrides the index default; ``nprobe <= 0`` — or a
+        request the pruned tier cannot honor (k exceeding the probed
+        lists' candidate slots) — falls back to the exact tier.
+        ``probe_chunk`` bounds candidate residency (O(Q·probe_chunk·L·d)
+        gathered per merge round). ``backend`` and ``kw`` only shape the
+        exact-tier fallback; the pruned program is pure jnp (gathers +
+        running top-k)."""
+        p = self.nprobe if nprobe is None else int(nprobe)
+        p = min(p, self.num_centroids)
+        if p <= 0 or p * self.list_len < k:
+            return self.search_exact(queries, k, backend=backend, **kw)
+        if not 1 <= k <= self.num_items:
+            raise ValueError(f"k={k} must be in [1, corpus size "
+                             f"{self.num_items}]")
+        return _ivf_search(queries, self.centroids, self.lists_emb,
+                           self.lists_idx, k=k, nprobe=p,
+                           n_total=self.num_items,
+                           probe_chunk=int(probe_chunk))

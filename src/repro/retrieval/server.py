@@ -1,13 +1,22 @@
 """Batched retrieval query server: the online half of serving.
 
-Wraps a :class:`repro.retrieval.CorpusIndex` behind a fixed-batch jitted
-search (one compiled program per (batch, k) shape — ragged request batches
-pad up to ``batch`` and slice back, the usual serving shape discipline) and
-keeps per-batch latency samples so a run reports the numbers a serving
-dashboard needs: queries/sec and p50/p99 latency vs corpus size.
-Wall-clock is measured host-side around a ``block_until_ready`` so a
-latency sample covers the full dispatch + compute + readback path a caller
-would see.
+Wraps a :class:`repro.retrieval.CorpusIndex` (or its sharded / IVF
+drop-ins — anything with ``dim`` and ``search``) behind a fixed-batch
+jitted search (one compiled program per (batch, k) shape — ragged request
+batches pad up to ``batch`` and slice back, the usual serving shape
+discipline) and keeps per-batch latency samples so a run reports the
+numbers a serving dashboard needs: queries/sec and p50/p99 latency vs
+corpus size. Wall-clock is measured host-side around a
+``block_until_ready`` so a latency sample covers the full dispatch +
+compute + readback path a caller would see.
+
+Two throughput numbers, deliberately distinct: ``qps`` is wall-clock
+(queries / window from first sample start to last sample end — what a
+load generator observes, gaps between requests included), ``qps_serial``
+is the serve-time-only rate (queries / sum of per-batch latencies — the
+server's capacity if requests arrived back-to-back). Back-to-back
+benches make them nearly equal; a think-time client makes ``qps`` the
+honest dashboard number and ``qps_serial`` the capacity bound.
 """
 from __future__ import annotations
 
@@ -29,7 +38,7 @@ class QueryServer:
         self.index = index
         self.k = k
         self.batch = batch
-        self._lat_us: list[float] = []
+        self._samples: list[tuple[float, float]] = []   # (start_s, end_s)
         self._queries = 0
 
         def search(q):
@@ -51,29 +60,37 @@ class QueryServer:
         if b > self.batch:
             raise ValueError(f"request batch {b} exceeds the compiled "
                              f"serving batch {self.batch}")
+        if queries.ndim != 2 or queries.shape[-1] != self.index.dim:
+            raise ValueError(
+                f"queries must be (B, {self.index.dim}) to match the "
+                f"index embedding dim, got {tuple(queries.shape)}")
         if b < self.batch:
             queries = jnp.pad(queries, ((0, self.batch - b), (0, 0)))
         t0 = time.perf_counter()
         vals, idxs = jax.block_until_ready(self._search(queries))
-        self._lat_us.append((time.perf_counter() - t0) * 1e6)
+        self._samples.append((t0, time.perf_counter()))
         self._queries += b
         return vals[:b], idxs[:b]
 
     def stats(self) -> Optional[dict]:
-        """Serving stats over every recorded batch: queries/sec and
-        p50/p99 per-batch latency (us). None before any query."""
-        if not self._lat_us:
+        """Serving stats over every recorded batch: wall-clock ``qps``
+        (first sample start to last sample end), serve-time-only
+        ``qps_serial`` (sum of per-batch latencies), and p50/p99 per-batch
+        latency (us). None before any query."""
+        if not self._samples:
             return None
-        lat = np.asarray(self._lat_us)
-        total_s = float(lat.sum()) / 1e6
+        lat = np.asarray([(t1 - t0) * 1e6 for t0, t1 in self._samples])
+        serial_s = float(lat.sum()) / 1e6
+        wall_s = self._samples[-1][1] - self._samples[0][0]
         return {
-            "batches": len(self._lat_us),
+            "batches": len(self._samples),
             "queries": self._queries,
-            "qps": self._queries / max(total_s, 1e-12),
+            "qps": self._queries / max(wall_s, 1e-12),
+            "qps_serial": self._queries / max(serial_s, 1e-12),
             "p50_us": float(np.percentile(lat, 50)),
             "p99_us": float(np.percentile(lat, 99)),
         }
 
     def reset_stats(self):
-        self._lat_us.clear()
+        self._samples.clear()
         self._queries = 0

@@ -1,4 +1,5 @@
 from repro.sharding.multihost import (  # noqa: F401
-    host_local_to_global, make_multihost_mesh, maybe_initialize_distributed)
+    host_local_to_global, make_corpus_mesh, make_multihost_mesh,
+    maybe_initialize_distributed)
 from repro.sharding.specs import (  # noqa: F401
     param_pspecs, batch_pspec, cache_pspecs, named, DATA_AXES)

@@ -78,6 +78,27 @@ def make_multihost_mesh(axis_names: Tuple[str, str] = ("data", "client")):
     return Mesh(devices.reshape(jax.process_count(), per_host), axis_names)
 
 
+def make_corpus_mesh(num_shards: Optional[int] = None,
+                     axis: str = "corpus") -> Mesh:
+    """1-D retrieval-serving mesh: ``num_shards`` devices (default all)
+    along a single ``axis`` ("corpus") — one index shard per device.
+
+    Unlike the training mesh's (process, local-device) grid, corpus
+    sharding is layout-flat: ``jax.devices()`` enumerates globally in
+    process order, so shard s of the contiguous partition lands on device
+    s and each process holds a contiguous run of shards — which is what
+    lets ``ShardedCorpusIndex`` feed ``host_local_to_global`` its local
+    slice. Works single-process (forced device counts included) and under
+    an initialized jax.distributed runtime alike.
+    """
+    devices = np.array(jax.devices())
+    s = len(devices) if num_shards is None else num_shards
+    if not 1 <= s <= len(devices):
+        raise ValueError(f"num_shards={s} must be in [1, device count "
+                         f"{len(devices)}]")
+    return Mesh(devices[:s], (axis,))
+
+
 def host_local_to_global(mesh: Mesh, spec: P, tree):
     """Assemble per-process host-local shards into global arrays.
 

@@ -91,36 +91,91 @@ print("DIST_OK", flush=True)
 """
 
 
+# 4-shard corpus mesh over 2 processes x 2 devices: each host materializes
+# only its 2 addressable shards, the shard_map all_gather merges candidates,
+# and the result must match the single-device search BIT-FOR-BIT — ragged
+# N=90 (pad rows mask via n_total) and rows duplicated across shard
+# boundaries (lowest-global-index tie-break survives the wire).
+_SHARDED_RETRIEVAL_SCRIPT = """
+from repro.sharding import make_corpus_mesh, maybe_initialize_distributed
+assert maybe_initialize_distributed(), "REPRO_* env contract not picked up"
+
+import jax, jax.numpy as jnp
+import numpy as np
+assert jax.process_count() == 2, jax.process_count()
+assert jax.device_count() == 4, jax.device_count()
+
+from repro.kernels.mips_topk import mips_topk
+from repro.retrieval import ShardedCorpusIndex, l2_normalize
+
+key = jax.random.PRNGKey(0)
+kq, kc = jax.random.split(key)
+q = l2_normalize(jax.random.normal(kq, (6, 16), jnp.float32))
+c = l2_normalize(jax.random.normal(kc, (90, 16), jnp.float32))
+# exact duplicates straddling shard boundaries (shard_size = 23):
+c = c.at[61].set(c[2]).at[35].set(c[2]).at[88].set(c[40])
+# query 0 IS the duplicated row -> rows {2, 35, 61} tie at the top and
+# the merge must break toward the lowest global index
+q = q.at[0].set(c[2])
+
+mesh = make_corpus_mesh(4)
+assert mesh.shape["corpus"] == 4, mesh.shape
+idx = ShardedCorpusIndex(c, 4, mesh=mesh)
+v, i = idx.search(q, 5, backend="chunked")
+want_v, want_i = mips_topk(q, c, 5, backend="chunked")
+
+got_v = np.asarray(v.addressable_data(0))
+got_i = np.asarray(i.addressable_data(0))
+np.testing.assert_array_equal(got_v, np.asarray(want_v))
+np.testing.assert_array_equal(got_i, np.asarray(want_i))
+assert got_i.dtype == np.int32, got_i.dtype
+# the duplicated winner resolves to the LOWEST global index (row 2),
+# then the copies in shards 1 and 2 follow in ascending order
+assert got_i[0, 0] == 2, got_i[0]
+assert got_i[0, 1] == 35 and got_i[0, 2] == 61, got_i[0]
+
+print("DIST_OK", flush=True)
+"""
+
+
 def _free_port() -> int:
     with socket.socket() as s:
         s.bind(("127.0.0.1", 0))
         return s.getsockname()[1]
 
 
+def _run_two_process(script: str):
+    port = _free_port()
+    procs = []
+    for rank in range(2):
+        env = dict(os.environ)
+        env.update({
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": (env.get("XLA_FLAGS", "") +
+                          " --xla_force_host_platform_device_count=2"
+                          ).strip(),
+            "PYTHONPATH": os.pathsep.join(
+                [os.path.join(os.path.dirname(__file__), "..", "src"),
+                 env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+            "REPRO_COORDINATOR": f"127.0.0.1:{port}",
+            "REPRO_NUM_PROCESSES": "2",
+            "REPRO_PROCESS_ID": str(rank),
+        })
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", script], env=env,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+    outs = [p.communicate(timeout=420) for p in procs]
+    for rank, (p, (out, err)) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, (
+            f"rank {rank}: stdout={out}\nstderr={err}")
+        assert "DIST_OK" in out, f"rank {rank}: stdout={out}"
+
+
 class TestMultiHost:
     @pytest.mark.slow
     def test_two_process_mesh_matches_single_device(self):
-        port = _free_port()
-        procs = []
-        for rank in range(2):
-            env = dict(os.environ)
-            env.update({
-                "JAX_PLATFORMS": "cpu",
-                "XLA_FLAGS": (env.get("XLA_FLAGS", "") +
-                              " --xla_force_host_platform_device_count=2"
-                              ).strip(),
-                "PYTHONPATH": os.pathsep.join(
-                    [os.path.join(os.path.dirname(__file__), "..", "src"),
-                     env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
-                "REPRO_COORDINATOR": f"127.0.0.1:{port}",
-                "REPRO_NUM_PROCESSES": "2",
-                "REPRO_PROCESS_ID": str(rank),
-            })
-            procs.append(subprocess.Popen(
-                [sys.executable, "-c", _DIST_SCRIPT], env=env,
-                stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
-        outs = [p.communicate(timeout=420) for p in procs]
-        for rank, (p, (out, err)) in enumerate(zip(procs, outs)):
-            assert p.returncode == 0, (
-                f"rank {rank}: stdout={out}\nstderr={err}")
-            assert "DIST_OK" in out, f"rank {rank}: stdout={out}"
+        _run_two_process(_DIST_SCRIPT)
+
+    @pytest.mark.slow
+    def test_two_process_sharded_retrieval_bitwise(self):
+        _run_two_process(_SHARDED_RETRIEVAL_SCRIPT)

@@ -1,0 +1,401 @@
+"""Sharded + approximate retrieval (PR 9): kernel offset contract,
+mesh-partitioned search exactness, IVF tier properties, drift-gated
+refresh, and the engine's stateful refreshing eval.
+
+The sharded contract under test is strict: the per-shard fused kernel +
+all-gather merge must match single-device ``mips_topk`` BIT-FOR-BIT —
+scores AND indices, including the lowest-global-index tie-break across
+duplicated rows placed in DIFFERENT shards, and ragged corpora whose
+size is not divisible by the shard count. The IVF property test pins the
+complementary guarantee: ``nprobe == num_centroids`` scans every list
+once and recovers the exact result (indices bit-for-bit; scores to f32
+tolerance — the batched list dot re-associates differently than the 2-D
+matmul).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mips_topk import BIG_IDX, mips_topk, mips_topk_chunked
+from repro.retrieval import (CorpusIndex, IVFIndex, QueryServer,
+                             ShardedCorpusIndex, encode_corpus_chunked,
+                             l2_normalize, make_refreshing_retrieval_eval,
+                             refresh_embeddings, sharded_mips_topk,
+                             train_centroids)
+from repro.retrieval.sharded import stack_shards
+
+from test_retrieval import _toy_engine
+
+
+def _qc(key, qn, n, d, dup_rows=()):
+    kq, kc = jax.random.split(key)
+    q = jax.random.normal(kq, (qn, d), jnp.float32)
+    c = jax.random.normal(kc, (n, d), jnp.float32)
+    for a, b in dup_rows:
+        c = c.at[a].set(c[b])
+    return q, c
+
+
+def _assert_bitwise(got, want):
+    gv, gi = got
+    wv, wi = want
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert gi.dtype == jnp.int32
+
+
+class TestKernelOffsetContract:
+    """index_offset/n_total: shard-local search emits GLOBAL indices and
+    masks rows past the global end in-kernel."""
+
+    @pytest.mark.parametrize("backend", ["chunked", "interpret"])
+    def test_offset_slice_matches_global(self, backend):
+        q, c = _qc(jax.random.PRNGKey(0), 5, 96, 16)
+        k, lo, rows = 4, 32, 48
+        # search only rows [lo, lo+rows) with their global offset: must
+        # equal the offset-free search on that slice, indices shifted up
+        v, i = mips_topk(q, c[lo:lo + rows], k, backend=backend,
+                         index_offset=jnp.asarray(lo, jnp.int32),
+                         n_total=96)
+        ref_v, ref_i = mips_topk(q, c[lo:lo + rows], k, backend="chunked")
+        np.testing.assert_array_equal(np.asarray(i),
+                                      np.asarray(ref_i) + lo)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(ref_v))
+
+    @pytest.mark.parametrize("backend", ["chunked", "interpret"])
+    def test_ragged_tail_masks_past_n_total(self, backend):
+        """Padding rows past n_total must never surface, even when their
+        scores would win."""
+        q, c = _qc(jax.random.PRNGKey(1), 4, 40, 8)
+        pad = jnp.concatenate([c[32:], 100.0 * q[:4][:4]], axis=0)
+        # shard rows [32, 44) but only 40 global rows exist: the 4 huge
+        # appended rows sit past the end and must mask to sentinels
+        v, i = mips_topk(q, pad, 3, backend=backend,
+                         index_offset=jnp.asarray(32, jnp.int32),
+                         n_total=40)
+        assert np.asarray(i).max() < 40
+        want_v, want_i = mips_topk(q, c[32:40], 3, backend="chunked")
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(i),
+                                      np.asarray(want_i) + 32)
+
+    def test_default_path_unchanged(self):
+        """index_offset=None compiles the exact pre-change program."""
+        q, c = _qc(jax.random.PRNGKey(2), 3, 64, 8)
+        _assert_bitwise(mips_topk_chunked(q, c, k=5),
+                        mips_topk_chunked(q, c, k=5, index_offset=None,
+                                          n_total=None))
+
+
+class TestShardedExactness:
+    """Bit-for-bit equality of sharded and single-device search."""
+
+    @pytest.mark.parametrize("n,shards,k", [
+        (101, 3, 7),    # ragged: 101 = 3*34 - 1
+        (128, 4, 10),   # even split
+        (97, 5, 3),     # ragged prime
+        (64, 1, 16),    # degenerate single shard
+    ])
+    def test_bitwise_vs_single_device(self, n, shards, k):
+        q, c = _qc(jax.random.PRNGKey(3), 6, n, 12)
+        want = mips_topk(q, c, k, backend="chunked")
+        got = sharded_mips_topk(q, stack_shards(c, shards), k, n_total=n,
+                                backend="chunked")
+        _assert_bitwise(got, want)
+
+    @pytest.mark.parametrize("backend", ["chunked", "interpret"])
+    def test_block_padding_rows_never_surface(self, backend):
+        """Regression: a NON-last shard's internal zero-pad rows (added to
+        round shard_size up to the chunk/block size) sit at valid global
+        positions belonging to the NEXT shard, so the global-position mask
+        alone cannot catch them — they score 0.0 against any query, which
+        WINS whenever the true top-k scores are all negative. shard_size
+        650 > default chunk/block 512 with 650 % 512 != 0 exercises
+        exactly that layout."""
+        kq, kc = jax.random.split(jax.random.PRNGKey(13))
+        q = jnp.abs(jax.random.normal(kq, (3, 8), jnp.float32))
+        c = -jnp.abs(jax.random.normal(kc, (1300, 8), jnp.float32))
+        want = mips_topk(q, c, 5, backend="chunked")
+        got = sharded_mips_topk(q, stack_shards(c, 2), 5, n_total=1300,
+                                backend=backend)
+        _assert_bitwise(got, want)
+        # every true score is negative: any surfaced 0.0 is a padding row
+        assert float(np.asarray(got[0]).max()) < 0.0
+
+    def test_cross_shard_duplicate_tie_break(self):
+        """Duplicated rows in DIFFERENT shards tie exactly; the merge must
+        pick the lowest GLOBAL index, like lax.top_k's stable order."""
+        # 90 rows over 3 shards of 30: dups straddle shard boundaries
+        q, c = _qc(jax.random.PRNGKey(4), 5, 90, 8,
+                   dup_rows=[(61, 2), (35, 2), (88, 40)])
+        want = mips_topk(q, c, 6, backend="chunked")
+        got = sharded_mips_topk(q, stack_shards(c, 3), 6, n_total=90,
+                                backend="chunked")
+        _assert_bitwise(got, want)
+        # the duplicated top row's LOWEST global index must be the pick
+        top_idx = np.asarray(got[1])
+        assert (top_idx < 90).all()
+
+    def test_sharded_index_drop_in(self):
+        """ShardedCorpusIndex.search == CorpusIndex.search bit-for-bit,
+        and it serves through QueryServer unchanged."""
+        q, c = _qc(jax.random.PRNGKey(5), 8, 70, 16)
+        c = l2_normalize(c)
+        flat = CorpusIndex(c)
+        sharded = ShardedCorpusIndex(c, 4)
+        _assert_bitwise(sharded.search(q, 5, backend="chunked"),
+                        flat.search(q, 5, backend="chunked"))
+        srv = QueryServer(sharded, k=5, batch=8, backend="chunked").warmup()
+        v, i = srv.query(l2_normalize(q))
+        assert v.shape == (8, 5) and srv.stats()["queries"] == 8
+
+    def test_one_device_mesh_shard_map(self):
+        """The shard_map path on a 1-device corpus mesh matches the
+        single-device search bitwise (the multi-device version of this
+        assertion runs in tests/test_multihost.py)."""
+        from repro.sharding import make_corpus_mesh
+        q, c = _qc(jax.random.PRNGKey(6), 4, 33, 8)
+        mesh = make_corpus_mesh(1)
+        want = mips_topk(q, c, 3, backend="chunked")
+        got = ShardedCorpusIndex(c, 1, mesh=mesh).search(
+            q, 3, backend="chunked")
+        _assert_bitwise(got, want)
+
+    def test_validation(self):
+        c = jnp.zeros((10, 4))
+        with pytest.raises(ValueError, match="exceeds corpus size"):
+            stack_shards(c, 11)
+        with pytest.raises(ValueError, match="num_shards"):
+            ShardedCorpusIndex(c, 0)
+        with pytest.raises(ValueError, match="every shard"):
+            # k > shard_size: a shard cannot emit k candidates
+            sharded_mips_topk(jnp.zeros((2, 4)), stack_shards(c, 5), 3,
+                              n_total=10)
+
+
+class TestIVF:
+    def _clustered(self, key, n, d, true_c, qn, qnoise=0.1):
+        centers = l2_normalize(jax.random.normal(key, (true_c, d),
+                                                 jnp.float32))
+        per = -(-n // true_c)
+        c = l2_normalize(
+            jnp.repeat(centers, per, axis=0)[:n] + 0.2 * jax.random.normal(
+                jax.random.fold_in(key, 1), (n, d), jnp.float32))
+        qg = jax.random.randint(jax.random.fold_in(key, 2), (qn,), 0,
+                                true_c)
+        q = l2_normalize(centers[qg] + qnoise * jax.random.normal(
+            jax.random.fold_in(key, 3), (qn, d), jnp.float32))
+        return q, c
+
+    @pytest.mark.parametrize("n,cc,k", [(257, 7, 10), (512, 16, 5)])
+    def test_nprobe_full_recovers_exact(self, n, cc, k):
+        """nprobe == num_centroids scans every list once: indices must
+        match the exact search bit-for-bit (duplicated rows included —
+        _select_topk's global-index tie-break), scores to f32 tolerance."""
+        q, c = _qc(jax.random.PRNGKey(7), 9, n, 16,
+                   dup_rows=[(5, n - 1), (17, n - 2)])
+        c = l2_normalize(c)
+        ivf = IVFIndex.from_index(CorpusIndex(c), num_centroids=cc,
+                                  nprobe=cc, seed=1)
+        ev, ei = mips_topk(q, c, k, backend="chunked")
+        av, ai = ivf.search(q, k, nprobe=cc)
+        np.testing.assert_array_equal(np.asarray(ai), np.asarray(ei))
+        np.testing.assert_allclose(np.asarray(av), np.asarray(ev),
+                                   atol=1e-6)
+
+    def test_probe_chunking_invariant(self):
+        """probe_chunk only re-tiles the gather; results are identical."""
+        q, c = self._clustered(jax.random.PRNGKey(8), 300, 16, 10, 6)
+        ivf = IVFIndex.from_index(CorpusIndex(c), num_centroids=10, seed=2)
+        want = ivf.search(q, 5, nprobe=6, probe_chunk=6)
+        for pc in (1, 2, 4):
+            got = ivf.search(q, 5, nprobe=6, probe_chunk=pc)
+            _assert_bitwise(got, want)
+
+    def test_pruned_recall_on_clustered_corpus(self):
+        q, c = self._clustered(jax.random.PRNGKey(9), 600, 16, 20, 16)
+        ivf = IVFIndex.from_index(CorpusIndex(c), num_centroids=40,
+                                  nprobe=4, seed=3)
+        _, ei = mips_topk(q, c, 10, backend="chunked")
+        _, ai = ivf.search(q, 10)
+        recall = np.mean([
+            len(set(np.asarray(ai)[i]) & set(np.asarray(ei)[i])) / 10
+            for i in range(16)])
+        assert recall >= 0.9
+
+    def test_exact_fallbacks(self):
+        q, c = _qc(jax.random.PRNGKey(10), 4, 100, 8)
+        c = l2_normalize(c)
+        ivf = IVFIndex.from_index(CorpusIndex(c), num_centroids=8, seed=4)
+        want = mips_topk(q, c, 6, backend="chunked")
+        # nprobe <= 0 forces the exact tier
+        _assert_bitwise(ivf.search(q, 6, nprobe=0, backend="chunked"), want)
+        # k exceeding the probed candidate slots falls back too
+        k_big = ivf.list_len + 1
+        want_big = mips_topk(q, c, k_big, backend="chunked")
+        _assert_bitwise(ivf.search(q, k_big, nprobe=1, backend="chunked"),
+                        want_big)
+
+    def test_build_and_layout(self):
+        q, c = self._clustered(jax.random.PRNGKey(11), 200, 8, 5, 3)
+        ivf = IVFIndex.from_index(CorpusIndex(c), num_centroids=5,
+                                  nprobe=2, list_pad=8, seed=5)
+        assert ivf.lists_emb.shape == (5, ivf.list_len, 8)
+        assert ivf.list_len % 8 == 0
+        assert int(ivf.list_counts.sum()) == 200
+        # padding slots carry the sentinel index
+        idx = np.asarray(ivf.lists_idx)
+        for ci, cnt in enumerate(ivf.list_counts):
+            assert (idx[ci, cnt:] == BIG_IDX).all()
+            assert (np.diff(idx[ci, :cnt]) > 0).all()   # ascending global
+        with pytest.raises(ValueError, match="nprobe"):
+            IVFIndex(c, ivf.centroids, nprobe=6)
+
+    def test_train_centroids_normalized(self):
+        _, c = self._clustered(jax.random.PRNGKey(12), 150, 8, 6, 1)
+        cent = train_centroids(c, num_centroids=6, iters=4)
+        np.testing.assert_allclose(
+            np.asarray(jnp.linalg.norm(cent, axis=-1)), 1.0, atol=1e-5)
+
+
+def _drift_setup(n=130, d_in=12, d=8, seed=0):
+    """Two-group linear encoder: perturbing the first feature block's
+    weights drifts only the first 64 items."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(d_in, d)), jnp.float32)
+    feats = jnp.asarray(rng.normal(size=(n, d_in)), jnp.float32)
+    feats = feats.at[:64, d_in // 2:].set(0.0).at[64:, :d_in // 2].set(0.0)
+    w2 = w.at[:d_in // 2].add(0.5 * jnp.asarray(
+        rng.normal(size=(d_in // 2, d)), jnp.float32))
+    enc = lambda p, x: x @ p  # noqa: E731
+    return enc, w, w2, feats
+
+
+class TestRefresh:
+    def test_refresh_targets_only_drifted_blocks(self):
+        enc, w, w2, feats = _drift_setup()
+        idx = CorpusIndex.build(enc, w, feats, chunk=32)
+        emb0 = idx.embeddings
+        stats = idx.refresh(enc, w2, feats, threshold=1e-3, block=16,
+                            probes_per_block=4)
+        full = encode_corpus_chunked(enc, w2, feats, chunk=32)
+        # drifted half re-encoded, quiescent half bit-untouched
+        np.testing.assert_allclose(np.asarray(idx.embeddings[:64]),
+                                   np.asarray(full[:64]), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(idx.embeddings[64:]),
+                                      np.asarray(emb0[64:]))
+        assert stats["blocks_refreshed"] == 4
+        assert stats["items_encoded"] < 130  # cheaper than a rebuild
+
+    def test_huge_threshold_is_noop(self):
+        enc, w, w2, feats = _drift_setup()
+        idx = CorpusIndex.build(enc, w, feats, chunk=32)
+        emb0 = idx.embeddings
+        stats = idx.refresh(enc, w2, feats, threshold=100.0, block=16)
+        assert stats["blocks_refreshed"] == 0
+        np.testing.assert_array_equal(np.asarray(idx.embeddings),
+                                      np.asarray(emb0))
+
+    def test_pad_items_do_not_refresh_tail(self):
+        """The tail block pads with repeats of item 0; item 0 drifting
+        must not drag the (quiescent) tail block into a re-encode."""
+        enc, w, w2, feats = _drift_setup()   # n=130: tail block is padded
+        emb0 = encode_corpus_chunked(enc, w, feats, chunk=32)
+        _, stats = refresh_embeddings(enc, w2, feats, emb0, threshold=1e-3,
+                                      block=16, probes_per_block=4)
+        # 130 items / block 16 -> 9 blocks; only blocks 0-3 (items 0..63)
+        # drifted — the padded tail block (items 128-129) stays quiescent
+        assert float(stats["blocks_refreshed"]) == 4
+
+    def test_sharded_refresh_in_place(self):
+        enc, w, w2, feats = _drift_setup()
+        emb0 = encode_corpus_chunked(enc, w, feats, chunk=32)
+        sh = ShardedCorpusIndex(emb0, 4)
+        sh.refresh(enc, w2, feats, threshold=1e-3, block=16)
+        q = l2_normalize(jnp.asarray(
+            np.random.default_rng(3).normal(size=(5, emb0.shape[1])),
+            jnp.float32))
+        full = encode_corpus_chunked(enc, w2, feats, chunk=32)
+        _assert_bitwise(sh.search(q, 3, backend="chunked"),
+                        CorpusIndex(full).search(q, 3, backend="chunked"))
+
+
+class TestEngineStatefulEval:
+    def _reval(self, enc, threshold=0.05):
+        x = jax.random.normal(jax.random.PRNGKey(11), (40, 10), jnp.float32)
+        labels = jnp.arange(40) % 4
+
+        def embed(p, batch):
+            return enc(p, batch["x"])
+
+        return make_refreshing_retrieval_eval(
+            embed, {"x": x[:32]}, labels[:32], {"x": x[32:]}, labels[32:],
+            ks=(1, 5), chunk=16, threshold=threshold, block=8,
+            probes_per_block=2)
+
+    def test_engine_threads_refresh_state(self):
+        eng, params, opt_state, enc = _toy_engine()
+        eng, params, opt_state, enc = _toy_engine(
+            retrieval_eval=self._reval(enc))
+        _, _, m = eng.run(params, opt_state, jax.random.PRNGKey(0), 4)
+        assert {"recall_at_1", "recall_at_5", "mrr", "refresh_fraction",
+                "items_encoded"} <= set(m.retrieval)
+        frac = np.asarray(m.retrieval["refresh_fraction"])
+        assert frac.shape == (4,)
+        # cadence 2: rounds 0 and 2 evaluated, 1 and 3 NaN-skipped
+        assert not np.isnan(frac[[0, 2]]).any()
+        assert np.isnan(frac[[1, 3]]).all()
+
+    def test_stateful_eval_does_not_perturb_training(self):
+        eng0, params, opt_state, enc = _toy_engine()
+        p0, _, _ = eng0.run(params, opt_state, jax.random.PRNGKey(0), 4)
+        eng1, params, opt_state, enc = _toy_engine()
+        eng1, params, opt_state, enc = _toy_engine(
+            retrieval_eval=self._reval(enc))
+        p1, _, _ = eng1.run(params, opt_state, jax.random.PRNGKey(0), 4)
+        for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_quiescent_params_refresh_nothing(self):
+        """With unchanged params the drift probe finds nothing: the second
+        eval's refresh_fraction is exactly 0."""
+        _, _, _, enc = _toy_engine()
+        ev = self._reval(enc)
+        w = {"w1": jax.random.normal(jax.random.PRNGKey(0), (10, 16)) * 0.3,
+             "w2": jax.random.normal(jax.random.PRNGKey(7), (16, 6)) * 0.3}
+        state = ev.init_state(w)
+        m, state = jax.jit(ev)(w, state)
+        m2, _ = jax.jit(ev)(w, state)
+        assert float(m2["refresh_fraction"]) == 0.0
+
+    def test_stateful_validation(self):
+        bad = lambda p, s: ({}, s)  # noqa: E731
+        bad.stateful = True         # but no init_state
+        with pytest.raises(ValueError, match="init_state"):
+            _toy_engine(retrieval_eval=bad)
+
+
+class TestServerSatellites:
+    def test_query_dim_mismatch_raises(self):
+        idx = CorpusIndex(l2_normalize(jax.random.normal(
+            jax.random.PRNGKey(0), (32, 16), jnp.float32)))
+        srv = QueryServer(idx, k=3, batch=4, backend="chunked")
+        with pytest.raises(ValueError, match="embedding dim"):
+            srv.query(jnp.zeros((2, 8)))
+        with pytest.raises(ValueError, match="embedding dim"):
+            srv.query(jnp.zeros((2, 16, 1)))
+
+    def test_stats_report_wall_clock_and_serial_qps(self):
+        idx = CorpusIndex(l2_normalize(jax.random.normal(
+            jax.random.PRNGKey(0), (64, 8), jnp.float32)))
+        srv = QueryServer(idx, k=2, batch=4, backend="chunked").warmup()
+        import time
+        for _ in range(3):
+            srv.query(jnp.zeros((4, 8)))
+            time.sleep(0.01)        # think time: wall-clock qps < serial
+        s = srv.stats()
+        assert s["qps"] > 0 and s["qps_serial"] > 0
+        # serial excludes the sleeps, wall-clock includes two of them
+        assert s["qps"] < s["qps_serial"]
+        assert s["queries"] == 12 and s["batches"] == 3
