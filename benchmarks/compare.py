@@ -65,6 +65,13 @@ cancels machine speed and isolates what this repo controls:
     remaining Pallas-kernel computations (``kernel_roofline/{cco_stats,
     segment_sum,quantize}_fraction_pct``), same same-process calibration
     as the mips gate; each must not regress past ``--max-regress``.
+  * heterogeneity clustered-vs-global — every high-severity (>= 0.8)
+    clustered/global probe pair the sweep produced
+    (``heterogeneity_sweep/probe/<strategy>/sev<s>/{global,clustered}_
+    x1000``): the cluster-aware readout must not probe below the global
+    single-model aggregate at high severity HARD (both probes are
+    deterministic functions of the seeds — zero machine noise), plus a
+    no-regress floor on the canonical label @ 0.9 clustered accuracy.
   * retrieval scale — four retrieval_scale contracts, all same-process
     ratios or deterministic counts: the modeled S-device sharded search
     (measured per-shard time + measured merge time) must beat the
@@ -237,6 +244,37 @@ KERNEL_FRACTION_ROWS = ("kernel_roofline/cco_stats_fraction_pct",
                         "kernel_roofline/segment_sum_fraction_pct",
                         "kernel_roofline/quantize_fraction_pct")
 
+# the canonical clustered-vs-global cell every heterogeneity_sweep run
+# (smoke or full) produces — anchors the no-regress floor
+HET_CANONICAL = "heterogeneity_sweep/probe/label/sev0.9"
+
+
+def heterogeneity_pairs(rows: dict, which: str):
+    """Every high-severity (>= 0.8) clustered/global probe pair in
+    ``rows`` as (cell, global_acc_x1000, clustered_acc_x1000) — pairs are
+    discovered from the clustered rows so a fuller sweep gates every cell
+    it ran, and a clustered row whose global counterpart is missing fails
+    NAMED (never a KeyError)."""
+    pairs = []
+    for name in sorted(rows):
+        m = re.fullmatch(
+            r"(heterogeneity_sweep/probe/[^/]+/sev(\d+\.\d+))/"
+            r"clustered_x1000", name)
+        if not m or float(m.group(2)) < 0.8:
+            continue
+        cell = m.group(1)
+        pairs.append((cell,
+                      _us(rows, f"{cell}/global_x1000", which,
+                          "heterogeneity_sweep"),
+                      float(rows[name]["us_per_call"])))
+    if not pairs:
+        raise SystemExit(
+            f"gated benchmark rows '{HET_CANONICAL}/{{global,clustered}}"
+            f"_x1000' are missing from {which} — run `python "
+            f"benchmarks/run.py heterogeneity_sweep` to produce them "
+            f"(BENCH_SMOKE=1 for the CI-sized sweep)")
+    return pairs
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -396,6 +434,29 @@ def main(argv=None) -> int:
             print(f"FAIL: the {kname} kernel computation fell further below "
                   f"this machine's calibrated roofline than the gate allows")
             failed = True
+
+    het_pairs = heterogeneity_pairs(new, "the new BENCH.json")
+    het_canon_new = _us(new, f"{HET_CANONICAL}/clustered_x1000",
+                        "the new BENCH.json", "heterogeneity_sweep")
+    het_canon_base = _us(base, f"{HET_CANONICAL}/clustered_x1000",
+                         "the baseline", "heterogeneity_sweep")
+    het_floor = het_canon_base * (1.0 - args.max_regress)
+    for cell, g, c in het_pairs:
+        print(f"heterogeneity {cell}: global {g / 1000:.3f}, "
+              f"clustered {c / 1000:.3f}")
+        if c < g:
+            print(f"FAIL: clustered aggregation probes below the global "
+                  f"model at high severity ({cell}) — the per-cluster "
+                  f"slots lost their reason to exist (both probes are "
+                  f"deterministic: this is a code change, not noise)")
+            failed = True
+    print(f"heterogeneity clustered probe ({HET_CANONICAL}): baseline "
+          f"{het_canon_base / 1000:.3f}, new {het_canon_new / 1000:.3f}, "
+          f"floor {het_floor / 1000:.3f}")
+    if het_canon_new < het_floor:
+        print("FAIL: the clustered probe accuracy at the canonical "
+              "high-severity cell regressed past the gate")
+        failed = True
 
     (sh_new, bit_new, rec_new, ivf_new,
      frac_new, par_new) = retrieval_scale_terms(new, "the new BENCH.json")

@@ -1,0 +1,99 @@
+"""Cosine k-means over per-client encoding statistics — fully traceable,
+so cluster assignment runs INSIDE the round scan.
+
+The feature vector for client k is its flattened phase-1 stats dict (the
+same leaf-concat row layout as ``repro.hierarchy.fold_to_edges``, so the
+(K, D) matrix the assignment reads is literally the matrix the per-cluster
+fold dispatches through ``kernels/segment_sum.py``). Those statistics are
+*already transmitted* under the paper's Eq.-3 protocol, which is what
+makes stats-based clustering privacy-neutral: the server learns nothing a
+global round did not already ship.
+
+Everything here is deterministic given the rows: seeding is
+farthest-point (row 0, then repeatedly the row least similar to any
+chosen seed), assignment is argmax cosine similarity (ties toward the
+lowest cluster id, matching ``retrieval/ivf.train_centroids``), and Lloyd
+updates renormalize per-cluster means onto the sphere with empty clusters
+keeping their previous centroid. Determinism matters: the round scan
+carries centroids across rounds (warm start — streaming k-means), and
+resume/regression streams must be byte-stable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def stats_dim(spec) -> int:
+    """Row width D of a flattened stats dict, from the objective's
+    ``stat_spec(d)`` ({key: shape}) — no FLOPs."""
+    total = 0
+    for shape in spec.values():
+        size = 1
+        for s in shape:
+            size *= int(s)
+        total += size
+    return total
+
+
+def flatten_stats(st_k) -> jnp.ndarray:
+    """Stacked per-client stats (leaves (K, ...)) -> one (K, D) f32 row
+    matrix; leaves concatenate in tree order, the exact layout
+    ``hierarchy.fold_to_edges`` folds."""
+    leaves = jax.tree.leaves(st_k)
+    k = leaves[0].shape[0]
+    return jnp.concatenate(
+        [leaf.astype(F32).reshape(k, -1) for leaf in leaves], axis=1)
+
+
+def _unit(x, axis=-1):
+    return x / jnp.maximum(
+        jnp.linalg.norm(x, axis=axis, keepdims=True), 1e-12)
+
+
+def assign_clusters(rows, centroids) -> jnp.ndarray:
+    """(K, D) rows x (C, D) centroids -> (K,) int32 cosine assignment."""
+    sims = _unit(rows.astype(F32)) @ _unit(centroids.astype(F32)).T
+    return jnp.argmax(sims, axis=1).astype(jnp.int32)
+
+
+def seed_centroids(rows, num_clusters: int) -> jnp.ndarray:
+    """Deterministic farthest-point seeding on the unit sphere: seed 0 is
+    row 0; each next seed is the row whose best similarity to the chosen
+    seeds is lowest. (K, D) -> (C, D) unit rows."""
+    rows_n = _unit(rows.astype(F32))
+    cents = jnp.zeros((num_clusters, rows.shape[1]), F32).at[0].set(rows_n[0])
+
+    def body(j, cents):
+        sims = rows_n @ cents.T                          # (K, C)
+        picked = jnp.arange(num_clusters) < j            # (C,)
+        best = jnp.max(jnp.where(picked[None, :], sims, -jnp.inf), axis=1)
+        return cents.at[j].set(rows_n[jnp.argmin(best)])
+
+    return jax.lax.fori_loop(1, num_clusters, body, cents)
+
+
+def cosine_kmeans(rows, num_clusters: int, *, iters: int = 2,
+                  centroids=None):
+    """Spherical k-means: returns ``(assignments (K,) int32, centroids
+    (C, D) unit f32)``. ``centroids`` warm-starts Lloyd's (the round scan
+    passes the previous round's — streaming k-means); ``None`` seeds by
+    farthest point. Empty clusters keep their previous centroid."""
+    rows_n = _unit(rows.astype(F32))
+    if centroids is None:
+        centroids = seed_centroids(rows, num_clusters)
+
+    def step(cents, _):
+        ids = assign_clusters(rows_n, cents)
+        sums = jax.ops.segment_sum(rows_n, ids, num_segments=num_clusters)
+        counts = jax.ops.segment_sum(
+            jnp.ones((rows_n.shape[0],), F32), ids,
+            num_segments=num_clusters)
+        new = jnp.where(counts[:, None] > 0, _unit(sums), cents)
+        return new, None
+
+    cents, _ = jax.lax.scan(step, centroids.astype(F32), None,
+                            length=max(1, iters))
+    return assign_clusters(rows_n, cents), cents

@@ -1,0 +1,257 @@
+"""Cluster-aware aggregation: the engine's clustered two-phase round.
+
+Global FedAvg-style aggregation averages every client into ONE correlation
+target and ONE server model — exactly what hurts when the population is a
+mixture of heterogeneous client distributions (severe label skew). This
+module keeps the paper's two-phase protocol intact but makes the
+aggregation *cluster-aware*:
+
+  1. phase 1 runs unchanged: every cohort client ships its Eq.-3 stats
+     dict, computed under the shared readout params — the wire carries
+     nothing a global round would not (privacy-neutral, see
+     :mod:`repro.cluster.kmeans`);
+  2. the server flattens the per-client stats into the (K, D) row matrix
+     and runs cosine k-means INSIDE the round scan (warm-started from the
+     carried centroids), assigning each cohort client a cluster id;
+  3. per-cluster stats fold in ONE weighted ``kernels/segment_sum.py``
+     dispatch (``hierarchy.fold_to_edges`` — the same kernel the
+     hierarchical and async paths use), giving each cluster its own
+     correlation target for the phase-2 stop-grad combine;
+  4. each cluster owns a server-update slot: a params copy + optimizer
+     state, stepped (``jax.vmap`` over the cluster axis) by its own
+     cluster-folded delta average; clusters that received no cohort
+     clients this round are left untouched;
+  5. with a :class:`repro.hierarchy.HierarchicalChannel` (``num_edges ==
+     num_clusters``) the cluster ids BECOME the edge assignment — clients
+     route through their cluster's edge aggregator, so the hierarchy is
+     semantic, not just topological: the client hop encodes per-client
+     payloads, the fold lands per-cluster partials, and the edge hop
+     encodes one payload per cluster.
+
+``num_clusters <= 1`` never builds this body: the engine routes to the
+ordinary global round — the structural collapse idiom every prior engine
+extension uses (async_collapse, HierarchicalChannel.collapse_ideal) — so
+a single cluster is bit-identical (``== 0.0``) to the global path per
+registered objective (tested).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster import kmeans
+from repro.core import fed_sim
+from repro.hierarchy.aggregation import HierarchicalChannel, fold_to_edges
+from repro.kernels import ref as kernels_ref
+from repro.server import update as server_update_lib
+
+F32 = jnp.float32
+
+
+class ClusterState(NamedTuple):
+    """The clustered engine's scan-carry: per-cluster server-update slots
+    + the warm-start centroids."""
+    params_c: Any                   # params pytree, leading axis C
+    opt_c: Any                      # server-update state, leading axis C
+    centroids: jnp.ndarray          # (C, D) unit rows; zeros before the
+                                    # first round (seeded from round-0 stats)
+    initialized: jnp.ndarray        # () bool — centroids seeded yet?
+
+
+def init_cluster_state(params, opt_state, num_clusters: int,
+                       dim: int) -> ClusterState:
+    """Fresh slots: every cluster starts from the same (broadcast) params
+    and optimizer state; centroids seed from the first round's stats."""
+    stack = lambda t: jax.tree.map(                      # noqa: E731
+        lambda x: jnp.repeat(jnp.asarray(x)[None], num_clusters, axis=0), t)
+    return ClusterState(stack(params), stack(opt_state),
+                        jnp.zeros((num_clusters, dim), F32),
+                        jnp.zeros((), bool))
+
+
+def fold_to_clusters(tree_k, weights, cluster_ids, num_clusters: int,
+                     impl: str = "jnp"):
+    """Per-cluster weighted average of stacked per-client payloads:
+    ``(avg (C, ...) pytree, mass (C,))`` — the sums land in one
+    segment-sum dispatch over the whole flattened dict
+    (:func:`repro.hierarchy.fold_to_edges`), the per-cluster mass
+    normalizes them (empty clusters: mass 0, average 0)."""
+    sums = fold_to_edges(tree_k, weights, cluster_ids, num_clusters, impl)
+    mass = kernels_ref.segment_sum_ref(
+        weights.astype(F32)[:, None], cluster_ids, num_clusters)[:, 0]
+    denom = jnp.maximum(mass, 1e-12)
+    avg = jax.tree.map(
+        lambda v: v / denom.reshape((num_clusters,) + (1,) * (v.ndim - 1)),
+        sums)
+    return avg, mass
+
+
+def _take_cluster(tree_c, cid):
+    return jax.tree.map(lambda x: x[cid], tree_c)
+
+
+def make_cluster_round_body(encoder_apply: Callable, server_opt,
+                            cfg) -> Callable:
+    """Build round_fn(params, opt_state, cstate, batch, sizes, key) ->
+    (params, opt_state, cstate, metrics) for ``cfg.num_clusters > 1``.
+    ``params`` is the mass-weighted readout model (what probes, retrieval
+    evals, and checkpoints see); the real training state is the
+    per-cluster slots in ``cstate``."""
+    from repro.core import round_engine as engine_lib
+
+    num_clusters = int(cfg.num_clusters)
+    if cfg.algorithm != "dcco":
+        raise ValueError(
+            f"num_clusters clusters the two-phase stats round only "
+            f"(algorithm 'dcco'), got {cfg.algorithm!r}")
+    if cfg.stats_kernel != "off":
+        raise ValueError(
+            "stats_kernel aggregates phase-1 stats from the flattened "
+            "cohort; clustering assigns PER-CLIENT stats — needs "
+            "per-client payloads")
+    if cfg.scaffold:
+        raise ValueError(
+            "SCAFFOLD variates assume one shared broadcast model; the "
+            "clustered round broadcasts per-cluster params — disable "
+            "scaffold for clustered aggregation")
+    encoder_apply = engine_lib.cast_encoder_apply(encoder_apply,
+                                                  cfg.compute_dtype)
+    objective = fed_sim.resolve_objective(cfg.objective, cfg.lam)
+    server_update = server_update_lib.as_server_update(
+        cfg.server_update if cfg.server_update is not None else server_opt)
+    channel = cfg.channel
+    hier = isinstance(channel, HierarchicalChannel) and not channel.collapses
+    if channel is not None:
+        if getattr(channel, "noise_phases", None) is not None:
+            raise ValueError(
+                f"{channel!r} with num_clusters: per-cluster aggregates "
+                f"change the DP sensitivity — the accountant's epsilon "
+                f"would not cover what the round releases; run DP on the "
+                f"global path")
+        if isinstance(channel, HierarchicalChannel) and \
+                channel.num_edges != num_clusters:
+            raise ValueError(
+                f"cluster ids route clients through their own edge, so "
+                f"the tree needs one edge per cluster: num_edges="
+                f"{channel.num_edges} != num_clusters={num_clusters}")
+    fold_impl = channel.fold_impl if hier else cfg.cluster_fold
+
+    def _cluster_fold(ctx, tree_k, w, ids, phase):
+        """Per-cluster (sums, mass): the flat fold, or — through a
+        non-collapsing hierarchical channel — client-hop encode, fold BY
+        CLUSTER ID, edge-hop encode of one payload per cluster."""
+        if ctx is None:
+            return fold_to_clusters(tree_k, w, ids, num_clusters, fold_impl)
+        dec = channel.encode_decode(ctx, tree_k, phase)
+        if hier:
+            sums = fold_to_edges(dec, w, ids, num_clusters,
+                                 channel.fold_impl)
+            enc = channel.edge_channel.encode_decode(ctx.edge_ctx, sums,
+                                                     phase)
+            emask = ctx.edge_ctx.mask                    # (C,)
+            mass = kernels_ref.segment_sum_ref(
+                w.astype(F32)[:, None], ids, num_clusters)[:, 0] * emask
+            denom = jnp.maximum(mass, 1e-12)
+            avg = jax.tree.map(
+                lambda v: v * emask.reshape(
+                    (num_clusters,) + (1,) * (v.ndim - 1)) / denom.reshape(
+                    (num_clusters,) + (1,) * (v.ndim - 1)), enc)
+            return avg, mass
+        return fold_to_clusters(dec, w, ids, num_clusters, fold_impl)
+
+    def round_fn(params, opt_state, cstate, batch, sizes, key):
+        k_cohort = jax.tree.leaves(batch)[0].shape[0]
+        if num_clusters > k_cohort:
+            raise ValueError(
+                f"num_clusters={num_clusters} exceeds the cohort of "
+                f"{k_cohort} clients — every cluster needs a chance of "
+                f"cohort members")
+        n_pad = jax.tree.leaves(batch)[0].shape[1]
+        masks = fed_sim._client_masks(sizes, n_pad)
+        if channel is None:
+            ctx = None
+            w = sizes.astype(F32) / jnp.sum(sizes.astype(F32))
+        else:
+            ctx = channel.begin_round(key, sizes)
+            w = ctx.weights
+        wire = 0.0
+
+        # ---- phase 1: per-client stats under the shared readout params
+        def client_stats(b, m):
+            zf, zg = encoder_apply(params, b)
+            return objective.stats_masked(zf, zg, m)
+
+        st_k = jax.vmap(client_stats)(batch, masks)
+
+        # ---- in-scan cluster assignment on the flattened stats rows
+        rows = kmeans.flatten_stats(st_k)
+        cent_prev = jnp.where(cstate.initialized, cstate.centroids,
+                              kmeans.seed_centroids(rows, num_clusters))
+        ids, cents = kmeans.cosine_kmeans(
+            rows, num_clusters, iters=cfg.cluster_iters,
+            centroids=cent_prev)
+        if hier:
+            # semantic hierarchy: this round's edge assignment IS the
+            # cluster assignment (effective mask/weights recomputed)
+            ctx = channel.with_edge_ids(ctx, ids)
+            w = ctx.weights
+
+        # ---- per-cluster correlation targets: one weighted segment-sum
+        agg_c, mass_c = _cluster_fold(ctx, st_k, w, ids, "stats")
+        if ctx is not None:
+            wire = wire + channel.round_bytes(
+                ctx, jax.tree.map(lambda v: v[0], agg_c))
+
+        # ---- phase 2: client k trains ITS cluster's slot against ITS
+        # cluster's target
+        def client_update(b, m, cid):
+            p_k = _take_cluster(cstate.params_c, cid)
+            agg_k = _take_cluster(agg_c, cid)
+
+            def loss_fn(p):
+                zf, zg = encoder_apply(p, b)
+                local = objective.stats_masked(zf, zg, m)
+                return objective.loss_from_stats(
+                    objective.combine(local, agg_k))
+
+            return fed_sim.client_local_steps(
+                loss_fn, p_k, cfg.client_lr, cfg.local_steps,
+                prox_mu=cfg.prox_mu)
+
+        deltas, losses_k = jax.vmap(client_update)(batch, masks, ids)
+
+        # ---- per-cluster server-update slots (empty clusters frozen)
+        dbar_c, _ = _cluster_fold(ctx, deltas, w, ids, "update")
+        if ctx is not None:
+            wire = wire + channel.round_bytes(
+                ctx, jax.tree.map(lambda v: v[0], dbar_c))
+        p_new, o_new = jax.vmap(server_update.step)(
+            cstate.params_c, cstate.opt_c, dbar_c)
+        live = mass_c > 1e-12                            # (C,)
+
+        def keep(new, old):
+            return jax.tree.map(
+                lambda a, b: jnp.where(
+                    live.reshape((num_clusters,) + (1,) * (a.ndim - 1)),
+                    a, b), new, old)
+
+        params_c = keep(p_new, cstate.params_c)
+        opt_c = keep(o_new, cstate.opt_c)
+
+        # ---- readout model: this round's mass-weighted mean of the slots
+        m_norm = mass_c / jnp.maximum(jnp.sum(mass_c), 1e-12)
+        params_out = jax.tree.map(
+            lambda x: jnp.tensordot(m_norm, x.astype(F32), axes=1).astype(
+                x.dtype), params_c)
+
+        agg_g = jax.tree.map(lambda v: jnp.tensordot(w, v, axes=1), st_k)
+        metrics = fed_sim.RoundMetrics(
+            jnp.sum(w * losses_k), objective.encoding_std(agg_g),
+            jnp.asarray(wire, F32))
+        new_state = ClusterState(params_c, opt_c, cents,
+                                 jnp.ones((), bool))
+        return params_out, opt_state, new_state, metrics
+
+    return round_fn

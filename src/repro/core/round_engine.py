@@ -191,6 +191,20 @@ class EngineConfig(NamedTuple):
                                     # bit-identical baselines, same idiom as
                                     # HierarchicalChannel.collapse_ideal;
                                     # False forces the real buffered path
+    # --- cluster-aware aggregation (repro.cluster) ---
+    num_clusters: int = 0           # >1: cosine k-means on the per-client
+                                    # Eq.-3 stats assigns each cohort
+                                    # client a cluster inside the scan;
+                                    # per-cluster correlation targets +
+                                    # server-update slots (ClusterState
+                                    # rides the carry). 0/1 = the global
+                                    # path, bit-identical (structural
+                                    # collapse, the async_collapse idiom)
+    cluster_iters: int = 2          # Lloyd iterations per round (warm-
+                                    # started from the carried centroids)
+    cluster_fold: str = "jnp"       # per-cluster segment-sum fold impl
+                                    # (hierarchy.FOLD_IMPLS; a
+                                    # HierarchicalChannel's fold_impl wins)
     # --- periodic retrieval eval (repro.retrieval) ---
     retrieval_eval: Any = None      # traceable params -> {metric: scalar}
                                     # (repro.retrieval.make_retrieval_eval:
@@ -223,6 +237,11 @@ class EngineCarry(NamedTuple):
                                     # else empty) — threaded through the
                                     # scan so each periodic eval refreshes
                                     # rather than rebuilds the index
+    cluster: Any = ()               # cluster-aware aggregation state
+                                    # (repro.cluster.ClusterState when
+                                    # EngineConfig.num_clusters > 1:
+                                    # per-cluster params/opt slots +
+                                    # warm-start centroids, else empty)
 
 
 class EngineMetrics(NamedTuple):
@@ -905,9 +924,34 @@ class RoundEngine:
         self.sampler = sampler
         self.drift_state = None      # final drift carry of the last run()
         self.buffer_state = None     # final AsyncState of the last run()
+        self.cluster_state = None    # final ClusterState of the last run()
         self._streaming = config.cohort_chunk > 0
         self._async = config.async_k > 0
         self._async_real = False     # True when the buffered path runs
+        if config.num_clusters < 0:
+            raise ValueError(
+                f"num_clusters must be >= 0, got {config.num_clusters}")
+        # num_clusters <= 1: ONE cluster is the global aggregate by
+        # definition, so route to the global path — structurally
+        # bit-identical (the async_collapse / collapse_ideal idiom)
+        self._clustered = config.num_clusters > 1
+        if self._clustered:
+            if self._async:
+                raise ValueError(
+                    "num_clusters and async_k are not composed: the "
+                    "buffered scheduler re-associates contributions "
+                    "across ticks, but cluster targets and slots are "
+                    "per-dispatch — cluster the synchronous engine")
+            if self._streaming:
+                raise ValueError(
+                    "num_clusters assigns clusters from the materialized "
+                    "cohort's per-client stats; cohort_chunk never "
+                    "materializes the cohort — drop one")
+            if config.cohort_axis is not None:
+                raise ValueError(
+                    "num_clusters and cohort_axis are not composed: the "
+                    "k-means assignment and per-cluster slots fold on one "
+                    "host — shard the cohort or cluster it, not both")
         if self._async:
             from repro.core import buffer as buffer_lib
             from repro.data import latency as latency_lib
@@ -960,6 +1004,15 @@ class RoundEngine:
         elif self._streaming:
             self.round_fn = make_streaming_round_body(
                 encoder_apply, server_opt, config, sampler)
+        elif self._clustered:
+            from repro.cluster import make_cluster_round_body
+            self.round_fn = make_cluster_round_body(encoder_apply,
+                                                    server_opt, config)
+            # kept for sizing the fresh ClusterState (stats row width via
+            # jax.eval_shape — no FLOPs), same idiom as the async buffer
+            self._objective = fed_sim.resolve_objective(
+                config.objective, config.lam)
+            self._encoder_apply = encoder_apply
         else:
             self.round_fn = make_round_body(encoder_apply, server_opt,
                                             config, mesh)
@@ -979,7 +1032,7 @@ class RoundEngine:
             # so the selection/augmentation streams are unchanged vs the
             # channel-less engine — resume and regression baselines hold
             k_ch = jax.random.fold_in(rkey, _CHANNEL_SALT)
-            buffer = c.buffer
+            buffer, cluster = c.buffer, c.cluster
             if self._async_real:
                 batch, sizes, delays = self.sampler(k_sel, k_aug)
                 params, opt_state, drift, buffer, m = self.round_fn(
@@ -991,6 +1044,12 @@ class RoundEngine:
                 # chunk at a time — the full batch never materializes here
                 params, opt_state, drift, m = self.round_fn(
                     c.params, c.opt_state, c.drift, k_sel, k_aug, k_ch)
+                applied, stale = jnp.ones((), F32), jnp.zeros((), F32)
+            elif self._clustered:
+                batch, sizes = self.sampler(k_sel, k_aug)
+                params, opt_state, cluster, m = self.round_fn(
+                    c.params, c.opt_state, c.cluster, batch, sizes, k_ch)
+                drift = c.drift
                 applied, stale = jnp.ones((), F32), jnp.zeros((), F32)
             else:
                 if self._async:
@@ -1004,7 +1063,7 @@ class RoundEngine:
                 applied, stale = jnp.ones((), F32), jnp.zeros((), F32)
             rmet, reval = self._retrieval_metrics(params, r, c.reval)
             return (EngineCarry(params, opt_state, c.rng, drift, buffer,
-                                reval),
+                                reval, cluster),
                     EngineMetrics(m.loss, m.encoding_std,
                                   jnp.asarray(m.wire_bytes, F32),
                                   applied, stale, rmet))
@@ -1072,11 +1131,25 @@ class RoundEngine:
             self._objective.stat_spec(zf_s.shape[-1]), params,
             self._async_horizon)
 
+    def _init_cluster_state(self, params, opt_state):
+        """Fresh per-cluster slots; the centroid row width comes from the
+        objective's stat_spec via ``jax.eval_shape`` (no FLOPs)."""
+        from repro import cluster as cluster_lib
+        k0 = jax.random.PRNGKey(0)
+        batch_s, _ = jax.eval_shape(self.sampler, k0, k0)
+        client0 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), batch_s)
+        zf_s, _ = jax.eval_shape(self._encoder_apply, params, client0)
+        dim = cluster_lib.stats_dim(
+            self._objective.stat_spec(zf_s.shape[-1]))
+        return cluster_lib.init_cluster_state(
+            params, opt_state, self.config.num_clusters, dim)
+
     # -- full run -----------------------------------------------------------
     def run(self, params, opt_state, rng, rounds: int, *, start_round: int = 0,
             on_segment: Optional[Callable] = None, ckpt_dir: Optional[str] = None,
             ckpt_every: int = 0, ckpt_name: str = "engine",
-            drift_state=None, buffer_state=None):
+            drift_state=None, buffer_state=None, cluster_state=None):
         """Run ``rounds`` rounds; returns (params, opt_state, EngineMetrics).
 
         Metrics stream back per segment; ``on_segment(round_end, carry,
@@ -1138,7 +1211,11 @@ class RoundEngine:
         buffer = () if buffer_state is None else buffer_state
         if self._async_real and buffer_state is None:
             buffer = self._init_async_state(params)
-        carry = EngineCarry(params, opt_state, rng, drift, buffer, reval)
+        cluster = () if cluster_state is None else cluster_state
+        if self._clustered and cluster_state is None:
+            cluster = self._init_cluster_state(params, opt_state)
+        carry = EngineCarry(params, opt_state, rng, drift, buffer, reval,
+                            cluster)
         if self._donate:
             # segments donate their carry; copy once so the CALLER's buffers
             # survive the run (donation then recycles only engine-internal
@@ -1168,10 +1245,13 @@ class RoundEngine:
                     blob["drift"] = carry.drift
                 if self._async_real:
                     blob["buffer"] = carry.buffer
+                if self._clustered:
+                    blob["cluster"] = carry.cluster
                 save_checkpoint(path, blob, round_end)
                 last_ckpt = done
         self.drift_state = carry.drift if self.config.scaffold else None
         self.buffer_state = carry.buffer if self._async_real else None
+        self.cluster_state = carry.cluster if self._clustered else None
         if self.config.channel is not None:
             # host-side bookkeeping (e.g. the DP epsilon accountant)
             self.config.channel.finalize_rounds(done)

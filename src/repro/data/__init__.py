@@ -1,4 +1,6 @@
-from repro.data.partition import dirichlet_partition, iid_partition  # noqa: F401
+from repro.data.partition import (  # noqa: F401
+    PARTITIONS, PartitionSpec, build_partition, dirichlet_partition,
+    get_partition, iid_partition, label_dominance, register_partition)
 from repro.data.pipeline import FederatedDataset  # noqa: F401
 from repro.data.synthetic import (  # noqa: F401
     synthetic_labeled_images, synthetic_labeled_tokens)

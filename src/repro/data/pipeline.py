@@ -4,30 +4,46 @@ flat (N, ...) layout expected by the pod-scale fused step.
 """
 from __future__ import annotations
 
-from typing import Dict
+import warnings
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data import augment, partition
+from repro.data import augment
+from repro.data import partition as partition_lib
 
 
 class FederatedDataset:
     """Wraps (data, labels) + a client partition.
 
     data: dict of np arrays with leading N (e.g. {"images": ...} or
-    {"tokens": ...}); client_index: (num_clients, samples_per_client) int.
+    {"tokens": ...}); client_index: (num_clients, samples_per_client) int;
+    client_sizes: (num_clients,) valid-sample counts — rows of
+    client_index beyond a client's size are padding (masked out of every
+    stats/loss computation downstream), which is how quantity-skewed
+    partitions (``PartitionSpec("dirichlet_quantity", ...)``) and the
+    paper's variable-size DERM clients are carried.
     """
 
     def __init__(self, data: Dict[str, np.ndarray], labels: np.ndarray,
-                 client_index: np.ndarray, vocab: int = 0):
+                 client_index: np.ndarray, vocab: int = 0,
+                 client_sizes: Optional[np.ndarray] = None):
         self.data = data
         self.labels = labels
         self.client_index = client_index
         self.vocab = vocab
+        if client_sizes is None:
+            client_sizes = np.full((client_index.shape[0],),
+                                   client_index.shape[1], np.int64)
+        self.client_sizes = np.asarray(client_sizes, np.int64)
+        if self.client_sizes.shape != (client_index.shape[0],):
+            raise ValueError(
+                f"client_sizes shape {self.client_sizes.shape} does not "
+                f"match {client_index.shape[0]} clients")
         self._samplers: Dict[int, object] = {}
-        self._staged = None      # device-resident (data, client_index)
+        self._staged = None      # device-resident (data, index, sizes)
 
     @property
     def num_clients(self) -> int:
@@ -39,14 +55,42 @@ class FederatedDataset:
 
     @classmethod
     def build(cls, data, labels, *, num_clients, samples_per_client,
-              alpha: float, seed: int = 0, vocab: int = 0):
-        if alpha >= 1e6:
-            idx = partition.iid_partition(len(labels), num_clients,
-                                          samples_per_client, seed)
-        else:
-            idx = partition.dirichlet_partition(labels, num_clients,
-                                                samples_per_client, alpha, seed)
-        return cls(data, labels, idx, vocab=vocab)
+              partition=None, alpha: float = None,
+              seed: int = 0, vocab: int = 0):
+        """The one construction path: cut the client partition a
+        :class:`repro.data.partition.PartitionSpec` describes.
+
+        ``partition=PartitionSpec(strategy, severity)`` selects any
+        registered strategy (iid / uniform / label / dirichlet /
+        dirichlet_quantity, see :mod:`repro.data.partition`).
+
+        ``alpha=`` is the deprecated pre-PartitionSpec spelling; it maps
+        onto ``PartitionSpec("dirichlet", alpha=alpha)`` (alpha >= 1e6
+        still means IID) and produces a bit-identical client assignment
+        for existing seeds — tested ``==`` — so old configs, regression
+        baselines, and resume streams are unaffected.
+        """
+        if partition is not None and alpha is not None:
+            raise ValueError(
+                "pass partition=PartitionSpec(...) or the deprecated "
+                "alpha=, not both")
+        if partition is None:
+            if alpha is None:
+                raise TypeError(
+                    "FederatedDataset.build needs "
+                    "partition=PartitionSpec(...) (or the deprecated "
+                    "alpha=)")
+            warnings.warn(
+                "FederatedDataset.build(alpha=...) is deprecated; use "
+                "partition=PartitionSpec('dirichlet', alpha=alpha) or a "
+                "severity-mapped PartitionSpec",
+                DeprecationWarning, stacklevel=2)
+            partition = partition_lib.PartitionSpec(
+                "dirichlet", alpha=float(alpha))
+        idx, sizes = partition_lib.build_partition(
+            partition, labels, num_clients=num_clients,
+            samples_per_client=samples_per_client, seed=seed)
+        return cls(data, labels, idx, vocab=vocab, client_sizes=sizes)
 
     # ------------------------------------------------------------- rounds --
 
@@ -89,7 +133,7 @@ class FederatedDataset:
         gathered = {kk: jnp.asarray(v[idx.reshape(-1)])
                     for kk, v in self.data.items()}
         return self._two_views(k_aug, gathered, k, n), \
-            jnp.full((k,), n, jnp.int32)
+            jnp.asarray(self.client_sizes[sel], jnp.int32)
 
     def flat_round_batch(self, key, clients_per_round: int):
         """Same sampling, flattened to (K*n, ...) for the fused pod step."""
@@ -100,11 +144,12 @@ class FederatedDataset:
     # ------------------------------------------------- in-scan sampling --
 
     def _stage(self):
-        """Device-resident (data, client_index), staged once per dataset
-        and shared by every in-scan sampler."""
+        """Device-resident (data, client_index, client_sizes), staged once
+        per dataset and shared by every in-scan sampler."""
         if self._staged is None:
             self._staged = ({k: jnp.asarray(v) for k, v in self.data.items()},
-                            jnp.asarray(self.client_index))
+                            jnp.asarray(self.client_index),
+                            jnp.asarray(self.client_sizes, jnp.int32))
         return self._staged
 
     def make_round_sampler(self, clients_per_round: int):
@@ -120,7 +165,7 @@ class FederatedDataset:
         """
         if clients_per_round in self._samplers:
             return self._samplers[clients_per_round]
-        data, cindex = self._stage()
+        data, cindex, csizes = self._stage()
         num_clients, n = self.num_clients, self.samples_per_client
         k_round = clients_per_round
 
@@ -130,8 +175,7 @@ class FederatedDataset:
             idx = cindex[sel].reshape(-1)                    # (K*n,)
             gathered = {kk: v[idx] for kk, v in data.items()}
             out = self._two_views(k_aug, gathered, k_round, n)
-            sizes = jnp.full((k_round,), n, jnp.int32)
-            return out, sizes
+            return out, csizes[sel]
 
         self._samplers[clients_per_round] = sampler
         return sampler
@@ -152,7 +196,7 @@ class FederatedDataset:
         """
         from repro.data import latency as latency_lib
         model = latency_lib.resolve_latency(latency)
-        data, cindex = self._stage()
+        data, cindex, csizes = self._stage()
         num_clients, n = self.num_clients, self.samples_per_client
         k_round = clients_per_round
 
@@ -162,7 +206,7 @@ class FederatedDataset:
             idx = cindex[sel].reshape(-1)                    # (K*n,)
             gathered = {kk: v[idx] for kk, v in data.items()}
             out = self._two_views(k_aug, gathered, k_round, n)
-            sizes = jnp.full((k_round,), n, jnp.int32)
+            sizes = csizes[sel]
             dk = jax.random.fold_in(k_sel, latency_lib._LATENCY_SALT)
             delays = latency_lib.sample_delays(model, dk,
                                                sel.astype(jnp.int32))
@@ -190,7 +234,7 @@ class FederatedDataset:
             raise ValueError(
                 f"clients_per_round={clients_per_round} does not divide "
                 f"into chunks of {cohort_chunk}")
-        data, cindex = self._stage()
+        data, cindex, csizes = self._stage()
         num_clients, n = self.num_clients, self.samples_per_client
         k_round, chunk = clients_per_round, cohort_chunk
 
@@ -207,10 +251,14 @@ class FederatedDataset:
             keys = jax.lax.dynamic_slice(aug_keys, (c * chunk * n, 0),
                                          (chunk * n, 2))
             batch = self._two_views_keyed(keys, gathered, chunk, n)
-            return batch, jnp.full((chunk,), n, jnp.int32)
+            return batch, csizes[sel_c]
 
         def cohort_sizes(k_sel):
-            return jnp.full((k_round,), n, jnp.int32)
+            # recomputes the cohort selection (same key -> same choice as
+            # prepare), so variable-size clients report true sizes here too
+            sel = jax.random.choice(k_sel, num_clients, (k_round,),
+                                    replace=False)
+            return csizes[sel]
 
         return StreamingSampler(k_round, chunk, prepare, sample_chunk,
                                 cohort_sizes)

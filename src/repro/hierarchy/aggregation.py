@@ -185,6 +185,37 @@ class HierarchicalChannel(Channel):
         return HierarchicalContext(key, mask, weights, num, cctx, ectx,
                                    edge_ids)
 
+    def with_edge_ids(self, ctx: HierarchicalContext,
+                      edge_ids) -> HierarchicalContext:
+        """Re-route the round through a SEMANTIC edge assignment (e.g.
+        the clustered engine's in-scan cluster ids, repro.cluster) instead
+        of the contiguous topological one: the edge hop re-runs
+        ``begin_round`` on the new per-edge mass with the same edge key,
+        and the effective mask/weights are recomposed exactly as
+        ``begin_round`` composes them. ``edge_ids`` may be traced (it is
+        computed inside the scan), so no K % E divisibility is assumed —
+        an edge may legitimately be empty this round."""
+        _, k_edge = jax.random.split(ctx.key)
+        cctx = ctx.client_ctx
+        # the client hop's masked weights stand in for sizes (proportional
+        # — the edge hop only normalizes its per-edge mass)
+        mass = kernels_ref.segment_sum_ref(
+            (cctx.weights * cctx.mask)[:, None], edge_ids,
+            self.num_edges)[:, 0]
+        ectx = self.edge_channel.begin_round(k_edge, mass)
+        if self.edge_channel.full_participation:
+            mask, weights, num = cctx.mask, cctx.weights, \
+                cctx.num_participants
+        else:
+            keep = ectx.mask[edge_ids]                       # (K,)
+            mask = cctx.mask * keep
+            w_raw = cctx.weights * keep
+            weights = w_raw / jnp.maximum(jnp.sum(w_raw), 1e-12)
+            num = jnp.sum(mask)
+        return ctx._replace(mask=mask, weights=weights,
+                            num_participants=num, edge_ctx=ectx,
+                            edge_ids=jnp.asarray(edge_ids, jnp.int32))
+
     # ------------------------------------------------------------- wire --
     def _client_view(self, ctx) -> ChannelContext:
         """The client hop's view of a context: the composite's sub-context

@@ -36,6 +36,7 @@ from repro.configs.base import (DualEncoderConfig, TrainConfig, get_config,
 from repro.core import buffer as buffer_lib
 from repro.core import eval as eval_lib, fed_sim, round_engine
 from repro.data import latency as latency_lib
+from repro.data import partition as partition_lib
 from repro.data import pipeline, synthetic
 from repro.launch import steps as steps_lib
 from repro.models import dual_encoder
@@ -59,9 +60,21 @@ def build_dataset(cfg, args):
         data = {"tokens": toks}
         vocab = cfg.vocab_size
     num_clients = max(args.dataset_size // args.samples_per_client, 4)
+    if args.partition is not None:
+        spec = partition_lib.PartitionSpec(
+            args.partition,
+            severity=1.0 if args.severity is None else args.severity)
+    elif args.alpha is not None:
+        # deprecated spelling; the PartitionSpec alias is bit-identical
+        print("--alpha is deprecated; use --partition dirichlet "
+              "--severity (see docs/architecture.md §15)", flush=True)
+        spec = partition_lib.PartitionSpec("dirichlet", alpha=args.alpha)
+    else:
+        # legacy default: the paper's fully non-IID partition (alpha=0)
+        spec = partition_lib.PartitionSpec("dirichlet", alpha=0.0)
     return pipeline.FederatedDataset.build(
         data, labels, num_clients=num_clients,
-        samples_per_client=args.samples_per_client, alpha=args.alpha,
+        samples_per_client=args.samples_per_client, partition=spec,
         seed=args.seed, vocab=vocab), labels
 
 
@@ -76,6 +89,71 @@ def _forbid_ignored_flags(ap, args, attrs, why: str) -> None:
 
 
 def validate_flags(ap, args) -> None:
+    if args.partition is not None and args.alpha is not None:
+        raise SystemExit(
+            "--alpha is the deprecated spelling of --partition dirichlet; "
+            "pass one, not both (--alpha X == --partition dirichlet with "
+            "the raw concentration X)")
+    if args.partition is None:
+        _forbid_ignored_flags(
+            ap, args, ["severity"],
+            "--severity maps onto --partition's strategy parameter; "
+            "without --partition the legacy dirichlet(alpha) cut is used")
+    elif args.severity is not None and not 0.0 <= args.severity <= 1.0:
+        raise SystemExit(f"--severity {args.severity} must be in [0, 1]")
+    if args.partition == "dirichlet_quantity" and args.mode == "fused":
+        raise SystemExit(
+            "--partition dirichlet_quantity yields variable-size clients "
+            "(padded rows masked by per-client sizes); the fused pod step "
+            "flattens the cohort without a mask — use --mode engine or "
+            "protocol")
+    if args.clusters:
+        if args.mode != "engine":
+            raise SystemExit(
+                f"--clusters runs the cluster-aware round inside the scan "
+                f"engine; --mode {args.mode} has no clustered body — use "
+                f"--mode engine")
+        if args.async_k:
+            raise SystemExit(
+                "--clusters with --async-k: the staleness buffer folds "
+                "contributions into ONE server aggregate as they arrive; "
+                "per-cluster aggregation needs the materialized "
+                "synchronous cohort — drop one")
+        if args.cohort_chunk:
+            raise SystemExit(
+                "--clusters with --cohort-chunk: cluster assignment reads "
+                "the whole cohort's stats at once; the streamed cohort "
+                "never materializes them — drop one")
+        if args.scaffold:
+            raise SystemExit(
+                "--clusters with --scaffold: SCAFFOLD variates assume one "
+                "shared broadcast model, the clustered round broadcasts "
+                "per-cluster params — drop one")
+        if args.stats_kernel != "off":
+            raise SystemExit(
+                "--clusters needs PER-CLIENT phase-1 stats for the "
+                "k-means assignment; --stats-kernel aggregates the "
+                "flattened cohort and never materializes them — drop one")
+        if args.channel == "dp":
+            raise SystemExit(
+                "--clusters refuses --channel dp: per-cluster aggregates "
+                "change the DP sensitivity, the accountant's epsilon "
+                "would not cover the release — run DP on the global path")
+        if args.edges and args.edges != args.clusters:
+            raise SystemExit(
+                f"--clusters {args.clusters} with --edges {args.edges}: "
+                f"cluster ids route clients through their own edge, so "
+                f"the tree needs exactly one edge per cluster "
+                f"(--edges == --clusters)")
+        if args.clusters > args.clients_per_round:
+            raise SystemExit(
+                f"--clusters {args.clusters} exceeds --clients-per-round "
+                f"{args.clients_per_round}: every cluster needs a chance "
+                f"of cohort members")
+    else:
+        _forbid_ignored_flags(
+            ap, args, ["cluster_iters"],
+            "--cluster-iters tunes the in-scan k-means of --clusters")
     if args.objective != "dcco":
         if args.mode == "fused":
             raise SystemExit(
@@ -169,11 +247,12 @@ def validate_flags(ap, args) -> None:
             "(--async-k) engine's arrival model; the synchronous engine "
             "ignores them")
     if args.edges:
-        if args.clients_per_round % args.edges:
+        if args.clients_per_round % args.edges and not args.clusters:
             raise SystemExit(
                 f"--edges {args.edges} does not divide --clients-per-round "
                 f"{args.clients_per_round}: edges are contiguous "
-                f"equal-size client groups")
+                f"equal-size client groups (unless --clusters routes "
+                f"clients to edges by cluster id)")
         if args.channel == "dp":
             raise SystemExit(
                 "--edges refuses a DP client hop: noise calibration and "
@@ -238,7 +317,9 @@ def make_apply(cfg, de_cfg):
 
 
 def build_parser() -> argparse.ArgumentParser:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Federated dual-encoder pretraining driver "
+                    "(flags are grouped; see each group below)")
     ap.add_argument("--arch", default="resnet14-cifar")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
@@ -251,141 +332,204 @@ def build_parser() -> argparse.ArgumentParser:
                          "cross-correlation loss (5-stat payload, --lam); "
                          "'dvicreg' / 'dwmse' = VICReg / whitening-MSE "
                          "from 7 statistics (engine/protocol modes)")
-    ap.add_argument("--chunk-rounds", type=int, default=0,
-                    help="rounds per scan segment (engine mode; 0=eval-every)")
-    ap.add_argument("--stats-kernel", choices=["off", "pallas", "interpret"],
-                    default="off",
-                    help="route phase-1 aggregate stats through the fused "
-                         "Pallas kernel (engine mode; 'pallas' falls back "
-                         "to the interpreter on CPU)")
-    ap.add_argument("--compute-dtype", default="float32",
-                    choices=sorted(round_engine.COMPUTE_DTYPES),
-                    help="encoder forward/backward compute dtype (engine "
-                         "mode). 'bfloat16' halves activation traffic and "
-                         "doubles MXU throughput; the Eq.-3 statistics "
-                         "accumulation, parameters, and server state stay "
-                         "float32 regardless (see docs/performance.md)")
-    ap.add_argument("--channel", default="none",
-                    choices=["none", "dense", "int8", "quant", "dp",
-                             "dropout"],
-                    help="client->server communication channel "
-                         "(repro.comm): 'none' = ideal lossless wire; "
-                         "'int8' = 8-bit stochastic-rounding quantization; "
-                         "'quant' = --quant-bits quantization; 'dp' = "
-                         "clipped + Gaussian-noised aggregation; "
-                         "'dropout' = Bernoulli client dropout")
-    ap.add_argument("--quant-bits", type=int, default=8,
-                    help="wire width for --channel quant")
-    ap.add_argument("--quant-kernel", choices=["off", "pallas", "interpret"],
-                    default="off",
-                    help="route quantize->dequantize through the fused "
-                         "Pallas kernel (kernels/quantize.py)")
-    ap.add_argument("--dp-sigma", type=float, default=1.0,
-                    help="DP noise multiplier (--channel dp)")
-    ap.add_argument("--dp-clip", type=float, default=1.0,
-                    help="per-client L2 clip norm (--channel dp)")
-    ap.add_argument("--dp-delta", type=float, default=1e-5,
-                    help="target delta for the epsilon accountant")
-    ap.add_argument("--dropout-p", type=float, default=0.1,
-                    help="per-round client dropout probability "
-                         "(--channel dropout)")
-    ap.add_argument("--edges", type=int, default=0,
-                    help="fan the cohort in through this many edge "
-                         "aggregators (repro.hierarchy): clients -> edges "
-                         "-> server, --channel on the client->edge hop and "
-                         "--edge-channel on the edge->server hop, both "
-                         "hops' bytes accounted (0 = flat aggregation)")
-    ap.add_argument("--edge-channel", default="dense",
-                    choices=["dense", "int8", "dropout"],
-                    help="edge->server hop channel for --edges ('dropout' "
-                         "models a regional edge outage taking all its "
-                         "clients down at once, p = --dropout-p)")
-    ap.add_argument("--cohort-chunk", type=int, default=0,
-                    help="stream the cohort through each round in chunks "
-                         "of this many clients (engine mode; peak memory "
-                         "O(chunk) instead of O(cohort), unlocking "
-                         "thousands of clients/round; 0 = materialized)")
-    ap.add_argument("--async-k", type=int, default=0,
-                    help="semi-synchronous FedBuff-style engine "
-                         "(repro.core.buffer): apply the server update "
-                         "once this many client contributions have "
-                         "ARRIVED — contributions are staleness-weighted "
-                         "and buffered as they land, so throughput is "
-                         "bounded by the server fold rate, not the "
-                         "slowest client (0 = synchronous rounds)")
-    ap.add_argument("--staleness", default="unit",
-                    choices=list(buffer_lib.STALENESS_FNS),
-                    help="staleness down-weight s(tau) of a contribution "
-                         "arriving tau ticks after dispatch: 'unit' = no "
-                         "down-weighting, 'poly' = (1+tau)^-1/2 (the "
-                         "FedBuff choice), 'inv' = 1/(1+tau)")
-    ap.add_argument("--latency-tail", type=float, default=0.0,
-                    help="heavy-tail straggler severity (Pareto exponent "
-                         "of the persistent per-client arrival-delay "
-                         "distribution, repro.data.latency); 0 = every "
-                         "contribution arrives the tick it was dispatched")
-    ap.add_argument("--retrieval-eval", action="store_true",
-                    help="periodic in-training retrieval eval "
-                         "(repro.retrieval): encode a held-out corpus + "
-                         "query split with the current params each "
-                         "--retrieval-every rounds (inside the scan, via "
-                         "the fused MIPS top-k search) and report "
-                         "recall@{1,5,10} / MRR alongside the probe "
-                         "(engine mode)")
-    ap.add_argument("--retrieval-every", type=int, default=5,
-                    help="rounds between in-scan retrieval evals "
-                         "(--retrieval-eval); skipped rounds emit NaN")
-    ap.add_argument("--retrieval-corpus", type=int, default=256,
-                    help="held-out items indexed as the retrieval corpus")
-    ap.add_argument("--retrieval-queries", type=int, default=64,
-                    help="held-out query items scored against the corpus")
-    ap.add_argument("--retrieval-dtype", default="float32",
-                    choices=["float32", "bfloat16"],
-                    help="storage dtype of the in-eval corpus embeddings "
-                         "(bfloat16 halves index residency; scores still "
-                         "accumulate in f32)")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients-per-round", type=int, default=16)
-    ap.add_argument("--samples-per-client", type=int, default=2)
-    ap.add_argument("--alpha", type=float, default=0.0, help="Dirichlet; 0=non-IID")
-    ap.add_argument("--seq-len", type=int, default=64)
-    ap.add_argument("--dataset-size", type=int, default=600)
-    ap.add_argument("--num-classes", type=int, default=5)
-    ap.add_argument("--server-optimizer", default="adam",
-                    choices=["sgd", "adam", "lars"],
-                    help="base repro.optim optimizer consumed by the "
-                         "fedavg_sgd server strategy (ignored — and "
-                         "rejected if set — for adaptive --server-opt)")
-    ap.add_argument("--server-opt", default="fedavg_sgd",
-                    choices=list(server_update_lib.SERVER_UPDATES),
-                    help="server update strategy (repro.server): "
-                         "'fedavg_sgd' = the FedOpt delegate to "
-                         "--server-optimizer (pre-existing behavior); "
-                         "'fedavgm' = server momentum; 'fedadagrad' / "
-                         "'fedadam' / 'fedyogi' = Reddi-style adaptive "
-                         "server optimizers with --server-tau adaptivity")
-    ap.add_argument("--server-tau", type=float, default=1e-3,
-                    help="adaptivity epsilon tau of the adaptive server "
-                         "optimizers")
-    ap.add_argument("--fedprox-mu", type=float, default=0.0,
-                    help="FedProx proximal coefficient mu on the client "
-                         "local loss (0 = off; only bites at "
-                         "--local-steps > 1)")
-    ap.add_argument("--scaffold", action="store_true",
-                    help="SCAFFOLD control variates (per-cohort-slot) for "
-                         "client-drift correction; the variate uplink is "
-                         "routed through --channel")
-    ap.add_argument("--local-steps", type=int, default=1,
-                    help="client local GD steps per round")
-    ap.add_argument("--server-lr", type=float, default=2e-3)
-    ap.add_argument("--client-lr", type=float, default=1.0)
-    ap.add_argument("--lam", type=float, default=5.0)
-    ap.add_argument("--micro", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--resume", default=None)
     ap.add_argument("--seed", type=int, default=0)
+
+    g = ap.add_argument_group(
+        "data & partition",
+        "synthetic dataset shape + how it is cut into client shards "
+        "(repro.data.partition — strategies are registered data; "
+        "severity in [0,1] is the one cross-strategy heterogeneity axis)")
+    g.add_argument("--partition", default=None,
+                   choices=list(partition_lib.PARTITIONS),
+                   help="client partition strategy: 'iid' (shuffled "
+                        "control), 'uniform' (class-stratified, most "
+                        "homogeneous), 'label' (pathological shards: "
+                        "round(C - severity*(C-1)) classes/client), "
+                        "'dirichlet' (label skew, alpha = "
+                        "10**(3-6*severity)), 'dirichlet_quantity' "
+                        "(client SIZES ~ Dir(beta), labels IID). "
+                        "Default: the legacy fully non-IID dirichlet "
+                        "(alpha=0) partition")
+    g.add_argument("--severity", type=float, default=None,
+                   help="heterogeneity severity in [0,1] for --partition "
+                        "(0 = homogeneous, 1 = maximally skewed; default "
+                        "1.0). Each strategy maps it onto its own "
+                        "parameter — see docs/architecture.md §15")
+    g.add_argument("--alpha", type=float, default=None,
+                   help="DEPRECATED: raw Dirichlet concentration (old "
+                        "spelling; 0=non-IID, >=1e6=IID). Use "
+                        "--partition dirichlet --severity instead; "
+                        "--alpha keeps existing configs bit-identical")
+    g.add_argument("--samples-per-client", type=int, default=2)
+    g.add_argument("--seq-len", type=int, default=64)
+    g.add_argument("--dataset-size", type=int, default=600)
+    g.add_argument("--num-classes", type=int, default=5)
+
+    g = ap.add_argument_group(
+        "clustered aggregation",
+        "cluster-aware server aggregation for heterogeneous populations "
+        "(repro.cluster): cosine k-means on the phase-1 stats assigns "
+        "cohort clients to clusters inside the round scan; each cluster "
+        "keeps its own correlation target and server-update slot")
+    g.add_argument("--clusters", type=int, default=0,
+                   help="number of server-side client clusters (engine "
+                        "mode; 0/1 = the global single-model path — "
+                        "--clusters 1 is bit-identical to 0). With "
+                        "--edges, each cluster routes through its own "
+                        "edge (requires --edges == --clusters)")
+    g.add_argument("--cluster-iters", type=int, default=2,
+                   help="Lloyd iterations per round of the in-scan "
+                        "k-means (warm-started from the previous round's "
+                        "centroids, so a small count suffices)")
+
+    g = ap.add_argument_group(
+        "engine", "scan-compiled round engine knobs (--mode engine)")
+    g.add_argument("--chunk-rounds", type=int, default=0,
+                   help="rounds per scan segment (engine mode; 0=eval-every)")
+    g.add_argument("--stats-kernel", choices=["off", "pallas", "interpret"],
+                   default="off",
+                   help="route phase-1 aggregate stats through the fused "
+                        "Pallas kernel (engine mode; 'pallas' falls back "
+                        "to the interpreter on CPU)")
+    g.add_argument("--compute-dtype", default="float32",
+                   choices=sorted(round_engine.COMPUTE_DTYPES),
+                   help="encoder forward/backward compute dtype (engine "
+                        "mode). 'bfloat16' halves activation traffic and "
+                        "doubles MXU throughput; the Eq.-3 statistics "
+                        "accumulation, parameters, and server state stay "
+                        "float32 regardless (see docs/performance.md)")
+    g.add_argument("--cohort-chunk", type=int, default=0,
+                   help="stream the cohort through each round in chunks "
+                        "of this many clients (engine mode; peak memory "
+                        "O(chunk) instead of O(cohort), unlocking "
+                        "thousands of clients/round; 0 = materialized)")
+
+    g = ap.add_argument_group(
+        "communication", "client->server wire models (repro.comm) and "
+        "the two-level aggregation tree (repro.hierarchy)")
+    g.add_argument("--channel", default="none",
+                   choices=["none", "dense", "int8", "quant", "dp",
+                            "dropout"],
+                   help="client->server communication channel "
+                        "(repro.comm): 'none' = ideal lossless wire; "
+                        "'int8' = 8-bit stochastic-rounding quantization; "
+                        "'quant' = --quant-bits quantization; 'dp' = "
+                        "clipped + Gaussian-noised aggregation; "
+                        "'dropout' = Bernoulli client dropout")
+    g.add_argument("--quant-bits", type=int, default=8,
+                   help="wire width for --channel quant")
+    g.add_argument("--quant-kernel", choices=["off", "pallas", "interpret"],
+                   default="off",
+                   help="route quantize->dequantize through the fused "
+                        "Pallas kernel (kernels/quantize.py)")
+    g.add_argument("--dp-sigma", type=float, default=1.0,
+                   help="DP noise multiplier (--channel dp)")
+    g.add_argument("--dp-clip", type=float, default=1.0,
+                   help="per-client L2 clip norm (--channel dp)")
+    g.add_argument("--dp-delta", type=float, default=1e-5,
+                   help="target delta for the epsilon accountant")
+    g.add_argument("--dropout-p", type=float, default=0.1,
+                   help="per-round client dropout probability "
+                        "(--channel dropout)")
+    g.add_argument("--edges", type=int, default=0,
+                   help="fan the cohort in through this many edge "
+                        "aggregators (repro.hierarchy): clients -> edges "
+                        "-> server, --channel on the client->edge hop and "
+                        "--edge-channel on the edge->server hop, both "
+                        "hops' bytes accounted (0 = flat aggregation)")
+    g.add_argument("--edge-channel", default="dense",
+                   choices=["dense", "int8", "dropout"],
+                   help="edge->server hop channel for --edges ('dropout' "
+                        "models a regional edge outage taking all its "
+                        "clients down at once, p = --dropout-p)")
+
+    g = ap.add_argument_group(
+        "asynchrony", "semi-synchronous FedBuff-style scheduling "
+        "(repro.core.buffer) and the straggler arrival model")
+    g.add_argument("--async-k", type=int, default=0,
+                   help="semi-synchronous FedBuff-style engine "
+                        "(repro.core.buffer): apply the server update "
+                        "once this many client contributions have "
+                        "ARRIVED — contributions are staleness-weighted "
+                        "and buffered as they land, so throughput is "
+                        "bounded by the server fold rate, not the "
+                        "slowest client (0 = synchronous rounds)")
+    g.add_argument("--staleness", default="unit",
+                   choices=list(buffer_lib.STALENESS_FNS),
+                   help="staleness down-weight s(tau) of a contribution "
+                        "arriving tau ticks after dispatch: 'unit' = no "
+                        "down-weighting, 'poly' = (1+tau)^-1/2 (the "
+                        "FedBuff choice), 'inv' = 1/(1+tau)")
+    g.add_argument("--latency-tail", type=float, default=0.0,
+                   help="heavy-tail straggler severity (Pareto exponent "
+                        "of the persistent per-client arrival-delay "
+                        "distribution, repro.data.latency); 0 = every "
+                        "contribution arrives the tick it was dispatched")
+
+    g = ap.add_argument_group(
+        "retrieval eval", "periodic in-training retrieval eval "
+        "(repro.retrieval, engine mode)")
+    g.add_argument("--retrieval-eval", action="store_true",
+                   help="periodic in-training retrieval eval "
+                        "(repro.retrieval): encode a held-out corpus + "
+                        "query split with the current params each "
+                        "--retrieval-every rounds (inside the scan, via "
+                        "the fused MIPS top-k search) and report "
+                        "recall@{1,5,10} / MRR alongside the probe "
+                        "(engine mode)")
+    g.add_argument("--retrieval-every", type=int, default=5,
+                   help="rounds between in-scan retrieval evals "
+                        "(--retrieval-eval); skipped rounds emit NaN")
+    g.add_argument("--retrieval-corpus", type=int, default=256,
+                   help="held-out items indexed as the retrieval corpus")
+    g.add_argument("--retrieval-queries", type=int, default=64,
+                   help="held-out query items scored against the corpus")
+    g.add_argument("--retrieval-dtype", default="float32",
+                   choices=["float32", "bfloat16"],
+                   help="storage dtype of the in-eval corpus embeddings "
+                        "(bfloat16 halves index residency; scores still "
+                        "accumulate in f32)")
+
+    g = ap.add_argument_group(
+        "server & client optimization",
+        "server update strategies (repro.server) and client local "
+        "training hyperparameters")
+    g.add_argument("--server-optimizer", default="adam",
+                   choices=["sgd", "adam", "lars"],
+                   help="base repro.optim optimizer consumed by the "
+                        "fedavg_sgd server strategy (ignored — and "
+                        "rejected if set — for adaptive --server-opt)")
+    g.add_argument("--server-opt", default="fedavg_sgd",
+                   choices=list(server_update_lib.SERVER_UPDATES),
+                   help="server update strategy (repro.server): "
+                        "'fedavg_sgd' = the FedOpt delegate to "
+                        "--server-optimizer (pre-existing behavior); "
+                        "'fedavgm' = server momentum; 'fedadagrad' / "
+                        "'fedadam' / 'fedyogi' = Reddi-style adaptive "
+                        "server optimizers with --server-tau adaptivity")
+    g.add_argument("--server-tau", type=float, default=1e-3,
+                   help="adaptivity epsilon tau of the adaptive server "
+                        "optimizers")
+    g.add_argument("--fedprox-mu", type=float, default=0.0,
+                   help="FedProx proximal coefficient mu on the client "
+                        "local loss (0 = off; only bites at "
+                        "--local-steps > 1)")
+    g.add_argument("--scaffold", action="store_true",
+                   help="SCAFFOLD control variates (per-cohort-slot) for "
+                        "client-drift correction; the variate uplink is "
+                        "routed through --channel")
+    g.add_argument("--local-steps", type=int, default=1,
+                   help="client local GD steps per round")
+    g.add_argument("--server-lr", type=float, default=2e-3)
+    g.add_argument("--client-lr", type=float, default=1.0)
+    g.add_argument("--lam", type=float, default=5.0)
+    g.add_argument("--micro", type=int, default=1)
     return ap
 
 
@@ -510,7 +654,9 @@ def main():
             scaffold=args.scaffold, async_k=args.async_k,
             staleness_fn=args.staleness, latency=latency,
             retrieval_eval=retrieval_eval,
-            retrieval_every=args.retrieval_every)
+            retrieval_every=args.retrieval_every,
+            num_clusters=args.clusters,
+            cluster_iters=args.cluster_iters)
         if args.cohort_chunk:
             sampler = ds.make_streaming_sampler(args.clients_per_round,
                                                 args.cohort_chunk)

@@ -1,0 +1,262 @@
+"""Cluster-aware aggregation (repro.cluster): in-scan cosine k-means on
+the phase-1 stats, per-cluster correlation targets + server-update slots,
+semantic hierarchy routing — and the collapse law: ``num_clusters=1`` is
+bit-identical (``== 0.0``) to the global path for every registered
+objective."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cluster as cluster_lib
+from repro.cluster import round as cluster_round
+from repro.comm.channel import QuantizedChannel
+from repro.core import round_engine
+from repro.hierarchy import HierarchicalChannel
+from repro.objectives import get_objective
+from repro.optim import optimizers as opt_lib
+
+N_CLIENTS, N_PER, DIM_IN, DIM_OUT = 20, 3, 10, 6
+
+
+def _toy():
+    params = {"w1": jax.random.normal(jax.random.PRNGKey(0),
+                                      (DIM_IN, 16)) * 0.3,
+              "w2": jax.random.normal(jax.random.PRNGKey(7),
+                                      (16, DIM_OUT)) * 0.3}
+
+    def apply(p, batch):
+        def enc(x):
+            return jnp.tanh(x @ p["w1"]) @ p["w2"]
+        return enc(batch["v1"]), enc(batch["v2"])
+
+    pool = {"v1": jax.random.normal(jax.random.PRNGKey(1),
+                                    (N_CLIENTS, N_PER, DIM_IN)),
+            "v2": jax.random.normal(jax.random.PRNGKey(2),
+                                    (N_CLIENTS, N_PER, DIM_IN))}
+
+    def sampler(k_sel, k_aug):
+        sel = jax.random.choice(k_sel, N_CLIENTS, (6,), replace=False)
+        return (jax.tree.map(lambda x: x[sel], pool),
+                jnp.full((6,), N_PER, jnp.int32))
+
+    return params, apply, sampler
+
+
+def _run(params, apply, sampler, cfg, rounds=3, lr=0.1):
+    opt = opt_lib.sgd(lr)
+    eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+    p, o, m = eng.run(params, opt.init(params), jax.random.PRNGKey(42),
+                      rounds)
+    return p, m, eng
+
+
+class TestKMeans:
+    def _rows(self):
+        # two well-separated direction bundles on the sphere
+        k = jax.random.PRNGKey(3)
+        a = jnp.array([1.0, 0.0, 0.0, 0.0])
+        b = jnp.array([0.0, 0.0, 0.0, 1.0])
+        rows = jnp.concatenate([
+            a[None] + 0.05 * jax.random.normal(k, (8, 4)),
+            b[None] + 0.05 * jax.random.normal(jax.random.PRNGKey(4),
+                                               (8, 4))])
+        return rows
+
+    def test_two_bundles_separate(self):
+        ids, cents = cluster_lib.cosine_kmeans(self._rows(), 2, iters=4)
+        ids = np.asarray(ids)
+        assert len(np.unique(ids[:8])) == 1
+        assert len(np.unique(ids[8:])) == 1
+        assert ids[0] != ids[8]
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(cents), axis=1), 1.0, atol=1e-5)
+
+    def test_deterministic(self):
+        r = self._rows()
+        ids1, c1 = cluster_lib.cosine_kmeans(r, 3, iters=2)
+        ids2, c2 = cluster_lib.cosine_kmeans(r, 3, iters=2)
+        np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids2))
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+    def test_warm_start_respected(self):
+        """Centroids already at the bundle directions are a Lloyd fixed
+        point: warm-starting from them keeps the assignment."""
+        r = self._rows()
+        cents = jnp.stack([jnp.array([1.0, 0.0, 0.0, 0.0]),
+                           jnp.array([0.0, 0.0, 0.0, 1.0])])
+        ids, _ = cluster_lib.cosine_kmeans(r, 2, iters=2, centroids=cents)
+        np.testing.assert_array_equal(
+            np.asarray(ids), np.asarray(cluster_lib.assign_clusters(r, cents)))
+
+    def test_empty_cluster_keeps_centroid(self):
+        rows = jnp.tile(jnp.array([[1.0, 0.0]]), (5, 1))
+        cents = jnp.array([[1.0, 0.0], [0.0, 1.0]])
+        _, out = cluster_lib.cosine_kmeans(rows, 2, iters=2, centroids=cents)
+        np.testing.assert_allclose(np.asarray(out[1]), [0.0, 1.0], atol=1e-6)
+
+    def test_flatten_matches_stat_spec_dim(self):
+        obj = get_objective("dcco")
+        zf = jax.random.normal(jax.random.PRNGKey(0), (4, 5, DIM_OUT))
+        zg = jax.random.normal(jax.random.PRNGKey(1), (4, 5, DIM_OUT))
+        m = jnp.ones((4, 5))
+        st_k = jax.vmap(obj.stats_masked)(zf, zg, m)
+        rows = cluster_lib.flatten_stats(st_k)
+        assert rows.shape == (4, cluster_lib.stats_dim(
+            obj.stat_spec(DIM_OUT)))
+        assert rows.dtype == jnp.float32
+
+
+class TestFoldToClusters:
+    def test_matches_oracle_loop(self):
+        k = jax.random.PRNGKey(9)
+        tree = {"a": jax.random.normal(k, (7, 3)),
+                "b": jax.random.normal(jax.random.PRNGKey(10), (7, 2, 2))}
+        w = jnp.abs(jax.random.normal(jax.random.PRNGKey(11), (7,))) + 0.1
+        ids = jnp.array([0, 1, 0, 2, 1, 0, 2], jnp.int32)
+        avg, mass = cluster_lib.fold_to_clusters(tree, w, ids, 3)
+        for c in range(3):
+            sel = np.asarray(ids) == c
+            wc = np.asarray(w)[sel]
+            assert mass[c] == pytest.approx(wc.sum(), rel=1e-5)
+            for key in tree:
+                want = np.einsum("k,k...->...", wc,
+                                 np.asarray(tree[key])[sel]) / wc.sum()
+                np.testing.assert_allclose(np.asarray(avg[key][c]), want,
+                                           rtol=1e-5)
+
+    def test_empty_cluster_zero_mass(self):
+        tree = {"a": jnp.ones((3, 2))}
+        w = jnp.ones((3,))
+        ids = jnp.zeros((3,), jnp.int32)
+        avg, mass = cluster_lib.fold_to_clusters(tree, w, ids, 2)
+        assert float(mass[1]) == 0.0
+        np.testing.assert_array_equal(np.asarray(avg["a"][1]), 0.0)
+
+
+class TestClusterCollapse:
+    @pytest.mark.parametrize("objective", ["dcco", "dvicreg", "dwmse"])
+    def test_single_cluster_bit_identical(self, objective):
+        """num_clusters=1 routes to the global round body — the collapse
+        must be exact (== 0.0), not approximate."""
+        params, apply, sampler = _toy()
+        base = round_engine.EngineConfig(objective=objective,
+                                         chunk_rounds=3, donate=False,
+                                         client_lr=0.2)
+        p0, m0, _ = _run(params, apply, sampler, base)
+        p1, m1, _ = _run(params, apply, sampler,
+                         base._replace(num_clusters=1))
+        for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+            assert float(jnp.max(jnp.abs(a - b))) == 0.0
+        assert float(jnp.max(jnp.abs(m0.loss - m1.loss))) == 0.0
+
+
+class TestClusteredEngine:
+    def test_clustered_run_finite_and_state_shapes(self):
+        params, apply, sampler = _toy()
+        cfg = round_engine.EngineConfig(objective="dcco", chunk_rounds=3,
+                                        donate=False, client_lr=0.2,
+                                        num_clusters=2)
+        p, m, eng = _run(params, apply, sampler, cfg)
+        assert np.isfinite(np.asarray(m.loss)).all()
+        for leaf in jax.tree.leaves(p):
+            assert np.isfinite(np.asarray(leaf)).all()
+        cs = eng.cluster_state
+        dim = cluster_lib.stats_dim(
+            get_objective("dcco").stat_spec(DIM_OUT))
+        assert cs.centroids.shape == (2, dim)
+        assert bool(cs.initialized)
+        assert cs.params_c["w1"].shape == (2, DIM_IN, 16)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(cs.centroids), axis=1), 1.0,
+            atol=1e-4)
+
+    def test_semantic_hierarchy_routes_by_cluster(self):
+        """HierarchicalChannel with num_edges == num_clusters: clients
+        route through their cluster's edge; run stays finite and bills
+        both hops."""
+        params, apply, sampler = _toy()
+        ch = HierarchicalChannel(2, client_channel=QuantizedChannel(bits=8))
+        cfg = round_engine.EngineConfig(objective="dcco", chunk_rounds=3,
+                                        donate=False, client_lr=0.2,
+                                        num_clusters=2, channel=ch)
+        p, m, _ = _run(params, apply, sampler, cfg)
+        assert np.isfinite(np.asarray(m.loss)).all()
+        assert float(np.asarray(m.wire_bytes)[-1]) > 0.0
+
+    def test_readout_params_match_global_shape(self):
+        params, apply, sampler = _toy()
+        cfg = round_engine.EngineConfig(objective="dcco", chunk_rounds=3,
+                                        donate=False, client_lr=0.2,
+                                        num_clusters=3)
+        p, _, _ = _run(params, apply, sampler, cfg)
+        assert jax.tree.structure(p) == jax.tree.structure(params)
+        for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(params)):
+            assert a.shape == b.shape
+
+
+class TestClusterGuards:
+    def _cfg(self, **kw):
+        return round_engine.EngineConfig(objective="dcco", donate=False,
+                                         num_clusters=2, **kw)
+
+    def _build(self, cfg):
+        params, apply, sampler = _toy()
+        opt = opt_lib.sgd(0.1)
+        return round_engine.RoundEngine(apply, opt, sampler, cfg)
+
+    def test_negative_clusters_rejected(self):
+        with pytest.raises(ValueError, match="num_clusters"):
+            self._build(round_engine.EngineConfig(num_clusters=-1))
+
+    def test_async_not_composed(self):
+        with pytest.raises(ValueError, match="async_k"):
+            self._build(self._cfg(async_k=2))
+
+    def test_cohort_chunk_not_composed(self):
+        with pytest.raises(ValueError, match="cohort"):
+            self._build(self._cfg(cohort_chunk=2))
+
+    def test_stats_kernel_not_composed(self):
+        with pytest.raises(ValueError, match="stats_kernel"):
+            self._build(self._cfg(stats_kernel="interpret"))
+
+    def test_scaffold_not_composed(self):
+        with pytest.raises(ValueError, match="scaffold"):
+            self._build(self._cfg(scaffold=True))
+
+    def test_edges_must_equal_clusters(self):
+        ch = HierarchicalChannel(3, client_channel=QuantizedChannel(bits=8))
+        with pytest.raises(ValueError, match="num_edges"):
+            self._build(self._cfg(channel=ch))
+
+    def test_dp_channel_refused(self):
+        from repro.comm import get_channel
+        with pytest.raises(ValueError, match="epsilon"):
+            self._build(self._cfg(channel=get_channel("dp")))
+
+    def test_clusters_exceed_cohort_rejected(self):
+        params, apply, _ = _toy()
+
+        def sampler(k_sel, k_aug):
+            sel = jax.random.choice(k_sel, N_CLIENTS, (2,), replace=False)
+            pool = {"v1": jnp.zeros((N_CLIENTS, N_PER, DIM_IN)),
+                    "v2": jnp.zeros((N_CLIENTS, N_PER, DIM_IN))}
+            return (jax.tree.map(lambda x: x[sel], pool),
+                    jnp.full((2,), N_PER, jnp.int32))
+
+        opt = opt_lib.sgd(0.1)
+        cfg = round_engine.EngineConfig(objective="dcco", donate=False,
+                                        num_clusters=4, chunk_rounds=2)
+        eng = round_engine.RoundEngine(apply, opt, sampler, cfg)
+        with pytest.raises(ValueError, match="exceeds the cohort"):
+            eng.run(params, opt.init(params), jax.random.PRNGKey(0), 2)
+
+    def test_non_dcco_algorithm_refused(self):
+        obj = get_objective("dcco")
+        with pytest.raises(ValueError, match="algorithm"):
+            cluster_round.make_cluster_round_body(
+                lambda p, b: (None, None), None,
+                round_engine.EngineConfig(algorithm="fedavg",
+                                          num_clusters=2))
+        del obj

@@ -1,10 +1,17 @@
 """Data substrate: Dirichlet non-IID partitioning (Hsu et al. process),
-stateless two-view augmentations, federated pipeline layouts."""
+partition strategies as data (PartitionSpec), stateless two-view
+augmentations, federated pipeline layouts."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.data import augment, partition, pipeline, synthetic
+
+SET = settings(max_examples=20, deadline=None)
 
 
 class TestPartition:
@@ -31,6 +38,175 @@ class TestPartition:
         idx = partition.iid_partition(500, 25, 4, seed=3)
         assert idx.shape == (25, 4)
         assert len(np.unique(idx.reshape(-1))) == 100
+
+
+class TestPartitionSpec:
+    """Strategies-as-data API: registry, severity axis, conservation."""
+
+    def _labels(self, n=900, c=6):
+        _, labels = synthetic.synthetic_labeled_images(n, c, image_size=4)
+        return labels
+
+    def test_registry_lists_all_strategies(self):
+        assert set(partition.PARTITIONS) >= {
+            "iid", "uniform", "label", "dirichlet", "dirichlet_quantity"}
+        for name in partition.PARTITIONS:
+            assert callable(partition.get_partition(name))
+        with pytest.raises(ValueError, match="unknown partition"):
+            partition.get_partition("no_such_strategy")
+
+    def test_register_partition_extends_registry(self):
+        def halves(labels, num_clients, samples_per_client, severity,
+                   seed=0):
+            return partition.iid_partition(
+                len(np.asarray(labels)), num_clients, samples_per_client,
+                seed)
+        partition.register_partition("test_halves", halves)
+        try:
+            assert "test_halves" in partition.PARTITIONS
+            idx, sizes = partition.build_partition(
+                partition.PartitionSpec("test_halves", 0.5),
+                self._labels(), num_clients=10, samples_per_client=3)
+            assert idx.shape == (10, 3)
+            assert (sizes == 3).all()
+        finally:
+            partition._REGISTRY.pop("test_halves")
+            partition.PARTITIONS = tuple(partition._REGISTRY)
+
+    @SET
+    @given(strategy=st.sampled_from(
+        ["iid", "uniform", "label", "dirichlet", "dirichlet_quantity"]),
+        severity=st.floats(0.0, 1.0), seed=st.integers(0, 2**10))
+    def test_sample_conservation(self, strategy, severity, seed):
+        """Every strategy: each assigned (non-padding) slot holds a
+        distinct dataset index — no sample duplicated or invented."""
+        labels = self._labels()
+        idx, sizes = partition.build_partition(
+            partition.PartitionSpec(strategy, severity), labels,
+            num_clients=30, samples_per_client=6, seed=seed)
+        assert idx.shape == (30, 6) and sizes.shape == (30,)
+        assert (1 <= sizes).all() and (sizes <= 6).all()
+        valid = np.concatenate(
+            [idx[k, : sizes[k]] for k in range(30)])
+        assert len(np.unique(valid)) == len(valid)
+        assert valid.min() >= 0 and valid.max() < len(labels)
+
+    @SET
+    @given(seed=st.integers(0, 2**10))
+    def test_label_dominance_monotone_in_severity(self, seed):
+        """The label-skew metric rises with severity for the skewing
+        strategies and stays flat for the controls."""
+        labels = self._labels()
+        for strategy in ("label", "dirichlet"):
+            doms = []
+            for sev in (0.0, 0.5, 1.0):
+                idx, sizes = partition.build_partition(
+                    partition.PartitionSpec(strategy, sev), labels,
+                    num_clients=30, samples_per_client=6, seed=seed)
+                doms.append(partition.label_dominance(labels, idx, sizes))
+            assert doms[0] <= doms[1] <= doms[2], (strategy, doms)
+            assert doms[2] > doms[0] + 0.3, (strategy, doms)
+        # uniform: severity-flat, maximally homogeneous
+        u0, _ = partition.build_partition(
+            partition.PartitionSpec("uniform", 0.0), labels,
+            num_clients=30, samples_per_client=6, seed=seed)
+        u1, _ = partition.build_partition(
+            partition.PartitionSpec("uniform", 1.0), labels,
+            num_clients=30, samples_per_client=6, seed=seed)
+        np.testing.assert_array_equal(u0, u1)
+
+    def test_quantity_skew_severity_spreads_sizes(self):
+        labels = self._labels()
+        _, s0 = partition.build_partition(
+            partition.PartitionSpec("dirichlet_quantity", 0.0), labels,
+            num_clients=30, samples_per_client=6, seed=0)
+        _, s1 = partition.build_partition(
+            partition.PartitionSpec("dirichlet_quantity", 1.0), labels,
+            num_clients=30, samples_per_client=6, seed=0)
+        assert np.std(s1) > np.std(s0)
+
+    def test_infeasible_partition_raises_with_bound(self):
+        labels = self._labels(n=100)
+        with pytest.raises(ValueError, match="supports at most 16 clients"):
+            partition.dirichlet_partition(labels, 20, 6, alpha=1.0)
+        with pytest.raises(ValueError, match="infeasible"):
+            partition.build_partition(
+                partition.PartitionSpec("label", 1.0), labels,
+                num_clients=101, samples_per_client=1)
+
+    def test_severity_out_of_range_rejected(self):
+        with pytest.raises(ValueError, match="severity"):
+            partition.build_partition(
+                partition.PartitionSpec("label", 1.5), self._labels(),
+                num_clients=4, samples_per_client=2)
+
+    def test_alpha_override_dirichlet_only(self):
+        with pytest.raises(ValueError, match="'dirichlet' strategy only"):
+            partition.build_partition(
+                partition.PartitionSpec("label", alpha=3.0), self._labels(),
+                num_clients=4, samples_per_client=2)
+
+    def test_severity_alpha_anchors(self):
+        assert partition.severity_to_alpha(0.0) == pytest.approx(1000.0)
+        assert partition.severity_to_alpha(1.0) == pytest.approx(1e-3)
+        assert partition.severity_to_classes(0.0, 10) == 10
+        assert partition.severity_to_classes(1.0, 10) == 1
+
+    def test_deprecated_alpha_alias_bit_identical(self):
+        """build(alpha=...) == build(partition=PartitionSpec(...)) — the
+        historical client assignment survives the API redesign exactly."""
+        imgs, labels = synthetic.synthetic_labeled_images(300, 5,
+                                                          image_size=4)
+        for alpha in (0.0, 0.5, 1e7):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                old = pipeline.FederatedDataset.build(
+                    {"images": imgs}, labels, num_clients=20,
+                    samples_per_client=4, alpha=alpha, seed=3)
+            new = pipeline.FederatedDataset.build(
+                {"images": imgs}, labels, num_clients=20,
+                samples_per_client=4,
+                partition=partition.PartitionSpec("dirichlet", alpha=alpha),
+                seed=3)
+            np.testing.assert_array_equal(old.client_index,
+                                          new.client_index)
+            np.testing.assert_array_equal(old.client_sizes,
+                                          new.client_sizes)
+
+    def test_deprecated_alpha_warns_and_both_rejected(self):
+        imgs, labels = synthetic.synthetic_labeled_images(100, 4,
+                                                          image_size=4)
+        with pytest.warns(DeprecationWarning):
+            pipeline.FederatedDataset.build(
+                {"images": imgs}, labels, num_clients=10,
+                samples_per_client=2, alpha=0.0)
+        with pytest.raises(ValueError, match="not both"):
+            pipeline.FederatedDataset.build(
+                {"images": imgs}, labels, num_clients=10,
+                samples_per_client=2, alpha=0.0,
+                partition=partition.PartitionSpec("iid"))
+        with pytest.raises(TypeError):
+            pipeline.FederatedDataset.build(
+                {"images": imgs}, labels, num_clients=10,
+                samples_per_client=2)
+
+    def test_variable_sizes_ride_the_samplers(self, rng_key):
+        """dirichlet_quantity sizes flow through round_batch AND the
+        in-scan sampler (pad slots masked downstream by sizes)."""
+        imgs, labels = synthetic.synthetic_labeled_images(300, 5,
+                                                          image_size=4)
+        ds = pipeline.FederatedDataset.build(
+            {"images": imgs}, labels, num_clients=30, samples_per_client=4,
+            partition=partition.PartitionSpec("dirichlet_quantity", 0.9),
+            seed=0)
+        assert ds.client_sizes.min() >= 1
+        assert (ds.client_sizes <= 4).any()
+        _, sizes_host = ds.round_batch(rng_key, clients_per_round=8)
+        sampler = ds.make_round_sampler(8)
+        k_sel, k_aug = jax.random.split(rng_key)
+        _, sizes_scan = sampler(k_sel, k_aug)
+        assert sizes_host.shape == (8,) and sizes_scan.shape == (8,)
+        assert int(jnp.max(sizes_scan)) <= 4
 
 
 class TestAugment:
